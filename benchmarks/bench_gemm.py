@@ -1,0 +1,57 @@
+"""ApproxTrain-substrate throughput: approximate-GEMM modes vs the exact
+LUT oracle (the tool-paper [8] comparison).  CPU timings are indicative
+(interpret-mode kernels); the structural result is the op-count ratio:
+lowrank rank-R costs (R+1) int8 matmuls vs the oracle's O(mkn) gather."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.approx import gemm as G
+from repro.core import multipliers as mm, netlist as nl
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps * 1e6
+
+
+def main() -> list[str]:
+    rng = np.random.default_rng(0)
+    m, k, n = 256, 512, 256
+    a = jnp.asarray(rng.integers(-128, 128, (m, k)), jnp.int8)
+    b = jnp.asarray(rng.integers(-128, 128, (k, n)), jnp.int8)
+    mask = rng.random(len(nl.bw8().prunable_gates())) < 0.03
+    pruned = mm.pruned(mask, name="bench_pruned")
+    lines = []
+    cases = [
+        ("exact", G.from_multiplier(mm.exact_multiplier())),
+        ("trunc2x2", G.from_multiplier(mm.truncated(2, 2))),
+        ("lowrank_r2", G.from_multiplier(pruned, rank=2)),
+        ("lowrank_r4", G.from_multiplier(pruned, rank=4)),
+        ("lowrank_r8", G.from_multiplier(pruned, rank=8)),
+    ]
+    f_or = jax.jit(lambda x, y: ref.lut_matmul(x, y,
+                                               jnp.asarray(pruned.lut)))
+    us_oracle = _time(f_or, a, b)
+    lines.append(f"gemm_lut_oracle,{us_oracle:.1f},shape={m}x{k}x{n}")
+    for name, spec in cases:
+        f = jax.jit(lambda x, y, s=spec: G.approx_qgemm(x, y, s))
+        us = _time(f, a, b)
+        lines.append(
+            f"gemm_{name},{us:.1f},planes={spec.rank + 1};"
+            f"residual_nmed={spec.residual_nmed:.2e};"
+            f"speedup_vs_oracle={us_oracle / us:.1f}x")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

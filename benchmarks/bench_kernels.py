@@ -1,0 +1,50 @@
+"""Pallas kernel microbenchmarks (interpret mode on CPU: correctness-scale
+timings; the BlockSpec/VMEM structure is the TPU artifact)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.approx import gemm as G
+from repro.core import multipliers as mm
+from repro.kernels import ops
+
+
+def _time(fn, *args, reps=3):
+    jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps * 1e6
+
+
+def main() -> list[str]:
+    rng = np.random.default_rng(0)
+    lines = []
+
+    a = jnp.asarray(rng.integers(-128, 128, (256, 512)), jnp.int8)
+    b = jnp.asarray(rng.integers(-128, 128, (512, 256)), jnp.int8)
+    for name in ("exact", "trunc2x2"):
+        spec = G.spec_from_name(name)
+        us = _time(lambda x, y, s=spec: ops.approx_qgemm(x, y, s), a, b)
+        flops = 2 * 256 * 512 * 256 * (spec.rank + 1)
+        lines.append(f"kernel_qgemm_{name},{us:.1f},"
+                     f"gflops_equiv={flops / us / 1e3:.2f}")
+
+    q = jnp.asarray(rng.standard_normal((4, 512, 64)), jnp.float32)
+    us = _time(lambda x: ops.flash_attention(x, x, x, causal=True,
+                                             bq=128, bkv=128), q)
+    lines.append(f"kernel_flash_attention,{us:.1f},bh=4;s=512;d=64")
+
+    x = jnp.asarray(rng.standard_normal((512, 1024)), jnp.float32)
+    us = _time(lambda v: ops.quantize_rows(v), x)
+    lines.append(f"kernel_quantize_rows,{us:.1f},m=512;k=1024")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,58 @@
+"""Full paper reproduction for one workload: VGG16 across 7/14/28 nm with
+measured (not proxy) accuracy drops.
+
+Trains a small CNN on the synthetic classification task, measures real
+top-1 drop per Pareto multiplier, feeds the measured accuracy function into
+the GA, and prints the Fig.2/Fig.3-style comparison.
+
+  PYTHONPATH=src python examples/codesign_vgg16.py
+"""
+
+import functools
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))  # for the benchmarks package
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.bench_accuracy import accuracy, train_small_cnn
+from repro.approx import gemm as G
+from repro.core import codesign, ga, multipliers as mm, pareto
+
+
+def main() -> int:
+    print("training calibration CNN (synthetic shapes task)...")
+    params = train_small_cnn(steps=260)
+    base = accuracy(params, None)
+    print(f"exact top-1: {base:.3f}")
+
+    mults = pareto.default_front() + list(mm.static_library().values())
+
+    @functools.lru_cache(maxsize=None)
+    def measured_drop_by_name(name: str) -> float:
+        m = next(x for x in mults if x.name == name)
+        spec = G.from_multiplier(m)
+        return max(0.0, 100.0 * (base - accuracy(params, spec)))
+
+    def measured_drop(m) -> float:
+        return measured_drop_by_name(m.name)
+
+    for node in (7, 14, 28):
+        rep = codesign.run_codesign(
+            "vgg16", node, fps_min=30.0, max_accuracy_drop=2.0,
+            mults=mults, accuracy_fn=measured_drop,
+            ga_cfg=ga.GAConfig(pop_size=16, generations=8, seed=0))
+        drop = measured_drop(
+            mm.get_multiplier(rep.ga_cdp.config.multiplier)) \
+            if rep.ga_cdp.config.multiplier != "exact" else 0.0
+        print(f"\n--- {node} nm ---")
+        print(rep.summary())
+        print(f"  measured top-1 drop of chosen multiplier: {drop:.2f}%")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,33 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps,
+optionally under an approximate multiplier (approximate-aware training with
+straight-through gradients — the ApproxTrain regime at LM scale).
+
+  PYTHONPATH=src python examples/train_lm.py                # exact
+  PYTHONPATH=src python examples/train_lm.py trunc2x2       # approximate
+
+~100M params: tinyllama family at d_model=768, 12 layers, vocab 32000.
+Uses the full production stack: sharded train step (over whatever devices
+exist), AdamW, checkpointing, straggler watchdog, synthetic Markov data.
+"""
+
+import sys
+
+from repro.launch import train
+
+
+def main() -> int:
+    mult = sys.argv[1] if len(sys.argv) > 1 else ""
+    args = [
+        "--arch", "tinyllama-1.1b",
+        "--d-model", "768", "--n-layers", "12",
+        "--steps", "300", "--batch", "16", "--seq", "256",
+        "--lr", "1e-3", "--ckpt-dir", "/tmp/repro_train_lm",
+        "--ckpt-every", "100", "--log-every", "20",
+    ]
+    if mult:
+        args += ["--mult", mult]
+    return train.main(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

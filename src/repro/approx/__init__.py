@@ -1,0 +1,5 @@
+"""ApproxTrain-for-TPU: simulate approximate int8 multipliers inside JAX
+models at MXU speed (see DESIGN.md §3 for the low-rank reformulation)."""
+
+from repro.approx.gemm import MultSpec, approx_matmul, from_multiplier  # noqa: F401
+from repro.approx.quant import quantize, dequantize  # noqa: F401

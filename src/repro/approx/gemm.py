@@ -1,0 +1,213 @@
+"""Approximate-multiplier GEMM for TPU (the framework's core compute path).
+
+A `MultSpec` is the JAX-side artifact compiled from a gate-level
+`ApproxMultiplier` (core/multipliers.py).  Three execution modes, chosen at
+spec-build time from the multiplier's structure (DESIGN.md §3):
+
+  exact    m(a,b) == a*b          -> one int8 MXU matmul
+  trunc    m(a,b) == t(a)*t(b)    -> mask LSBs, one int8 MXU matmul
+           (pure precision scaling; bit-exact)
+  lowrank  m(a,b) == a*b - E(a,b) -> (R+1) int8 MXU matmuls:
+           E ~= sum_r s_r * fu_q[r][a] * fv_q[r][b]  (SVD of the error
+           surface, factors themselves int8-quantized so every matmul stays
+           on the MXU int8 path).  The residual NMED of the quantized
+           factorization is measured at build time and carried on the spec.
+
+The exact LUT path (`lut_matmul` in kernels/ref.py) is the oracle: tests
+assert `trunc` is bit-exact and `lowrank` is within the recorded residual.
+
+Gradients: straight-through (ApproxTrain's approach) — forward runs the
+approximate quantized GEMM, backward uses the float operands.  This is what
+makes *training under approximation* (and therefore accuracy-constrained
+co-design) work at scale.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.approx import quant
+
+MODES = ("exact", "trunc", "lowrank")
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("fu_q", "fv_q", "s_r"),
+    meta_fields=("name", "mode", "trunc_a", "trunc_b", "rank",
+                 "residual_nmed", "nmed"),
+)
+@dataclasses.dataclass(frozen=True)
+class MultSpec:
+    """JAX-friendly approximate-multiplier spec (pytree)."""
+    name: str
+    mode: str                 # "exact" | "trunc" | "lowrank"
+    trunc_a: int
+    trunc_b: int
+    rank: int
+    residual_nmed: float      # NMED of (E - quantized low-rank reconstruction)
+    nmed: float               # NMED of the multiplier itself
+    fu_q: jax.Array           # (R, 256) int8   (row r of U factor, by a&0xFF)
+    fv_q: jax.Array           # (R, 256) int8
+    s_r: jax.Array            # (R,) f32        (per-rank dequant scale)
+
+    @property
+    def is_exact(self) -> bool:
+        return self.mode == "exact"
+
+
+def exact_spec() -> MultSpec:
+    z = jnp.zeros((0, 256), dtype=jnp.int8)
+    return MultSpec("exact", "exact", 0, 0, 0, 0.0, 0.0, z, z,
+                    jnp.zeros((0,), jnp.float32))
+
+
+def from_multiplier(m: Any, rank: int | None = None,
+                    tol_nmed: float = 1e-4) -> MultSpec:
+    """Compile a core.multipliers.ApproxMultiplier into a MultSpec.
+
+    Imports core lazily: the JAX side only needs numpy artifacts.
+    """
+    from repro.core import lut as lutmod
+
+    if m.stats.wce == 0:
+        return dataclasses.replace(exact_spec(), name=m.name)
+
+    pure_trunc = (len(m.pruned_gates) == 0 and (m.trunc_a or m.trunc_b))
+    if pure_trunc:
+        z = jnp.zeros((0, 256), dtype=jnp.int8)
+        return MultSpec(m.name, "trunc", m.trunc_a, m.trunc_b, 0, 0.0,
+                        m.stats.nmed, z, z, jnp.zeros((0,), jnp.float32))
+
+    lr = (lutmod.lowrank_error(m.lut, rank) if rank is not None
+          else lutmod.choose_rank(m.lut, tol_nmed=tol_nmed, max_rank=8))
+    # int8-quantize each rank-1 factor pair; fold quant scales into s_r.
+    r = lr.rank
+    fu_q = np.zeros((r, 256), np.int8)
+    fv_q = np.zeros((r, 256), np.int8)
+    s_r = np.zeros((r,), np.float32)
+    for i in range(r):
+        su = max(np.abs(lr.fu[i]).max(), 1e-12) / 127.0
+        sv = max(np.abs(lr.fv[i]).max(), 1e-12) / 127.0
+        fu_q[i] = np.clip(np.round(lr.fu[i] / su), -128, 127).astype(np.int8)
+        fv_q[i] = np.clip(np.round(lr.fv[i] / sv), -128, 127).astype(np.int8)
+        s_r[i] = su * sv
+    # measured residual of the *quantized* reconstruction
+    e = lutmod.error_surface(m.lut).astype(np.float64)
+    rec = np.einsum("ru,rv,r->uv", fu_q.astype(np.float64),
+                    fv_q.astype(np.float64), s_r.astype(np.float64))
+    resid_nmed = float(np.abs(e - rec).mean() / lutmod.MAX_ABS_PRODUCT)
+    return MultSpec(m.name, "lowrank", m.trunc_a, m.trunc_b, r, resid_nmed,
+                    m.stats.nmed, jnp.asarray(fu_q), jnp.asarray(fv_q),
+                    jnp.asarray(s_r))
+
+
+# ---------------------------------------------------------------------------
+# int8 GEMM primitives (XLA path; the Pallas kernel in kernels/ is the
+# TPU-tiled version of exactly this computation)
+# ---------------------------------------------------------------------------
+
+def _trunc_mask(q: jax.Array, t: int) -> jax.Array:
+    if t <= 0:
+        return q
+    # two's-complement signed value of the uint8 mask 0xFF & ~((1<<t)-1)
+    signed = (((0xFF & ~((1 << t) - 1)) ^ 0x80) - 0x80)
+    return jnp.bitwise_and(q, jnp.int8(signed))
+
+
+def _table_map(tbl: jax.Array, q: jax.Array) -> jax.Array:
+    """tbl: (256,) int8; q: int8 array -> int8 array, indexed by q & 0xFF."""
+    idx = jnp.bitwise_and(q.astype(jnp.int32), 0xFF)
+    return jnp.take(tbl, idx, axis=0)
+
+
+def qgemm_int32(a_q: jax.Array, b_q: jax.Array) -> jax.Array:
+    """int8 x int8 -> int32 matmul (contraction over last/first axes)."""
+    return jax.lax.dot_general(
+        a_q, b_q, (((a_q.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+
+def approx_qgemm(a_q: jax.Array, b_q: jax.Array, spec: MultSpec
+                 ) -> jax.Array:
+    """Quantized approximate GEMM: int8 (m,k) x int8 (k,n) -> f32 (m,n),
+    implementing sum_k m(a[mk], b[kn]) for the spec'd multiplier."""
+    if spec.mode == "trunc":
+        a_q = _trunc_mask(a_q, spec.trunc_a)
+        b_q = _trunc_mask(b_q, spec.trunc_b)
+        return qgemm_int32(a_q, b_q).astype(jnp.float32)
+    acc = qgemm_int32(a_q, b_q).astype(jnp.float32)
+    for r in range(spec.rank):
+        ua = _table_map(spec.fu_q[r], a_q)
+        vb = _table_map(spec.fv_q[r], b_q)
+        acc = acc - spec.s_r[r] * qgemm_int32(ua, vb).astype(jnp.float32)
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Float-in / float-out approximate matmul with straight-through gradients
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def approx_matmul(x: jax.Array, w: jax.Array, spec: MultSpec,
+                  use_kernel: bool = False) -> jax.Array:
+    """x (..., k) @ w (k, n) through the approximate multiplier.
+
+    Activations quantize per-tensor, weights per-output-channel (standard
+    int8 accelerator setup).  `use_kernel=True` routes the O(mkn) work
+    through the Pallas TPU kernel (kernels/approx_qgemm.py).
+    """
+    return _approx_matmul_fwd(x, w, spec, use_kernel)[0]
+
+
+def _approx_matmul_fwd(x, w, spec: MultSpec, use_kernel: bool):
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    # Per-row (per-token) activation scales: more accurate than per-tensor
+    # AND shard-local — a per-tensor absmax over a model-sharded dim lowers
+    # to an all-reduce per GEMM (measured +3x collective bytes on the
+    # tinyllama train_4k approx cell; see EXPERIMENTS.md §Perf).
+    xq, sx = quant.quantize(x2, axis=0)       # (m, k) -> scales (m, 1)
+    wq, sw = quant.quantize(w, axis=1)        # (k, n) -> per-n scales (1, n)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        acc = kops.approx_qgemm(xq, wq, spec)
+    else:
+        acc = approx_qgemm(xq, wq, spec)
+    out = acc * (sx * sw)                     # (m, n) * scalar * (1, n)
+    return out.reshape(*lead, w.shape[1]).astype(x.dtype), (x, w)
+
+
+def _approx_matmul_bwd(spec: MultSpec, use_kernel: bool, res, g):
+    x, w = res
+    gf = g.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    dx = jnp.einsum("...n,kn->...k", gf, wf).astype(x.dtype)
+    dw = jnp.einsum("...k,...n->kn", xf, gf).astype(w.dtype)
+    return dx, dw
+
+
+approx_matmul.defvjp(_approx_matmul_fwd, _approx_matmul_bwd)
+
+
+def spec_from_name(name: str, rank: int | None = None) -> MultSpec:
+    """Resolve a multiplier by library name -> MultSpec.
+
+    A ':r<k>' suffix caps the error-correction rank (perf/accuracy knob,
+    e.g. "pareto:0.02:r2"); the residual NMED of the truncation is recorded
+    on the spec."""
+    if name in (None, "", "exact", "none"):
+        return exact_spec()
+    if ":r" in name:
+        base, rstr = name.rsplit(":r", 1)
+        return spec_from_name(base, rank=int(rstr))
+    from repro.core import multipliers as mm
+    return from_multiplier(mm.get_multiplier(name), rank=rank)

@@ -1,0 +1,84 @@
+"""Symmetric int8 post-training quantization (the paper's accelerators are
+int8 MAC arrays; all approximate-multiplier simulation runs on int8 tensors).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+
+
+def quantize(x: jax.Array, axis: int | tuple[int, ...] | None = None,
+             eps: float = 1e-8) -> tuple[jax.Array, jax.Array]:
+    """Symmetric quantization to int8.
+
+    axis=None  -> per-tensor scale (scalar)
+    axis=k     -> scale is reduced over all *other* axes (per-channel along k)
+    Returns (q int8, scale f32) with x ~= q * scale.
+    """
+    if axis is None:
+        absmax = jnp.max(jnp.abs(x))
+    else:
+        axes = (axis,) if isinstance(axis, int) else axis
+        reduce_over = tuple(i for i in range(x.ndim) if i not in
+                            tuple(a % x.ndim for a in axes))
+        absmax = jnp.max(jnp.abs(x), axis=reduce_over, keepdims=True)
+    scale = jnp.maximum(absmax, eps) / INT8_MAX
+    q = jnp.clip(jnp.round(x / scale), -INT8_MAX - 1, INT8_MAX)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def fake_quant(x: jax.Array, axis: int | None = None) -> jax.Array:
+    """Quantize-dequantize (for QAT-style error injection without approx)."""
+    q, s = quantize(x, axis)
+    return dequantize(q, s)
+
+
+# --- int8 weight storage for serving -----------------------------------------
+# The paper's accelerators hold int8 weights; serving the simulation the same
+# way halves weight HBM traffic (the dominant term of every decode cell —
+# see EXPERIMENTS.md §Perf).  A quantized weight is a {"q": int8, "s": f32}
+# dict leaf; approx/layers dequantizes at use (XLA fuses the convert into
+# the consuming dot, so only the int8 bytes cross HBM).
+
+# weights consumed outside the GEMM layers (lookups, slices, conv taps)
+_QSKIP = ("embed", "dec_pos", "conv_w")
+
+
+def quantize_param_tree(params, min_size: int = 1 << 16):
+    """Per-output-channel int8 quantization of every large >=2-D weight."""
+    def q(path, leaf):
+        name = ""
+        for part in reversed(path):
+            k = getattr(part, "key", None)
+            if k is not None:
+                name = str(k)
+                break
+        if name in _QSKIP:
+            return leaf
+        if not hasattr(leaf, "ndim") or leaf.ndim < 2 or \
+                leaf.size < min_size or not jnp.issubdtype(
+                    leaf.dtype, jnp.floating):
+            return leaf
+        if leaf.shape[-1] < 512 or leaf.shape[-2] < 512:
+            return leaf  # true GEMM matrices only (not stacked vectors)
+        # scales per (stack-dims x out-channel): reduce only over the
+        # contraction dim (-2), so layer-stacked weights stay scannable
+        keep = tuple(i for i in range(leaf.ndim) if i != leaf.ndim - 2)
+        qv, s = quantize(leaf, axis=keep)
+        return {"q": qv, "s": s.astype(jnp.float32)}
+    return jax.tree_util.tree_map_with_path(q, params)
+
+
+def is_qweight(w) -> bool:
+    return isinstance(w, dict) and set(w) == {"q", "s"}
+
+
+def dequantize_weight(w, dtype=jnp.bfloat16) -> jax.Array:
+    return (w["q"].astype(jnp.float32) * w["s"]).astype(dtype)

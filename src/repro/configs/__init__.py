@@ -1,0 +1,80 @@
+"""Architecture registry: one module per assigned architecture.
+
+`get_config(arch)` resolves ids like "tinyllama-1.1b" (dashes/dots map to
+underscores in module names).  `input_specs(cfg, shape)` builds
+ShapeDtypeStruct stand-ins for every model input of a cell — weak-type
+correct, shardable, zero allocation (the dry-run pattern).
+"""
+
+from __future__ import annotations
+
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec, SHAPES, reduced  # noqa: F401
+
+ARCH_IDS = [
+    "tinyllama-1.1b",
+    "qwen1.5-32b",
+    "starcoder2-7b",
+    "mistral-large-123b",
+    "mamba2-370m",
+    "llama-3.2-vision-11b",
+    "grok-1-314b",
+    "llama4-maverick-400b-a17b",
+    "recurrentgemma-9b",
+    "whisper-medium",
+]
+
+# the paper's own workloads (CNNs) live in core/workloads.py + models/cnn.py
+PAPER_WORKLOADS = ["vgg16", "vgg19", "resnet50", "resnet152"]
+
+
+def _module_name(arch: str) -> str:
+    return arch.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch: str, **overrides) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_module_name(arch)}")
+    cfg: ModelConfig = mod.CONFIG
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """Whether (arch x shape) is a runnable cell; else the documented skip."""
+    if shape.name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        return False, ("full attention at 512k context is quadratic-prefill/"
+                       "unbounded-KV; skipped per brief (sub-quadratic archs "
+                       "only)")
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for one cell's inputs."""
+    b, s = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct
+    if shape.kind in ("train", "prefill"):
+        specs = {"tokens": tok((b, s), jnp.int32)}
+        if shape.kind == "train":
+            specs["labels"] = tok((b, s), jnp.int32)
+    else:  # decode
+        specs = {"tokens": tok((b, 1), jnp.int32)}
+    if cfg.family == "encdec" and shape.kind != "decode":
+        specs["frames"] = tok((b, cfg.enc_seq, cfg.d_model),
+                              jnp.dtype(cfg.dtype))
+    if cfg.cross_every and shape.kind != "decode":
+        specs["img"] = tok((b, cfg.n_img_tokens, cfg.d_model),
+                           jnp.dtype(cfg.dtype))
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStructs of the decode cache for a cell (no allocation)."""
+    from repro.models import api
+    return jax.eval_shape(
+        lambda: api.init_cache(cfg, shape.global_batch, shape.seq_len))

@@ -1,0 +1,97 @@
+"""Embodied-carbon model (paper Eq. 1-2), ACT [Gupta+ ISCA'22] /
+ECO-CHIP [Sudarshan+ HPCA'24] style.
+
+    C_embodied = CFPA * A_die + CFPA_Si * A_wasted                      (1)
+    CFPA       = (CI_fab * EPA + C_gas + C_material) / Y                (2)
+
+with Murphy yield Y(A) = ((1 - e^{-A*D0}) / (A*D0))^2, 300 mm wafers and the
+standard dies-per-wafer edge-loss formula.  Constants are public-ballpark
+values (ACT's fab model); the paper's claims are *relative* (percent carbon
+reduction), which depend on area ratios, not on the absolute CFPA scale.
+
+CDP (Carbon-Delay-Product) = C_embodied * delay, delay = 1/FPS.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+# --- per-technology-node fab parameters -------------------------------------
+# EPA:   manufacturing energy per unit area [kWh / cm^2]
+# C_gas: direct greenhouse-gas emissions from processing [g CO2 / cm^2]
+# D0:    defect density [defects / cm^2]
+# freq:  nominal accelerator clock at that node [Hz]
+NODE_PARAMS: dict[int, dict[str, float]] = {
+    7:  {"EPA": 2.15, "C_gas": 280.0, "D0": 0.20, "freq": 1.4e9},
+    14: {"EPA": 1.20, "C_gas": 200.0, "D0": 0.10, "freq": 1.0e9},
+    28: {"EPA": 0.85, "C_gas": 150.0, "D0": 0.05, "freq": 0.7e9},
+}
+
+CI_FAB_G_PER_KWH = 620.0      # fab electricity carbon intensity [g CO2/kWh]
+C_MATERIAL_G_PER_CM2 = 500.0  # raw material procurement [g CO2 / cm^2]
+CFPA_SI_G_PER_CM2 = 130.0     # raw silicon wafer processing [g CO2 / cm^2]
+WAFER_DIAMETER_MM = 300.0
+
+
+def murphy_yield(area_mm2: float, node_nm: int) -> float:
+    """Murphy's yield model; area in mm^2, D0 in defects/cm^2."""
+    d0 = NODE_PARAMS[node_nm]["D0"]
+    ad = (area_mm2 / 100.0) * d0
+    if ad < 1e-9:
+        return 1.0
+    return ((1.0 - math.exp(-ad)) / ad) ** 2
+
+
+def dies_per_wafer(area_mm2: float) -> float:
+    """Gross dies per 300 mm wafer (standard edge-loss approximation)."""
+    d = WAFER_DIAMETER_MM
+    side = math.sqrt(max(area_mm2, 1e-9))
+    return max(1.0, math.pi * (d / 2.0) ** 2 / area_mm2
+               - math.pi * d / (math.sqrt(2.0) * side))
+
+
+@dataclasses.dataclass(frozen=True)
+class CarbonBreakdown:
+    die_g: float          # CFPA * A_die
+    wasted_g: float       # CFPA_Si * A_wasted
+    total_g: float
+    cfpa_g_per_cm2: float
+    yield_: float
+    area_mm2: float
+    node_nm: int
+
+    @property
+    def total_kg(self) -> float:
+        return self.total_g / 1000.0
+
+
+def cfpa(node_nm: int, area_mm2: float) -> tuple[float, float]:
+    """Eq. 2: carbon footprint per cm^2 of *die* area; returns (CFPA, Y)."""
+    p = NODE_PARAMS[node_nm]
+    y = murphy_yield(area_mm2, node_nm)
+    val = (CI_FAB_G_PER_KWH * p["EPA"] + p["C_gas"] + C_MATERIAL_G_PER_CM2) / y
+    return val, y
+
+
+def embodied_carbon(area_mm2: float, node_nm: int) -> CarbonBreakdown:
+    """Eq. 1 for a monolithic accelerator die."""
+    cfpa_val, y = cfpa(node_nm, area_mm2)
+    area_cm2 = area_mm2 / 100.0
+    dpw = dies_per_wafer(area_mm2)
+    wafer_area_cm2 = math.pi * (WAFER_DIAMETER_MM / 20.0) ** 2
+    wasted_cm2_per_die = max(0.0, wafer_area_cm2 / dpw - area_cm2)
+    die_g = cfpa_val * area_cm2
+    wasted_g = CFPA_SI_G_PER_CM2 * wasted_cm2_per_die
+    return CarbonBreakdown(
+        die_g=die_g, wasted_g=wasted_g, total_g=die_g + wasted_g,
+        cfpa_g_per_cm2=cfpa_val, yield_=y, area_mm2=area_mm2, node_nm=node_nm)
+
+
+def cdp(carbon_g: float, fps: float) -> float:
+    """Carbon-Delay-Product [g CO2 * s]; lower is better."""
+    return carbon_g / max(fps, 1e-9)
+
+
+def node_frequency(node_nm: int) -> float:
+    return NODE_PARAMS[node_nm]["freq"]

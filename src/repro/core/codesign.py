@@ -1,0 +1,115 @@
+"""End-to-end methodology driver (paper Fig. 1).
+
+  step 1: generate area-aware approximate multipliers (NSGA-II Pareto front),
+  step 2: GA over accelerator configs + mappings + multiplier choice with CDP
+          fitness under FPS / accuracy-drop constraints,
+  report: exact baseline, approx-only variant, GA-CDP design -- the three
+          bars of the paper's Fig. 3 (and the points of Fig. 2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from . import accelerator as accmod
+from . import carbon as carbonmod
+from . import dataflow as dfmod
+from . import ga as gamod
+from . import multipliers as mm
+from . import pareto as paretomod
+
+
+@dataclasses.dataclass(frozen=True)
+class CodesignReport:
+    workload: str
+    node_nm: int
+    fps_min: float
+    max_accuracy_drop: float
+    exact: gamod.Evaluated
+    approx_only: gamod.Evaluated
+    ga_cdp: gamod.Evaluated
+    approx_only_reduction: float   # carbon vs exact, same architecture
+    ga_reduction: float            # carbon vs exact baseline
+
+    def summary(self) -> str:
+        return (
+            f"[{self.workload} @ {self.node_nm}nm, fps>={self.fps_min:.0f}, "
+            f"drop<={self.max_accuracy_drop:.1f}%]\n"
+            f"  exact     : {self.exact.config.num_pes:5d} PEs "
+            f"{self.exact.area_mm2:7.3f} mm2  {self.exact.carbon_g:8.2f} g  "
+            f"{self.exact.fps:6.1f} fps\n"
+            f"  approx    : {self.approx_only.config.num_pes:5d} PEs "
+            f"{self.approx_only.area_mm2:7.3f} mm2  "
+            f"{self.approx_only.carbon_g:8.2f} g  (mult="
+            f"{self.approx_only.config.multiplier})  "
+            f"carbon -{100 * self.approx_only_reduction:.2f}%\n"
+            f"  GA-CDP    : {self.ga_cdp.config.num_pes:5d} PEs "
+            f"{self.ga_cdp.area_mm2:7.3f} mm2  {self.ga_cdp.carbon_g:8.2f} g  "
+            f"{self.ga_cdp.fps:6.1f} fps  (mult={self.ga_cdp.config.multiplier})"
+            f"  carbon -{100 * self.ga_reduction:.2f}%"
+        )
+
+
+def run_codesign(workload: str, node_nm: int, fps_min: float,
+                 max_accuracy_drop: float,
+                 mults: list[mm.ApproxMultiplier] | None = None,
+                 accuracy_fn: gamod.AccuracyFn = gamod.proxy_accuracy_drop,
+                 ga_cfg: gamod.GAConfig | None = None) -> CodesignReport:
+    if mults is None:
+        mults = paretomod.default_front() + list(mm.static_library().values())
+
+    exact = gamod.exact_baseline(workload, node_nm, fps_min)
+
+    # approx-only: same architecture, best multiplier within the drop budget
+    allowed = [m for m in mults if accuracy_fn(m) <= max_accuracy_drop
+               and not m.is_exact]
+    if allowed:
+        best_mult = min(allowed, key=lambda m: m.area_nand2eq)
+        approx_only = gamod.approx_variant(exact.config, best_mult)
+    else:
+        approx_only = exact
+
+    result = gamod.run_ga(workload, node_nm, fps_min, max_accuracy_drop,
+                          mults=mults, accuracy_fn=accuracy_fn, cfg=ga_cfg)
+    ga_best = result.best
+
+    return CodesignReport(
+        workload=workload, node_nm=node_nm, fps_min=fps_min,
+        max_accuracy_drop=max_accuracy_drop,
+        exact=exact, approx_only=approx_only, ga_cdp=ga_best,
+        approx_only_reduction=1.0 - approx_only.carbon_g / exact.carbon_g,
+        ga_reduction=1.0 - ga_best.carbon_g / exact.carbon_g,
+    )
+
+
+def sweep_exact_configs(workload: str, node_nm: int
+                        ) -> list[gamod.Evaluated]:
+    """The paper's Fig. 2 baseline curve: exact NVDLA configs 64..2048 PEs."""
+    out = []
+    for pes in accmod.VALID_PE_COUNTS:
+        acfg = accmod.nvdla_default(pes, node_nm)
+        perf = dfmod.workload_perf(workload, acfg)
+        area = accmod.area_model(acfg)
+        cb = carbonmod.embodied_carbon(area.total_mm2, node_nm)
+        out.append(gamod.Evaluated(
+            gamod.Genome(0, 0, 0, 0, 0), acfg, perf.fps, cb.total_g,
+            carbonmod.cdp(cb.total_g, perf.fps),
+            carbonmod.cdp(cb.total_g, perf.fps), area.total_mm2))
+    return out
+
+
+def approx_only_sweep(workload: str, node_nm: int, max_drop: float,
+                      mults: list[mm.ApproxMultiplier],
+                      accuracy_fn: gamod.AccuracyFn = gamod.proxy_accuracy_drop
+                      ) -> list[gamod.Evaluated]:
+    """Fig. 2 'Appx' curves: every exact config with the best multiplier
+    within the accuracy budget swapped in."""
+    allowed = [m for m in mults if accuracy_fn(m) <= max_drop
+               and not m.is_exact]
+    if not allowed:
+        return sweep_exact_configs(workload, node_nm)
+    best_mult = min(allowed, key=lambda m: m.area_nand2eq)
+    out = []
+    for e in sweep_exact_configs(workload, node_nm):
+        out.append(gamod.approx_variant(e.config, best_mult))
+    return out

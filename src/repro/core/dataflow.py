@@ -1,0 +1,127 @@
+"""Analytical loop-nest performance model (nn-dataflow / Tangram style).
+
+Estimates per-layer cycles for an NVDLA-style accelerator:
+
+  * compute: the MAC array is (pe_rows x pe_cols) = (C-parallel x K-parallel);
+    one output spatial position per cycle per (C,K) tile pass;
+  * memory: DRAM traffic under the best of two canonical loop orders
+    (weight-stationary vs. output/ifmap-stationary) with a discrete tiling
+    search constrained by the global buffer (double-buffered), exactly the
+    trade-off nn-dataflow explores;
+  * the layer runs at max(compute, memory) cycles (perfect double-buffer
+    overlap — an optimistic but standard assumption).
+
+FPS = freq / sum(layer cycles).  All operands int8, psums int32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+from . import accelerator as accmod
+from . import carbon as carbonmod
+from . import workloads as wl
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPerf:
+    name: str
+    compute_cycles: float
+    memory_cycles: float
+    dram_bytes: float
+    utilization: float
+
+    @property
+    def cycles(self) -> float:
+        return max(self.compute_cycles, self.memory_cycles)
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadPerf:
+    layers: tuple[LayerPerf, ...]
+    total_cycles: float
+    fps: float
+    avg_utilization: float
+    dram_bytes: float
+
+
+def _tile_candidates(total: int, par: int) -> list[int]:
+    """Tile sizes: multiples of the parallel dim, plus the full extent."""
+    cands = set()
+    t = par
+    while t < total:
+        cands.add(t)
+        t *= 2
+    cands.add(total)
+    return sorted(cands)
+
+
+def _layer_perf(layer: wl.Layer, cfg: accmod.AcceleratorConfig,
+                bytes_per_cycle: float) -> LayerPerf:
+    rows, cols = cfg.pe_rows, cfg.pe_cols
+    glb = cfg.glb_kib * 1024
+    if isinstance(layer, wl.GemmLayer):
+        c, k, hw = layer.k, layer.n, layer.m  # map GEMM onto the conv nest
+        r = s = 1
+        ifm, wgt, ofm = layer.ifmap_bytes, layer.weight_bytes, layer.ofmap_bytes
+    else:
+        c, k, hw = layer.c_in, layer.c_out, layer.h_out * layer.w_out
+        r, s = layer.r, layer.s
+        ifm, wgt, ofm = layer.ifmap_bytes, layer.weight_bytes, layer.ofmap_bytes
+
+    compute = hw * r * s * math.ceil(c / rows) * math.ceil(k / cols)
+    util = layer.macs / (compute * rows * cols)
+
+    # --- DRAM traffic: best (loop order x tiling) under GLB capacity -------
+    best = float("inf")
+    for tk in _tile_candidates(k, cols):
+        for tc in _tile_candidates(c, rows):
+            w_tile = tk * tc * r * s
+            i_tile = tc * max(1, ifm // max(c, 1))  # per-channel ifmap slice
+            if 2 * (w_tile + i_tile) > glb:
+                continue
+            n_k = math.ceil(k / tk)
+            n_c = math.ceil(c / tc)
+            # weight-stationary: weights once; ifmap streamed per K tile
+            ws = wgt + ifm * n_k + ofm * max(1, n_c)
+            # ifmap-stationary: ifmap once; weights streamed per C tile pass
+            is_ = ifm + wgt * 1 + ofm * max(1, n_c)  # weights fit pass-wise
+            # ifmap-stationary only valid if a full K-slice of weights tiles
+            # through GLB while the ifmap tile persists:
+            if 2 * w_tile + i_tile <= glb:
+                best = min(best, ws, is_)
+            else:
+                best = min(best, ws)
+    if best == float("inf"):
+        # degenerate: stream everything per smallest tile
+        best = wgt * math.ceil(hw / 64) + ifm * math.ceil(k / cols) + ofm * 2
+    mem_cycles = best / bytes_per_cycle
+    return LayerPerf(layer.name, float(compute), float(mem_cycles),
+                     float(best), float(util))
+
+
+@functools.lru_cache(maxsize=4096)
+def _workload_perf_cached(workload: str, cfg_key: tuple) -> WorkloadPerf:
+    cfg = accmod.AcceleratorConfig(*cfg_key)
+    layers = wl.WORKLOADS[workload]()
+    freq = carbonmod.node_frequency(cfg.node_nm)
+    bytes_per_cycle = cfg.dram_gbps * 1e9 / freq
+    perfs = tuple(_layer_perf(l, cfg, bytes_per_cycle) for l in layers)
+    total = sum(p.cycles for p in perfs)
+    fps = freq / total
+    avg_util = sum(p.utilization * p.compute_cycles for p in perfs) / \
+        max(sum(p.compute_cycles for p in perfs), 1e-9)
+    return WorkloadPerf(perfs, total, fps, avg_util,
+                        sum(p.dram_bytes for p in perfs))
+
+
+def workload_perf(workload: str, cfg: accmod.AcceleratorConfig) -> WorkloadPerf:
+    key = (cfg.pe_rows, cfg.pe_cols, cfg.rf_bytes_per_pe, cfg.glb_kib,
+           cfg.multiplier, cfg.node_nm, cfg.dram_gbps)
+    return _workload_perf_cached(workload, key)
+
+
+def fps(workload: str, cfg: accmod.AcceleratorConfig) -> float:
+    return workload_perf(workload, cfg).fps

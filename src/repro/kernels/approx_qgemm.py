@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: approximate int8 GEMM as (R+1) MXU matmuls.
+
+Computes  C[m,n] = sum_k m(a[m,k], b[k,n])  for an approximate multiplier m,
+in the low-rank formulation (DESIGN.md §3):
+
+    C = A.B - sum_r s_r * U_r(A).V_r(B)
+
+ops.py pre-maps the operands through the per-rank 256-entry int8 tables,
+producing stacks  a_stack (R+1, M, K) int8  and  b_stack (R+1, K, N) int8
+(plane 0 = raw/truncated operands; planes 1..R = table-mapped).  The kernel
+is then pure MXU work: per (m,n,k) tile it accumulates
+
+    acc += sum_r scales[r] * dot_int8(a_stack[r], b_stack[r])
+
+with an f32 VMEM accumulator, K innermost ("arbitrary") so the accumulator
+lives across the K loop, and M/N parallel.
+
+Block shapes default to (bm, bk, bn) = (256, 512, 256): MXU-aligned
+(multiples of 128 / int8 lane tiling) and, with R<=4 planes double-buffered,
+~3.8 MiB of VMEM — comfortably under a v5e core's ~16 MiB budget.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_BM = 256
+DEFAULT_BK = 512
+DEFAULT_BN = 256
+
+
+def _kernel(a_ref, b_ref, s_ref, out_ref, acc_ref, *, n_planes: int,
+            k_blocks: int):
+    """One (i, j, k) grid step.
+
+    a_ref: (n_planes, bm, bk) int8 VMEM
+    b_ref: (n_planes, bk, bn) int8 VMEM
+    s_ref: (n_planes, 1) f32 VMEM   (plane scales; s[0]=1, s[r]=-s_r)
+    out_ref: (bm, bn) f32 VMEM
+    acc_ref: (n_planes, bm, bn) int32 VMEM scratch
+
+    Per-plane int32 accumulation with scales applied once at flush keeps the
+    kernel bit-identical to the XLA reference semantics (no f32 partial-sum
+    drift across the K loop).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    for r in range(n_planes):  # static unroll over correction planes
+        acc_ref[r] += jnp.dot(a_ref[r], b_ref[r],
+                              preferred_element_type=jnp.int32)
+
+    @pl.when(k == k_blocks - 1)
+    def _flush():
+        acc = jnp.zeros(out_ref.shape, jnp.float32)
+        for r in range(n_planes):
+            acc = acc + s_ref[r, 0] * acc_ref[r].astype(jnp.float32)
+        out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def approx_qgemm_stacked(a_stack: jax.Array, b_stack: jax.Array,
+                         scales: jax.Array, *, bm: int = DEFAULT_BM,
+                         bk: int = DEFAULT_BK, bn: int = DEFAULT_BN,
+                         interpret: bool = False) -> jax.Array:
+    """a_stack (P, M, K) int8, b_stack (P, K, N) int8, scales (P, 1) f32
+    -> (M, N) f32.  M, K, N must be multiples of the block shape (ops.py
+    pads; padding is inserted *after* table mapping so padded elements
+    contribute exactly zero in every plane)."""
+    p, m, k = a_stack.shape
+    p2, k2, n = b_stack.shape
+    assert p == p2 and k == k2, (a_stack.shape, b_stack.shape)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (m, k, n, bm, bk, bn)
+    grid = (m // bm, n // bn, k // bk)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, n_planes=p, k_blocks=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((p, bm, bk), lambda i, j, kk: (0, i, kk)),
+            pl.BlockSpec((p, bk, bn), lambda i, j, kk: (0, kk, j)),
+            pl.BlockSpec((p, 1), lambda i, j, kk: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((p, bm, bn), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a_stack, b_stack, scales)

@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: blocked online-softmax (flash) attention.
+
+Used by the serving/eval substrate for 32k-token prefill, where naive
+attention would materialize (B, H, S, S) score tensors (at S=32k that is
+4 GiB per head-batch in f32 — the memory-roofline killer the §Perf log
+attacks).  Grid is (batch*heads, q_blocks, kv_blocks) with kv innermost;
+running max/denominator/accumulator live in VMEM scratch across the kv loop.
+
+Causal masking uses global q/kv indices; fully-masked kv blocks are skipped
+(`pl.when`), which for causal attention halves the MXU work.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 512
+DEFAULT_BKV = 512
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, kv_blocks: int, bq: int, bkv: int):
+    iq = pl.program_id(1)
+    ikv = pl.program_id(2)
+
+    @pl.when(ikv == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # For causal attention, kv blocks strictly above the diagonal contribute
+    # nothing: skip their flops entirely.
+    needed = (not causal) or (ikv * bkv <= iq * bq + bq - 1)
+
+    @pl.when(needed)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)            # (bq, d)
+        k = k_ref[0].astype(jnp.float32)            # (bkv, d)
+        v = v_ref[0].astype(jnp.float32)            # (bkv, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bq, bkv)
+        if causal:
+            qi = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+            ki = ikv * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+            s = jnp.where(qi >= ki, s, NEG_INF)
+        m_prev = m_ref[...]                          # (bq, 1)
+        l_prev = l_ref[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                       # (bq, bkv)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(ikv == kv_blocks - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "bq", "bkv", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, bq: int = DEFAULT_BQ,
+                    bkv: int = DEFAULT_BKV, interpret: bool = False
+                    ) -> jax.Array:
+    """q (bh, sq, d), k/v (bh, skv, d) -> (bh, sq, d).
+
+    sq % bq == 0 and skv % bkv == 0 required (ops.py pads).  For causal use
+    sq == skv (self-attention prefill)."""
+    bh, sq, d = q.shape
+    _, skv, _ = k.shape
+    assert sq % bq == 0 and skv % bkv == 0, (sq, skv, bq, bkv)
+    grid = (bh, sq // bq, skv // bkv)
+    scale = 1.0 / (d ** 0.5)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal,
+                          kv_blocks=grid[2], bq=bq, bkv=bkv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bkv, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bkv, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

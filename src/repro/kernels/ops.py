@@ -1,0 +1,98 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handles: operand-stack construction (table mapping for the low-rank
+correction planes), padding to block multiples (inserted *after* table
+mapping so padded elements contribute exactly zero), reshaping, and the
+interpret-mode switch (CPU containers run kernels with interpret=True; on
+real TPU the same code compiles to Mosaic).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.approx import gemm as gemm_mod
+from repro.kernels import approx_qgemm as qk
+from repro.kernels import flash_attention as fk
+from repro.kernels import quantize as qz
+
+# CPU containers must run Pallas TPU kernels in interpret mode.
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def build_stacks(a_q: jax.Array, b_q: jax.Array, spec: gemm_mod.MultSpec
+                 ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Build (P, M, K) / (P, K, N) int8 operand stacks + (P, 1) f32 scales.
+
+    Plane 0 carries the raw (or truncation-masked) operands with scale +1;
+    planes 1..R carry the table-mapped correction operands with scale -s_r.
+    """
+    if spec.mode == "trunc":
+        a0 = gemm_mod._trunc_mask(a_q, spec.trunc_a)
+        b0 = gemm_mod._trunc_mask(b_q, spec.trunc_b)
+        return (a0[None], b0[None], jnp.ones((1, 1), jnp.float32))
+    planes_a = [a_q]
+    planes_b = [b_q]
+    scales = [jnp.ones((), jnp.float32)]
+    for r in range(spec.rank):
+        planes_a.append(gemm_mod._table_map(spec.fu_q[r], a_q))
+        planes_b.append(gemm_mod._table_map(spec.fv_q[r], b_q))
+        scales.append(-spec.s_r[r])
+    return (jnp.stack(planes_a), jnp.stack(planes_b),
+            jnp.stack(scales)[:, None])
+
+
+def approx_qgemm(a_q: jax.Array, b_q: jax.Array, spec: gemm_mod.MultSpec,
+                 *, bm: int | None = None, bk: int | None = None,
+                 bn: int | None = None) -> jax.Array:
+    """int8 (m, k) x int8 (k, n) -> f32 (m, n) via the Pallas kernel."""
+    m, k = a_q.shape
+    k2, n = b_q.shape
+    assert k == k2
+    bm = bm or min(qk.DEFAULT_BM, max(128, 1 << (m - 1).bit_length()))
+    bn = bn or min(qk.DEFAULT_BN, max(128, 1 << (n - 1).bit_length()))
+    bk = bk or min(qk.DEFAULT_BK, max(128, 1 << (k - 1).bit_length()))
+    a_s, b_s, s = build_stacks(a_q, b_q, spec)
+    a_s = _pad_to(_pad_to(a_s, 1, bm), 2, bk)
+    b_s = _pad_to(_pad_to(b_s, 1, bk), 2, bn)
+    out = qk.approx_qgemm_stacked(a_s, b_s, s, bm=bm, bk=bk, bn=bn,
+                                  interpret=INTERPRET)
+    return out[:m, :n]
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, bq: int | None = None,
+                    bkv: int | None = None) -> jax.Array:
+    """q (bh, sq, d), k/v (bh, skv, d) -> (bh, sq, d)."""
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    bq = bq or min(fk.DEFAULT_BQ, sq)
+    bkv = bkv or min(fk.DEFAULT_BKV, skv)
+    assert sq % bq == 0 and skv % bkv == 0, \
+        "pad sequence to block multiples before calling"
+    return fk.flash_attention(q, k, v, causal=causal, bq=bq, bkv=bkv,
+                              interpret=INTERPRET)
+
+
+def quantize_rows(x: jax.Array, *, bm: int | None = None
+                  ) -> tuple[jax.Array, jax.Array]:
+    """(M, K) float -> int8 rows + scales via the fused kernel."""
+    m, k = x.shape
+    bm = bm or min(qz.DEFAULT_BM, max(8, 1 << (m - 1).bit_length()))
+    xp = _pad_to(x, 0, bm)
+    q, s = qz.quantize_rows(xp, bm=bm, interpret=INTERPRET)
+    return q[:m], s[:m]

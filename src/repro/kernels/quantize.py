@@ -1,0 +1,54 @@
+"""Pallas TPU kernel: fused per-row symmetric int8 quantization.
+
+Row-blocked: each grid step loads a (bm, K) f32 tile, computes per-row
+absmax, scales, rounds, and emits the int8 tile plus (bm, 1) f32 scales in a
+single VMEM pass (one read of x instead of XLA's reduce + broadcast-divide
+two-pass).  Feeds approx_qgemm's activation quantization on the hot path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+INT8_MAX = 127.0
+DEFAULT_BM = 256
+
+
+def _kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-8) / INT8_MAX
+    q = jnp.clip(jnp.round(x / scale), -INT8_MAX - 1, INT8_MAX)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def quantize_rows(x: jax.Array, *, bm: int = DEFAULT_BM,
+                  interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """x (M, K) float -> (q (M, K) int8, scale (M, 1) f32); M % bm == 0."""
+    m, k = x.shape
+    assert m % bm == 0, (m, bm)
+    grid = (m // bm,)
+    q, s = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, k), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, k), jnp.int8),
+            jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(x)
+    return q, s

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the *semantic definitions*; kernels must match them (bit-exact for
+integer paths, allclose for float paths).  `lut_matmul` is the ground-truth
+ApproxTrain semantic: per-element 256x256-LUT product, accumulated exactly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.approx import gemm as gemm_mod
+from repro.approx import quant
+
+
+def lut_matmul(a_q: jax.Array, b_q: jax.Array, lut: jax.Array) -> jax.Array:
+    """Exact approximate-multiplier GEMM by 2-D LUT gather.
+
+    a_q (m,k) int8, b_q (k,n) int8, lut (256,256) int32 indexed by the uint8
+    bit patterns.  Returns (m,n) int32: sum_k lut[a[mk], b[kn]].
+    O(mkn) memory — use small shapes (it is the oracle, not the fast path).
+    """
+    ua = jnp.bitwise_and(a_q.astype(jnp.int32), 0xFF)   # (m, k)
+    ub = jnp.bitwise_and(b_q.astype(jnp.int32), 0xFF)   # (k, n)
+    prod = lut[ua[:, :, None], ub[None, :, :]]          # (m, k, n)
+    return prod.sum(axis=1).astype(jnp.int32)
+
+
+def ref_approx_qgemm(a_q: jax.Array, b_q: jax.Array,
+                     spec: gemm_mod.MultSpec) -> jax.Array:
+    """The XLA-path semantic the Pallas kernel must reproduce exactly."""
+    return gemm_mod.approx_qgemm(a_q, b_q, spec)
+
+
+def ref_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True) -> jax.Array:
+    """q,k,v (bh, s, d) f32/bf16 -> (bh, s, d).  Plain softmax attention."""
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    s = jnp.einsum("bqd,bkd->bqk", qf, kf) * scale
+    if causal:
+        sq, sk = q.shape[-2], k.shape[-2]
+        mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, vf).astype(q.dtype)
+
+
+def ref_quantize_rows(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-row symmetric int8 quantization of (m, k) f32."""
+    return quant.quantize(x, axis=0)

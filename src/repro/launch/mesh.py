@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+Kept as functions (never module-level constants) so importing this module
+never touches JAX device state — the dry-run must set XLA_FLAGS before any
+jax initialization.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """Single pod: (data=16, model=16) = 256 chips (TPU v5e pod-slice).
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips; the pod axis composes
+    with data for batch/gradient parallelism with hierarchical collectives
+    (DCN between pods, ICI within)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int | None = None) -> Mesh:
+    """Small mesh over whatever devices exist (tests / local runs)."""
+    n = len(jax.devices())
+    model = model or (2 if n % 2 == 0 and n > 1 else 1)
+    data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))

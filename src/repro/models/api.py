@@ -1,0 +1,93 @@
+"""Unified model API: family dispatch for init/forward/loss/serve.
+
+Every family module exposes init_params / forward / (prefill) / decode_step /
+init_cache with the same signatures; training and serving steps (and the
+dry-run) go through this façade only.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.approx import gemm as gemm_mod
+from repro.configs.base import ModelConfig
+from repro.models import common as C
+from repro.models import encdec, mamba2, rglru, transformer
+
+Params = dict[str, Any]
+
+_FAMILIES = {
+    "lm": transformer,
+    "ssm": mamba2,
+    "hybrid": rglru,
+    "encdec": encdec,
+}
+
+
+def family_module(cfg: ModelConfig):
+    return _FAMILIES[cfg.family]
+
+
+def make_spec(cfg: ModelConfig) -> gemm_mod.MultSpec | None:
+    if cfg.mult in ("exact", "", None):
+        return None
+    return gemm_mod.spec_from_name(cfg.mult)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    return family_module(cfg).init_params(cfg, key)
+
+
+def forward(params: Params, batch: dict, cfg: ModelConfig, spec=None
+            ) -> tuple[jax.Array, jax.Array]:
+    """batch: {"tokens": (b, s)} (+ "frames" for encdec, "img" for vlm).
+    Returns (logits (b, s, v), aux_loss)."""
+    mod = family_module(cfg)
+    kwargs = {}
+    if cfg.family == "encdec":
+        kwargs["frames"] = batch.get("frames")
+    if cfg.cross_every:
+        kwargs["img_embeds"] = batch.get("img")
+    return mod.forward(params, batch["tokens"], cfg, spec, **kwargs)
+
+
+def loss_fn(params: Params, batch: dict, cfg: ModelConfig, spec=None
+            ) -> tuple[jax.Array, dict]:
+    """Next-token cross-entropy (teacher-forced for encdec)."""
+    logits, aux = forward(params, batch, cfg, spec)
+    labels = batch.get("labels")
+    if labels is None:
+        labels = jnp.pad(batch["tokens"][:, 1:], ((0, 0), (0, 1)))
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones(labels.shape, jnp.float32)
+        mask = mask.at[:, -1].set(0.0)
+    ce = C.softmax_xent(logits, labels, mask)
+    total = ce + 0.01 * aux
+    return total, {"ce": ce, "aux": aux}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    return family_module(cfg).init_cache(cfg, batch, max_len)
+
+
+def decode_step(params: Params, cache: dict, tokens: jax.Array,
+                cfg: ModelConfig, spec=None, extras: dict | None = None
+                ) -> tuple[jax.Array, dict]:
+    mod = family_module(cfg)
+    kwargs = dict(extras or {})
+    return mod.decode_step(params, cache, tokens, cfg, spec, **kwargs)
+
+
+def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig, spec=None,
+            max_len: int | None = None, extras: dict | None = None) -> tuple:
+    mod = family_module(cfg)
+    kwargs = dict(extras or {})
+    return mod.prefill(params, tokens, cfg, spec, max_len=max_len, **kwargs)
+
+
+def param_count(params: Params) -> int:
+    return sum(int(jnp.size(x)) for x in jax.tree_util.tree_leaves(params))

@@ -1,0 +1,250 @@
+"""Blockwise (flash-style) attention with a custom VJP, pure JAX.
+
+Plain `lax.scan` online-softmax attention is O(chunk*s) memory in the
+FORWARD pass only: under autodiff, the scan saves its per-block probability
+residuals, re-materializing the full O(s^2) score tensor in the backward
+pass (a 4k-token tinyllama train step showed 21 GB/device of temps in the
+dry-run memory analysis before this module existed).  The fix is the
+standard flash backward: save only (out, logsumexp) per row and recompute
+block scores in the backward sweep.
+
+Handles: causal masking, GQA (kv-head grouping), sliding windows (true
+O(s*window) flops via static-span dynamic slices), cross-attention
+(q-len != kv-len), and internal padding to chunk multiples.
+
+This is the XLA twin of kernels/flash_attention.py (which targets the TPU
+Mosaic path); the dry-run and CPU tests lower this one.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def _pad_seq(x, c):
+    pad = (-x.shape[1]) % c
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+    return x, pad
+
+
+def _mask_for(iq, jk, c_q, c_k, s_q, s_k, causal, window, q_off=0):
+    """(c_q, c_k) bool mask for q chunk iq vs kv chunk positions jk
+    (jk = global start of the kv slice)."""
+    qi = iq * c_q + jnp.arange(c_q) + q_off
+    ki = jk + jnp.arange(c_k)
+    m = (ki[None, :] < s_k) & (qi[:, None] < s_q + q_off)
+    if causal:
+        m &= qi[:, None] >= ki[None, :]
+    if window:
+        m &= (qi[:, None] - ki[None, :]) <= window
+        m &= ki[None, :] >= 0
+    return m
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                        chunk: int = 512, causal: bool = True,
+                        window: int = 0) -> jax.Array:
+    """q (b, sq, h, d); k, v (b, skv, kvh, d) -> (b, sq, h, d)."""
+    out, _ = _fwd(q, k, v, chunk, causal, window)
+    return out
+
+
+def _shape5(q, kvh):
+    b, s, h, d = q.shape
+    g = h // kvh
+    return q.reshape(b, s, kvh, g, d)
+
+
+def _hint_qkv(x):
+    """Pin (batch, seq, heads, hd) sharding at the kernel boundary: without
+    this GSPMD un-shards the batch dim through the chunked q/kv loops
+    (measured 32x attention over-compute on qwen prefill)."""
+    from repro.sharding.ctx import hint
+    return hint(x, "batch", None, "heads", None)
+
+
+def _fwd(q, k, v, chunk, causal, window):
+    with jax.named_scope("vmem_kernel_attention"):
+        return _fwd_inner(_hint_qkv(q), _hint_qkv(k), _hint_qkv(v), chunk,
+                          causal, window)
+
+
+def _fwd_inner(q, k, v, chunk, causal, window):
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    kvh = k.shape[2]
+    c = max(1, min(chunk, sq))
+    qp, _ = _pad_seq(q, c)
+    kp, _ = _pad_seq(k, c)
+    vp, _ = _pad_seq(v, c)
+    spq, spk = qp.shape[1], kp.shape[1]
+    nq, nk = spq // c, spk // c
+    qg = _shape5(qp, kvh)                                  # (b,sp,kv,g,d)
+    scale = d ** -0.5
+
+    if window:
+        w = min(window, skv)
+        kp2 = jnp.pad(kp, ((0, 0), (w, 0), (0, 0), (0, 0)))
+        vp2 = jnp.pad(vp, ((0, 0), (w, 0), (0, 0), (0, 0)))
+
+    def q_block(iq):
+        qs = jax.lax.dynamic_slice_in_dim(qg, iq * c, c, 1)
+        qs = qs.astype(jnp.float32) * scale               # (b,c,kv,g,d)
+
+        def attend(ks, vs, jk_start):
+            sc = jnp.einsum("bqkgd,bmkd->bkgqm", qs,
+                            ks.astype(jnp.float32))
+            m = _mask_for(iq, jk_start, c, ks.shape[1], sq, skv, causal,
+                          window)
+            return jnp.where(m[None, None, None], sc, NEG), vs
+
+        if window:
+            start = iq * c  # padded coords
+            ks = jax.lax.dynamic_slice_in_dim(kp2, start, w + c, 1)
+            vs = jax.lax.dynamic_slice_in_dim(vp2, start, w + c, 1)
+            sc, vs = attend(ks, vs, iq * c - w)
+            mx = sc.max(-1)
+            p = jnp.exp(sc - mx[..., None])
+            l = p.sum(-1)
+            o = jnp.einsum("bkgqm,bmkd->bkgqd", p, vs.astype(jnp.float32))
+            o = o / jnp.maximum(l, 1e-30)[..., None]
+            lse = mx + jnp.log(jnp.maximum(l, 1e-30))
+            return o.transpose(0, 3, 1, 2, 4), lse        # (b,c,kv,g,*)
+
+        def kv_step(carry, jk):
+            m_p, l_p, acc = carry
+            ks = jax.lax.dynamic_slice_in_dim(kp, jk * c, c, 1)
+            vs = jax.lax.dynamic_slice_in_dim(vp, jk * c, c, 1)
+            sc, vs = attend(ks, vs, jk * c)
+            m_c = sc.max(-1)
+            m_n = jnp.maximum(m_p, m_c)
+            p = jnp.exp(sc - m_n[..., None])
+            alpha = jnp.exp(m_p - m_n)
+            l_n = alpha * l_p + p.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqm,bmkd->bkgqd", p, vs.astype(jnp.float32))
+            return (m_n, l_n, acc), None
+
+        init = (jnp.full((b, kvh, h // kvh, c), NEG, jnp.float32),
+                jnp.zeros((b, kvh, h // kvh, c), jnp.float32),
+                jnp.zeros((b, kvh, h // kvh, c, d), jnp.float32))
+        (m_f, l_f, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
+        o = acc / jnp.maximum(l_f, 1e-30)[..., None]
+        lse = m_f + jnp.log(jnp.maximum(l_f, 1e-30))
+        return o.transpose(0, 3, 1, 2, 4), lse
+
+    outs, lses = jax.lax.map(q_block, jnp.arange(nq))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, spq, h, d)
+    out = out[:, :sq].astype(q.dtype)
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(
+        b, kvh, h // kvh, spq)                             # (b,kv,g,sp)
+    return out, (q, k, v, out, lse)
+
+
+def _fwd_rule(q, k, v, chunk, causal, window):
+    out, res = _fwd(q, k, v, chunk, causal, window)
+    return out, res
+
+
+def _bwd_rule(chunk, causal, window, res, g):
+    with jax.named_scope("vmem_kernel_attention"):
+        return _bwd_inner(chunk, causal, window, res, g)
+
+
+def _bwd_inner(chunk, causal, window, res, g):
+    q, k, v, out, lse = res
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    kvh = k.shape[2]
+    c = max(1, min(chunk, sq))
+    qp, _ = _pad_seq(q, c)
+    kp, _ = _pad_seq(k, c)
+    vp, _ = _pad_seq(v, c)
+    gp, _ = _pad_seq(g.astype(jnp.float32), c)
+    op, _ = _pad_seq(out.astype(jnp.float32), c)
+    spq, spk = qp.shape[1], kp.shape[1]
+    nq, nk = spq // c, spk // c
+    scale = d ** -0.5
+    qg = _shape5(qp, kvh).astype(jnp.float32)
+    gg = _shape5(gp, kvh)
+    og = _shape5(op, kvh)
+    lse_p = jnp.pad(lse, ((0, 0),) * 3 + ((0, spq - lse.shape[-1]),)) \
+        if lse.shape[-1] != spq else lse
+
+    w = min(window, skv) if window else 0
+    if window:
+        kp2 = jnp.pad(kp, ((0, 0), (w, 0), (0, 0), (0, 0)))
+        vp2 = jnp.pad(vp, ((0, 0), (w, 0), (0, 0), (0, 0)))
+
+    def q_block(carry, iq):
+        dk_acc, dv_acc = carry                      # padded (b,spk[+w],kv,d)
+        qs = jax.lax.dynamic_slice_in_dim(qg, iq * c, c, 1) * scale
+        gs = jax.lax.dynamic_slice_in_dim(gg, iq * c, c, 1)
+        os_ = jax.lax.dynamic_slice_in_dim(og, iq * c, c, 1)
+        lse_i = jax.lax.dynamic_slice_in_dim(lse_p, iq * c, c, 3)
+        di = jnp.einsum("bqkgd,bqkgd->bkgq", gs, os_)   # rowsum(dO * O)
+
+        def block_grads(ks, vs, jk_start):
+            sc = jnp.einsum("bqkgd,bmkd->bkgqm", qs,
+                            ks.astype(jnp.float32))
+            m = _mask_for(iq, jk_start, c, ks.shape[1], sq, skv, causal,
+                          window)
+            sc = jnp.where(m[None, None, None], sc, NEG)
+            p = jnp.exp(sc - lse_i[..., None])           # (b,kv,g,q,m)
+            dv = jnp.einsum("bkgqm,bqkgd->bmkd", p, gs)
+            dp = jnp.einsum("bqkgd,bmkd->bkgqm", gs, vs.astype(jnp.float32))
+            ds = p * (dp - di[..., None]) * scale
+            dq = jnp.einsum("bkgqm,bmkd->bqkgd", ds, ks.astype(jnp.float32))
+            dk = jnp.einsum("bkgqm,bqkgd->bmkd", ds, qs) / scale
+            return dq, dk, dv
+
+        if window:
+            start = iq * c
+            ks = jax.lax.dynamic_slice_in_dim(kp2, start, w + c, 1)
+            vs = jax.lax.dynamic_slice_in_dim(vp2, start, w + c, 1)
+            dq_i, dk_b, dv_b = block_grads(ks, vs, iq * c - w)
+            old_k = jax.lax.dynamic_slice_in_dim(dk_acc, start, w + c, 1)
+            old_v = jax.lax.dynamic_slice_in_dim(dv_acc, start, w + c, 1)
+            dk_acc = jax.lax.dynamic_update_slice_in_dim(
+                dk_acc, old_k + dk_b, start, 1)
+            dv_acc = jax.lax.dynamic_update_slice_in_dim(
+                dv_acc, old_v + dv_b, start, 1)
+        else:
+            def kv_step(carry2, jk):
+                dk_a, dv_a, dq_a = carry2
+                ks = jax.lax.dynamic_slice_in_dim(kp, jk * c, c, 1)
+                vs = jax.lax.dynamic_slice_in_dim(vp, jk * c, c, 1)
+                dq_b, dk_b, dv_b = block_grads(ks, vs, jk * c)
+                old_k = jax.lax.dynamic_slice_in_dim(dk_a, jk * c, c, 1)
+                old_v = jax.lax.dynamic_slice_in_dim(dv_a, jk * c, c, 1)
+                dk_a = jax.lax.dynamic_update_slice_in_dim(
+                    dk_a, old_k + dk_b, jk * c, 1)
+                dv_a = jax.lax.dynamic_update_slice_in_dim(
+                    dv_a, old_v + dv_b, jk * c, 1)
+                return (dk_a, dv_a, dq_a + dq_b), None
+
+            zero_dq = jnp.zeros((b, c, kvh, h // kvh, d), jnp.float32)
+            (dk_acc, dv_acc, dq_i), _ = jax.lax.scan(
+                kv_step, (dk_acc, dv_acc, zero_dq), jnp.arange(nk))
+
+        return (dk_acc, dv_acc), dq_i
+
+    pad_w = w if window else 0
+    dk0 = jnp.zeros((b, spk + pad_w, kvh, d), jnp.float32)
+    dv0 = jnp.zeros((b, spk + pad_w, kvh, d), jnp.float32)
+    (dk_f, dv_f), dqs = jax.lax.scan(q_block, (dk0, dv0), jnp.arange(nq))
+    dq = dqs.transpose(1, 0, 2, 3, 4, 5).reshape(b, spq, h, d)[:, :sq]
+    dk = dk_f[:, pad_w:pad_w + skv]
+    dv = dv_f[:, pad_w:pad_w + skv]
+    return (_hint_qkv(dq).astype(q.dtype), _hint_qkv(dk).astype(k.dtype),
+            _hint_qkv(dv).astype(v.dtype))
+
+
+blockwise_attention.defvjp(_fwd_rule, _bwd_rule)

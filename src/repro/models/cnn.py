@@ -1,0 +1,142 @@
+"""CNNs for the paper's own evaluation (VGG16/19, ResNet50/152) plus small
+trainable variants for the accuracy-drop calibration experiments.
+
+NHWC, conv via repro.approx.layers.conv2d (im2col + approximate GEMM when a
+multiplier spec is active — exactly how the NVDLA-style accelerator maps
+conv onto its MAC array).  BN is folded (inference-style affine), matching
+post-training int8 deployment.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.approx import layers as AL
+from repro.models import common as C
+
+Params = dict[str, Any]
+
+VGG_CFG = {
+    "vgg16": [64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
+              512, 512, 512, "M", 512, 512, 512, "M"],
+    "vgg19": [64, 64, "M", 128, 128, "M", 256, 256, 256, 256, "M",
+              512, 512, 512, 512, "M", 512, 512, 512, 512, "M"],
+    "vgg_mini": [16, "M", 32, "M", 64, "M"],   # for 32x32 calibration runs
+}
+
+
+def init_vgg(arch: str, key: jax.Array, n_classes: int = 1000,
+             in_ch: int = 3, image: int = 224, dtype=jnp.float32) -> Params:
+    cfg = VGG_CFG[arch]
+    params: Params = {"convs": [], "fcs": []}
+    c_in, hw = in_ch, image
+    keys = C.split_keys(key, len(cfg) + 3)
+    ki = 0
+    for v in cfg:
+        if v == "M":
+            hw //= 2
+            continue
+        w = (jax.random.normal(keys[ki], (3, 3, c_in, v), jnp.float32)
+             * (9 * c_in) ** -0.5).astype(dtype)
+        params["convs"].append({"w": w, "b": jnp.zeros((v,), dtype)})
+        c_in = v
+        ki += 1
+    flat = c_in * hw * hw
+    dims = ([4096, 4096, n_classes] if arch != "vgg_mini"
+            else [128, n_classes])
+    for dout in dims:
+        params["fcs"].append({
+            "w": C.dense_init(keys[ki], flat, dout, dtype),
+            "b": jnp.zeros((dout,), dtype)})
+        flat = dout
+        ki += 1
+    return params
+
+
+def vgg_forward(params: Params, x: jax.Array, arch: str, spec=None
+                ) -> jax.Array:
+    cfg = VGG_CFG[arch]
+    ci = 0
+    for v in cfg:
+        if v == "M":
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1),
+                "VALID")
+            continue
+        p = params["convs"][ci]
+        x = jax.nn.relu(AL.conv2d(x, p["w"], 1, 1, spec) + p["b"])
+        ci += 1
+    x = x.reshape(x.shape[0], -1)
+    for i, p in enumerate(params["fcs"]):
+        x = AL.dense(x, p["w"], p["b"], spec)
+        if i < len(params["fcs"]) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+RESNET_BLOCKS = {"resnet50": [3, 4, 6, 3], "resnet152": [3, 8, 36, 3],
+                 "resnet_mini": [1, 1]}
+
+
+def init_resnet(arch: str, key: jax.Array, n_classes: int = 1000,
+                dtype=jnp.float32) -> Params:
+    blocks = RESNET_BLOCKS[arch]
+    mini = arch == "resnet_mini"
+    widths = [16, 32] if mini else [64, 128, 256, 512]
+    expansion = 2 if mini else 4
+    keys = iter(C.split_keys(key, 4 + sum(blocks) * 4 + len(blocks)))
+
+    def conv(cin, cout, k):
+        return {"w": (jax.random.normal(next(keys), (k, k, cin, cout),
+                                        jnp.float32)
+                      * (k * k * cin) ** -0.5).astype(dtype),
+                "s": jnp.ones((cout,), dtype), "b": jnp.zeros((cout,), dtype)}
+
+    params: Params = {"stem": conv(3, widths[0], 3 if mini else 7),
+                      "stages": []}
+    c_in = widths[0]
+    for stage, (nblk, w) in enumerate(zip(blocks, widths)):
+        stage_p = []
+        for b in range(nblk):
+            blk = {"c1": conv(c_in, w, 1), "c2": conv(w, w, 3),
+                   "c3": conv(w, w * expansion, 1)}
+            if b == 0:
+                blk["proj"] = conv(c_in, w * expansion, 1)
+            stage_p.append(blk)
+            c_in = w * expansion
+        params["stages"].append(stage_p)
+    params["fc"] = {"w": C.dense_init(next(keys), c_in, n_classes, dtype),
+                    "b": jnp.zeros((n_classes,), dtype)}
+    return params
+
+
+def _affine(x, p):
+    return x * p["s"] + p["b"]
+
+
+def resnet_forward(params: Params, x: jax.Array, arch: str, spec=None
+                   ) -> jax.Array:
+    mini = arch == "resnet_mini"
+    stem = params["stem"]
+    x = AL.conv2d(x, stem["w"], 1 if mini else 2, 1 if mini else 3, spec)
+    x = jax.nn.relu(_affine(x, stem))
+    if not mini:
+        x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
+                                  (1, 2, 2, 1), "SAME")
+    for stage_i, stage in enumerate(params["stages"]):
+        for b_i, blk in enumerate(stage):
+            stride = 2 if (stage_i > 0 and b_i == 0) else 1
+            y = jax.nn.relu(_affine(
+                AL.conv2d(x, blk["c1"]["w"], stride, 0, spec), blk["c1"]))
+            y = jax.nn.relu(_affine(
+                AL.conv2d(y, blk["c2"]["w"], 1, 1, spec), blk["c2"]))
+            y = _affine(AL.conv2d(y, blk["c3"]["w"], 1, 0, spec), blk["c3"])
+            if "proj" in blk:
+                x = _affine(AL.conv2d(x, blk["proj"]["w"], stride, 0, spec),
+                            blk["proj"])
+            x = jax.nn.relu(x + y)
+    x = x.mean(axis=(1, 2))
+    return AL.dense(x, params["fc"]["w"], params["fc"]["b"], spec)

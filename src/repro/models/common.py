@@ -1,0 +1,311 @@
+"""Shared model components: norms, RoPE, attention (naive / chunked /
+windowed / decode), SwiGLU MLP, initializers.
+
+All matmuls route through repro.approx.layers.gemm so every architecture can
+run under a candidate approximate multiplier (`spec`).  Softmax, norms and
+rotary math stay in f32 (they map to the accelerator's exact vector unit,
+not the approximate MAC array — see DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.approx import layers as AL
+from repro.approx import gemm as gemm_mod
+
+MultSpec = gemm_mod.MultSpec
+Params = dict[str, Any]
+
+
+# --- init -------------------------------------------------------------------
+
+def dense_init(key: jax.Array, n_in: int, n_out: int, dtype,
+               scale: float | None = None) -> jax.Array:
+    s = scale if scale is not None else n_in ** -0.5
+    return (jax.random.normal(key, (n_in, n_out), jnp.float32) * s
+            ).astype(dtype)
+
+
+def stacked_dense_init(key: jax.Array, n: int, n_in: int, n_out: int, dtype,
+                       scale: float | None = None) -> jax.Array:
+    s = scale if scale is not None else n_in ** -0.5
+    return (jax.random.normal(key, (n, n_in, n_out), jnp.float32) * s
+            ).astype(dtype)
+
+
+def split_keys(key: jax.Array, n: int) -> list[jax.Array]:
+    return list(jax.random.split(key, n))
+
+
+# --- norms ------------------------------------------------------------------
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * \
+        (1.0 + scale.astype(jnp.float32)) + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def sinusoid_positions(s: int, d: int) -> jax.Array:
+    pos = jnp.arange(s, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+# --- rotary embeddings --------------------------------------------------------
+
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x (..., s, h, hd), positions (..., s) -> same shape."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                         # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., s, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                      # (..., s, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# --- attention ----------------------------------------------------------------
+
+def _gqa_shape(q: jax.Array, kv_heads: int):
+    b, s, h, d = q.shape
+    g = h // kv_heads
+    return q.reshape(b, s, kv_heads, g, d), g
+
+
+def naive_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True) -> jax.Array:
+    """q (b,s,h,d), k/v (b,s,kv,d).  Materializes (s, s) scores."""
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    qg, g = _gqa_shape(q, kvh)
+    scale = d ** -0.5
+    s_ = jnp.einsum("bqkgd,bmkd->bkgqm", qg.astype(jnp.float32),
+                    k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        s_ = jnp.where(mask, s_, -1e30)
+    p = jax.nn.softmax(s_, axis=-1)
+    o = jnp.einsum("bkgqm,bmkd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, s, h, d).astype(q.dtype)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      chunk: int = 512, causal: bool = True) -> jax.Array:
+    """Online-softmax attention, O(chunk*s) live memory (XLA analogue of the
+    flash kernel; used where Pallas cannot lower, e.g. the CPU dry-run)."""
+    b, s_orig, h, d = q.shape
+    kvh = k.shape[2]
+    c = min(chunk, s_orig)
+    pad = (-s_orig) % c
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    s = s_orig + pad
+    qg, g = _gqa_shape(q, kvh)
+    scale = d ** -0.5
+    nq = s // c
+    nk = s // c
+    kc = k.reshape(b, nk, c, kvh, d)
+    vc = v.reshape(b, nk, c, kvh, d)
+
+    def q_block(iq):
+        qs = jax.lax.dynamic_slice_in_dim(qg, iq * c, c, axis=1)  # b,c,kv,g,d
+        qs = qs.astype(jnp.float32) * scale
+
+        def kv_step(carry, ik):
+            m_p, l_p, acc = carry
+            ks = kc[:, ik].astype(jnp.float32)            # (b,c,kv,d)
+            vs = vc[:, ik].astype(jnp.float32)
+            sc = jnp.einsum("bqkgd,bmkd->bkgqm", qs, ks)  # (b,kv,g,c,c)
+            qi = iq * c + jnp.arange(c)
+            ki = ik * c + jnp.arange(c)
+            if causal:
+                mask = qi[:, None] >= ki[None, :]
+            else:
+                mask = jnp.broadcast_to(ki[None, :] < s_orig, (c, c))
+            sc = jnp.where(mask[None, None, None], sc, -1e30)
+            m_c = jnp.max(sc, axis=-1)
+            m_n = jnp.maximum(m_p, m_c)
+            p = jnp.exp(sc - m_n[..., None])
+            alpha = jnp.exp(m_p - m_n)
+            l_n = alpha * l_p + p.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqm,bmkd->bkgqd", p, vs)
+            return (m_n, l_n, acc), None
+
+        init = (jnp.full((b, kvh, g, c), -1e30, jnp.float32),
+                jnp.zeros((b, kvh, g, c), jnp.float32),
+                jnp.zeros((b, kvh, g, c, d), jnp.float32))
+        (m_f, l_f, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]    # (b,kv,g,c,d)
+        return out.transpose(0, 3, 1, 2, 4)               # (b,c,kv,g,d)
+
+    blocks = jax.lax.map(q_block, jnp.arange(nq))         # (nq,b,c,kv,g,d)
+    out = blocks.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, h, d)
+    return out[:, :s_orig].astype(q.dtype)
+
+
+def local_attention(q: jax.Array, k: jax.Array, v: jax.Array, window: int,
+                    chunk: int = 512) -> jax.Array:
+    """Causal sliding-window attention with true O(s * window) flops: each
+    q chunk attends to a static-length [window + chunk] kv slice."""
+    b, s_orig, h, d = q.shape
+    kvh = k.shape[2]
+    c = min(chunk, s_orig)
+    pad = (-s_orig) % c
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    s = s_orig + pad
+    qg, g = _gqa_shape(q, kvh)
+    scale = d ** -0.5
+    nq = s // c
+    w = min(window, s)
+    span = w + c  # static kv extent per q chunk
+
+    kp = jnp.pad(k, ((0, 0), (w, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (w, 0), (0, 0), (0, 0)))
+
+    def q_block(iq):
+        qs = jax.lax.dynamic_slice_in_dim(qg, iq * c, c, axis=1)
+        qs = qs.astype(jnp.float32) * scale
+        start = iq * c  # in padded coords the window starts here
+        ks = jax.lax.dynamic_slice_in_dim(kp, start, span, axis=1)
+        vs = jax.lax.dynamic_slice_in_dim(vp, start, span, axis=1)
+        sc = jnp.einsum("bqkgd,bmkd->bkgqm", qs, ks.astype(jnp.float32))
+        qi = iq * c + jnp.arange(c)                       # global q pos
+        ki = iq * c - w + jnp.arange(span)                # global kv pos
+        mask = (qi[:, None] >= ki[None, :]) & \
+               (qi[:, None] - ki[None, :] <= w) & (ki[None, :] >= 0)
+        sc = jnp.where(mask[None, None, None], sc, -1e30)
+        p = jax.nn.softmax(sc, axis=-1)
+        o = jnp.einsum("bkgqm,bmkd->bkgqd", p, vs.astype(jnp.float32))
+        return o.transpose(0, 3, 1, 2, 4)
+
+    blocks = jax.lax.map(q_block, jnp.arange(nq))
+    out = blocks.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, h, d)
+    return out[:, :s_orig].astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     length: jax.Array, window: int = 0) -> jax.Array:
+    """Single-token attention against a cache.
+
+    q (b,1,h,d); k/v_cache (b,smax,kv,d); length (b,) current cache fill.
+    On TPU this is a single fused kernel whose score rows never leave VMEM
+    (tagged below for the kernel-adjusted roofline; the XLA lowering
+    materializes (b,h,smax) score/probability buffers — measured to be the
+    dominant decode-cell HBM term, 20x the cache reads at batch 128).
+    """
+    with jax.named_scope("vmem_kernel_decode_attention"):
+        return _decode_attention(q, k_cache, v_cache, length, window)
+
+
+def _decode_attention(q, k_cache, v_cache, length, window=0) -> jax.Array:
+    b, _, h, d = q.shape
+    smax = k_cache.shape[1]
+    kvh = k_cache.shape[2]
+    qg, g = _gqa_shape(q, kvh)                            # (b,1,kv,g,d)
+    scale = d ** -0.5
+    # keep the cache operands in their storage dtype and accumulate in f32
+    # via preferred_element_type: an explicit astype would materialize an
+    # f32 copy of the whole KV cache per layer (native mixed-dtype dots on
+    # TPU; also what keeps the CPU dry-run's decode traffic honest)
+    sc = jnp.einsum("bqkgd,bmkd->bkgqm", qg * scale, k_cache,
+                    preferred_element_type=jnp.float32)   # (b,kv,g,1,smax)
+    pos = jnp.arange(smax)
+    valid = pos[None, :] < length[:, None]                # (b, smax)
+    if window:
+        valid &= pos[None, :] >= (length[:, None] - window)
+    sc = jnp.where(valid[:, None, None, None, :], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bkgqm,bmkd->bqkgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def attention(q, k, v, impl: str = "chunked", chunk: int = 512,
+              causal: bool = True, window: int = 0) -> jax.Array:
+    """Dispatch.  "chunked" = blockwise flash-style custom-VJP attention
+    (models/attention.py): O(chunk*s) fwd AND bwd memory — the lax.scan
+    variants in this file are kept as test oracles only."""
+    from repro.models.attention import blockwise_attention
+    if window:
+        return blockwise_attention(q, k, v, chunk, True, window)
+    if impl == "naive":
+        return naive_attention(q, k, v, causal)
+    if impl == "chunked":
+        return blockwise_attention(q, k, v, chunk, causal, 0)
+    if impl == "flash":
+        from repro.kernels import ops as kops
+        b, s, h, d = q.shape
+        kvh = k.shape[2]
+        g = h // kvh
+        ke = jnp.repeat(k, g, axis=2) if g > 1 else k
+        ve = jnp.repeat(v, g, axis=2) if g > 1 else v
+        qs = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+        ks = ke.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+        vs = ve.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+        o = kops.flash_attention(qs, ks, vs, causal=causal)
+        return o.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+    return chunked_attention(q, k, v, chunk, causal)
+
+
+# --- MLP ----------------------------------------------------------------------
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array, spec: MultSpec | None) -> jax.Array:
+    gate = AL.gemm(x, w_gate, spec)
+    up = AL.gemm(x, w_up, spec)
+    return AL.gemm(jax.nn.silu(gate) * up, w_down, spec)
+
+
+def gelu_mlp(x: jax.Array, w_up: jax.Array, b_up, w_down: jax.Array, b_down,
+             spec: MultSpec | None) -> jax.Array:
+    h = AL.dense(x, w_up, b_up, spec)
+    return AL.dense(jax.nn.gelu(h), w_down, b_down, spec)
+
+
+# --- losses -------------------------------------------------------------------
+
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 mask: jax.Array | None = None) -> jax.Array:
+    """Mean token cross-entropy, f32.  logits (..., v), labels (...)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+def maybe_remat(fn, enable: bool):
+    if not enable:
+        return fn
+    return jax.checkpoint(fn,
+                          policy=jax.checkpoint_policies.nothing_saveable)

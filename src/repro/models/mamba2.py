@@ -1,0 +1,268 @@
+"""Mamba-2 (SSD — state-space duality) blocks, chunked-parallel training form
+and O(1)-state decode (arXiv:2405.21060).
+
+Input/output projections route through the approximate GEMM (they map to the
+accelerator's MAC array); the SSD recurrence itself is f32 elementwise/state
+math (vector unit — exact, see DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.approx import layers as AL
+from repro.configs.base import ModelConfig
+from repro.models import common as C
+from repro.sharding.ctx import hint
+
+Params = dict[str, Any]
+NGROUPS = 1
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nheads = cfg.ssm_heads or (d_in // cfg.ssm_head_dim)
+    p = d_in // nheads
+    n = cfg.ssm_state
+    conv_ch = d_in + 2 * NGROUPS * n
+    return d_in, nheads, p, n, conv_ch
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    d_in, h, p, n, conv_ch = _dims(cfg)
+    L = cfg.n_layers
+    ks = C.split_keys(key, 6)
+    proj_out = 2 * d_in + 2 * NGROUPS * n + h
+    layers = {
+        "ln": jnp.zeros((L, d), dtype),
+        "in_proj": C.stacked_dense_init(ks[0], L, d, proj_out, dtype),
+        "conv_w": (jax.random.normal(ks[1], (L, cfg.conv_width, conv_ch),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((L, conv_ch), dtype),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.linspace(1.0, 16.0, h), (L, h)).astype(jnp.float32)),
+        "D": jnp.ones((L, h), jnp.float32),
+        "dt_bias": jnp.zeros((L, h), jnp.float32),
+        "norm_gate": jnp.zeros((L, d_in), dtype),
+        "out_proj": C.stacked_dense_init(ks[2], L, d_in, d, dtype),
+    }
+    return {
+        "embed": (jax.random.normal(ks[3], (cfg.vocab, d), jnp.float32)
+                  * 0.02).astype(dtype),
+        "layers": layers,
+        "final_norm": jnp.zeros((d,), dtype),
+        "lm_head": C.dense_init(ks[4], d, cfg.vocab, dtype, scale=0.02),
+    }
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x (..., l) -> (..., l, l) with out[i, j] = sum x[j+1..i], -inf above
+    the diagonal."""
+    l = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool), k=0)
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_scan(x: jax.Array, dtA: jax.Array, B: jax.Array, Cm: jax.Array,
+             chunk: int, init_state: jax.Array | None = None):
+    """Chunked SSD.
+
+    x (b, s, h, p); dtA (b, s, h) [= dt * A, negative]; B, Cm (b, s, g, n).
+    Returns (y (b, s, h, p), final_state (b, h, p, n)).
+    """
+    b, s, h, p = x.shape
+    g = B.shape[2]
+    n = B.shape[3]
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    c = s // q
+    hg = h // g
+
+    xc = x.reshape(b, c, q, h, p)
+    Ac = dtA.reshape(b, c, q, h).transpose(0, 3, 1, 2)       # (b,h,c,q)
+    Bc = B.reshape(b, c, q, g, n)
+    Cc = Cm.reshape(b, c, q, g, n)
+    A_cum = jnp.cumsum(Ac, axis=-1)                          # (b,h,c,q)
+
+    # --- intra-chunk (diagonal) term
+    Lmat = jnp.exp(_segsum(Ac))                              # (b,h,c,q,q)
+    Lg = Lmat.reshape(b, g, hg, c, q, q)
+    xg = xc.reshape(b, c, q, g, hg, p)
+    y_diag = jnp.einsum("bclgn,bcsgn,bghcls,bcsghp->bclghp",
+                        Cc, Bc, Lg, xg)
+
+    # --- chunk states
+    decay_states = jnp.exp(A_cum[..., -1:] - A_cum)          # (b,h,c,q)
+    dsg = decay_states.reshape(b, g, hg, c, q)
+    states = jnp.einsum("bclgn,bghcl,bclghp->bcghpn", Bc, dsg, xg)
+
+    # --- inter-chunk recurrence
+    chunk_decay = jnp.exp(A_cum[..., -1])                    # (b,h,c)
+    cdg = chunk_decay.reshape(b, g, hg, c).transpose(3, 0, 1, 2)
+    states_t = states.transpose(1, 0, 2, 3, 4, 5)            # (c,b,g,hg,p,n)
+    s0 = (init_state.reshape(b, g, hg, p, n) if init_state is not None
+          else jnp.zeros((b, g, hg, p, n), jnp.float32))
+
+    def step(prev, inp):
+        dec, st = inp
+        new = prev * dec[..., None, None] + st
+        return new, prev
+
+    final, prev_states = jax.lax.scan(step, s0, (cdg, states_t))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4, 5)    # (b,c,g,hg,p,n)
+
+    # --- inter-chunk (off-diagonal) output
+    out_decay = jnp.exp(A_cum).reshape(b, g, hg, c, q)
+    y_off = jnp.einsum("bclgn,bcghpn,bghcl->bclghp", Cc, prev_states,
+                       out_decay)
+
+    y = (y_diag + y_off).reshape(b, c, q, h, p).reshape(b, s, h, p)
+    return y, final.reshape(b, h, p, n)
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, bias: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d.  x (b, s, ch), w (width, ch)."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(width):  # width is 4: unrolled taps
+        out = out + xp[:, i:i + x.shape[1]].astype(jnp.float32) * \
+            w[i].astype(jnp.float32)
+    return (out + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def _split_proj(z: jax.Array, cfg: ModelConfig):
+    d_in, h, p, n, _ = _dims(cfg)
+    gn = NGROUPS * n
+    zg, xin, Bm, Cm, dt = jnp.split(
+        z, [d_in, 2 * d_in, 2 * d_in + gn, 2 * d_in + 2 * gn], axis=-1)
+    return zg, xin, Bm, Cm, dt
+
+
+def block(hstate, lp, cfg: ModelConfig, spec, init_state=None):
+    """One mamba2 block over a full sequence.  Returns (h, final_ssm_state,
+    conv_tail)."""
+    b, s, d = hstate.shape
+    d_in, h, p, n, conv_ch = _dims(cfg)
+    x = C.rmsnorm(hstate, lp["ln"])
+    z = AL.gemm(x, lp["in_proj"], spec)
+    zg, xin, Bm, Cm, dt = _split_proj(z, cfg)
+
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, lp["conv_w"], lp["conv_b"]))
+    xin, Bm, Cm = jnp.split(conv_out, [d_in, d_in + NGROUPS * n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])   # (b,s,h)
+    A = -jnp.exp(lp["A_log"])                                      # (h,)
+    dtA = dt * A
+    xh = xin.reshape(b, s, h, p).astype(jnp.float32)
+    Bh = Bm.reshape(b, s, NGROUPS, n).astype(jnp.float32)
+    Ch = Cm.reshape(b, s, NGROUPS, n).astype(jnp.float32)
+
+    y, final_state = ssd_scan(xh * dt[..., None], dtA, Bh, Ch,
+                              cfg.ssd_chunk, init_state)
+    y = y + lp["D"][None, None, :, None] * xh
+    y = y.reshape(b, s, d_in).astype(hstate.dtype)
+    y = C.rmsnorm(y * jax.nn.silu(zg), lp["norm_gate"])
+    out = AL.gemm(y, lp["out_proj"], spec)
+    conv_tail = conv_in[:, -(cfg.conv_width - 1):]
+    return hstate + out, final_state, conv_tail
+
+
+def forward(params: Params, tokens: jax.Array, cfg: ModelConfig, spec=None,
+            **_) -> tuple:
+    hcur = AL.embed(tokens, params["embed"])
+    hcur = hint(hcur, "batch", None, None)
+
+    def scan_block(hh, lp):
+        out, _, _ = C.maybe_remat(
+            lambda a, b_: block(a, b_, cfg, spec), cfg.remat)(hh, lp)
+        return out, None
+
+    hcur, _ = jax.lax.scan(scan_block, hcur, params["layers"])
+    hcur = C.rmsnorm(hcur, params["final_norm"])
+    logits = AL.gemm(hcur, params["lm_head"], spec)
+    return hint(logits, "batch", None, "vocab"), 0.0
+
+
+# --- serving ----------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int = 0, dtype=None
+               ) -> dict:
+    """SSM decode cache: per-layer conv tail + SSD state (O(1) in seq)."""
+    d_in, h, p, n, conv_ch = _dims(cfg)
+    L = cfg.n_layers
+    return {
+        "conv": jnp.zeros((L, batch, cfg.conv_width - 1, conv_ch),
+                          jnp.dtype(cfg.dtype)),
+        "ssm": jnp.zeros((L, batch, h, p, n), jnp.float32),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(params: Params, cache: dict, tokens: jax.Array,
+                cfg: ModelConfig, spec=None, **_) -> tuple:
+    b = tokens.shape[0]
+    d_in, h, p, n, conv_ch = _dims(cfg)
+    hcur = AL.embed(tokens, params["embed"])          # (b, 1, d)
+
+    def scan_block(hh, sp):
+        lp, conv_st, ssm_st = sp
+        x = C.rmsnorm(hh, lp["ln"])
+        z = AL.gemm(x, lp["in_proj"], spec)
+        zg, xin, Bm, Cm, dt = _split_proj(z, cfg)
+        conv_in = jnp.concatenate([xin, Bm, Cm], -1)  # (b, 1, ch)
+        window = jnp.concatenate([conv_st, conv_in], axis=1)  # (b, w, ch)
+        conv_out = jax.nn.silu(
+            (window.astype(jnp.float32) *
+             lp["conv_w"].astype(jnp.float32)[None]).sum(1)
+            + lp["conv_b"].astype(jnp.float32))[:, None, :].astype(hh.dtype)
+        xin, Bm, Cm = jnp.split(conv_out, [d_in, d_in + NGROUPS * n], -1)
+        dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + lp["dt_bias"])
+        A = -jnp.exp(lp["A_log"])
+        da = jnp.exp(dt * A)                           # (b, h)
+        xh = xin.reshape(b, h, p).astype(jnp.float32)
+        Bh = jnp.repeat(Bm.reshape(b, NGROUPS, n), h // NGROUPS, axis=1)
+        Ch = jnp.repeat(Cm.reshape(b, NGROUPS, n), h // NGROUPS, axis=1)
+        new_state = ssm_st * da[..., None, None] + jnp.einsum(
+            "bh,bhp,bhn->bhpn", dt, xh, Bh)
+        y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch) + lp["D"][:, None] * xh
+        y = y.reshape(b, 1, d_in).astype(hh.dtype)
+        y = C.rmsnorm(y * jax.nn.silu(zg), lp["norm_gate"])
+        out = AL.gemm(y, lp["out_proj"], spec)
+        return hh + out, (window[:, 1:], new_state)
+
+    hcur, (conv_new, ssm_new) = jax.lax.scan(
+        scan_block, hcur,
+        (params["layers"], cache["conv"], cache["ssm"]))
+    hcur = C.rmsnorm(hcur, params["final_norm"])
+    logits = AL.gemm(hcur, params["lm_head"], spec)
+    return logits, {"conv": conv_new, "ssm": ssm_new,
+                    "length": cache["length"] + 1}
+
+
+def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig, spec=None,
+            max_len: int | None = None, **_) -> tuple:
+    """Run the chunked form over the prompt, carrying states into a cache."""
+    b, s = tokens.shape
+    hcur = AL.embed(tokens, params["embed"])
+
+    def scan_block(hh, lp):
+        out, final_state, conv_tail = block(hh, lp, cfg, spec)
+        return out, (final_state, conv_tail)
+
+    hcur, (ssm_states, conv_tails) = jax.lax.scan(scan_block, hcur,
+                                                  params["layers"])
+    hcur = C.rmsnorm(hcur[:, -1:], params["final_norm"])
+    logits = AL.gemm(hcur, params["lm_head"], spec)[:, 0]
+    cache = {"conv": conv_tails.astype(jnp.dtype(cfg.dtype)),
+             "ssm": ssm_states,
+             "length": jnp.asarray(s, jnp.int32)}
+    return logits, cache

@@ -1,0 +1,375 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local sliding-
+window attention, repeating pattern (recurrent, recurrent, local-attention)
+(arXiv:2402.19427).
+
+The RG-LRU is a gated linear recurrence h_t = a_t*h_{t-1} + sqrt(1-a_t^2)*
+(i_t*x_t) — evaluated with an associative scan (O(s) work, O(log s) depth)
+for training/prefill and a single fused update for decode.  Decode keeps an
+O(window) rolling KV cache for the attention blocks and O(1) state for the
+recurrences, which is what makes the long_500k cell runnable.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.approx import layers as AL
+from repro.configs.base import ModelConfig
+from repro.models import common as C
+from repro.sharding.ctx import hint
+
+Params = dict[str, Any]
+C_EXPONENT = 8.0  # RG-LRU exponent scale
+
+
+def _pattern(cfg: ModelConfig) -> tuple[int, int]:
+    """(n_super, n_tail_recurrent): layers = n_super*(2 rec + 1 attn) + tail
+    recurrent blocks."""
+    n_super = cfg.n_layers // 3
+    tail = cfg.n_layers - 3 * n_super
+    return n_super, tail
+
+
+def _rec_shapes(cfg: ModelConfig) -> dict[str, tuple]:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    return {
+        "ln": (d,),
+        "w_x": (d, w), "w_gate_br": (d, w),
+        "conv_w": (4, w), "conv_b": (w,),
+        "w_rg": (w, w), "w_in": (w, w),     # recurrence/input gates
+        "lam": (w,),                        # a = sigmoid(lam)
+        "w_out": (w, d),
+        "mln": (d,), "m_gate": (d, cfg.d_ff), "m_up": (d, cfg.d_ff),
+        "m_down": (cfg.d_ff, d),
+    }
+
+
+def _attn_shapes(cfg: ModelConfig) -> dict[str, tuple]:
+    d, hd = cfg.d_model, cfg.hd
+    return {
+        "ln": (d,),
+        "wq": (d, cfg.n_heads * hd), "wk": (d, cfg.n_kv_heads * hd),
+        "wv": (d, cfg.n_kv_heads * hd), "wo": (cfg.n_heads * hd, d),
+        "mln": (d,), "m_gate": (d, cfg.d_ff), "m_up": (d, cfg.d_ff),
+        "m_down": (cfg.d_ff, d),
+    }
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    n_super, tail = _pattern(cfg)
+    ks = C.split_keys(key, 6)
+
+    def init_block(k_, shapes, stack):
+        out = {}
+        kk = C.split_keys(k_, len(shapes))
+        for k2, (name, shp) in zip(kk, sorted(shapes.items())):
+            full = (*stack, *shp)
+            if name in ("ln", "mln", "conv_b"):
+                out[name] = jnp.zeros(full, dtype)
+            elif name == "lam":
+                # init a ~ uniform in [0.9, 0.999]: lam = logit(a^ (1/c))?
+                # standard RG-LRU init: lam such that a^c ~ U(0.9, 0.999)
+                u = jax.random.uniform(k2, full, jnp.float32, 0.9, 0.999)
+                out[name] = jnp.log(u / (1 - u))
+            else:
+                scale = (shp[-2] if len(shp) >= 2 else 1) ** -0.5
+                out[name] = (jax.random.normal(k2, full, jnp.float32)
+                             * scale).astype(dtype)
+        return out
+
+    p: Params = {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(dtype),
+        "rec": init_block(ks[1], _rec_shapes(cfg), (n_super, 2)),
+        "attn": init_block(ks[2], _attn_shapes(cfg), (n_super,)),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        "lm_head": C.dense_init(ks[3], cfg.d_model, cfg.vocab, dtype, 0.02),
+    }
+    if tail:
+        p["rec_tail"] = init_block(ks[4], _rec_shapes(cfg), (tail,))
+    return p
+
+
+# --- RG-LRU core --------------------------------------------------------------
+
+def _rglru_scan(x: jax.Array, a: jax.Array, init: jax.Array | None
+                ) -> tuple[jax.Array, jax.Array]:
+    """h_t = a_t * h_{t-1} + x_t via associative scan.  x, a (b, s, w)."""
+    if init is not None:
+        # fold the initial state into the first step
+        x = x.at[:, 0].add(a[:, 0] * init)
+
+    def combine(c1, c2):
+        a1, x1 = c1
+        a2, x2 = c2
+        return a1 * a2, x1 * a2 + x2
+
+    a_c, h = jax.lax.associative_scan(combine, (a, x), axis=1)
+    return h, h[:, -1]
+
+
+def rglru(x: jax.Array, rp, init_state: jax.Array | None = None):
+    """RG-LRU over a sequence.  x (b, s, w) post-conv branch input."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(AL.gemm(xf, rp["w_rg"]))
+    i = jax.nn.sigmoid(AL.gemm(xf, rp["w_in"]))
+    log_a = -C_EXPONENT * r * jax.nn.softplus(rp["lam"])   # log a_t <= 0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+    h, last = _rglru_scan(gated, a, init_state)
+    return h.astype(x.dtype), last
+
+
+def _recurrent_block(hstate, rp, cfg: ModelConfig, spec,
+                     conv_state=None, lru_state=None, decode=False):
+    x = C.rmsnorm(hstate, rp["ln"])
+    branch = AL.gemm(x, rp["w_x"], spec)
+    gate = jax.nn.gelu(AL.gemm(x, rp["w_gate_br"], spec))
+    if decode:
+        window = jnp.concatenate([conv_state, branch], axis=1)
+        conv = ((window.astype(jnp.float32)
+                 * rp["conv_w"].astype(jnp.float32)[None]).sum(1)
+                + rp["conv_b"].astype(jnp.float32))[:, None]
+        conv = conv.astype(hstate.dtype)
+        new_conv = window[:, 1:]
+        xf = conv[:, 0].astype(jnp.float32)
+        r = jax.nn.sigmoid(AL.gemm(xf, rp["w_rg"]))
+        i = jax.nn.sigmoid(AL.gemm(xf, rp["w_in"]))
+        a = jnp.exp(-C_EXPONENT * r * jax.nn.softplus(rp["lam"]))
+        new_lru = a * lru_state + jnp.sqrt(
+            jnp.maximum(1 - a * a, 1e-12)) * (i * xf)
+        lru_out = new_lru[:, None].astype(hstate.dtype)
+    else:
+        from repro.models.mamba2 import _causal_conv
+        conv = _causal_conv(branch, rp["conv_w"], rp["conv_b"])
+        lru_out, last = rglru(conv, rp, lru_state)
+        new_conv = branch[:, -3:]
+        new_lru = last
+    out = AL.gemm(lru_out * gate, rp["w_out"], spec)
+    hstate = hstate + out
+    x = C.rmsnorm(hstate, rp["mln"])
+    ff = _geglu(x, rp, spec)
+    return hstate + ff, new_conv, new_lru
+
+
+def _geglu(x, p, spec):
+    g = jax.nn.gelu(AL.gemm(x, p["m_gate"], spec))
+    u = AL.gemm(x, p["m_up"], spec)
+    return AL.gemm(g * u, p["m_down"], spec)
+
+
+def _attention_block(hstate, ap, cfg: ModelConfig, spec, positions):
+    b, s, d = hstate.shape
+    hd = cfg.hd
+    x = C.rmsnorm(hstate, ap["ln"])
+    q = AL.gemm(x, ap["wq"], spec).reshape(b, s, cfg.n_heads, hd)
+    k = AL.gemm(x, ap["wk"], spec).reshape(b, s, cfg.n_kv_heads, hd)
+    v = AL.gemm(x, ap["wv"], spec).reshape(b, s, cfg.n_kv_heads, hd)
+    q = C.apply_rope(q, positions, cfg.rope_theta)
+    k = C.apply_rope(k, positions, cfg.rope_theta)
+    from repro.models.attention import blockwise_attention
+    attn = blockwise_attention(q, k, v, cfg.attn_chunk, True, cfg.window)
+    hstate = hstate + AL.gemm(attn.reshape(b, s, -1), ap["wo"], spec)
+    x = C.rmsnorm(hstate, ap["mln"])
+    return hstate + _geglu(x, ap, spec)
+
+
+def forward(params: Params, tokens: jax.Array, cfg: ModelConfig, spec=None,
+            **_) -> tuple:
+    b, s = tokens.shape
+    h = AL.embed(tokens, params["embed"])
+    h = hint(h, "batch", None, None)
+    positions = jnp.arange(s)[None, :]
+
+    def superblock(hh, sp):
+        rp2, ap = sp
+
+        # scan over the 2 recurrent blocks
+        def rec_step(h2, rp):
+            out, _, _ = C.maybe_remat(
+                lambda a, b_: _recurrent_block(a, b_, cfg, spec),
+                cfg.remat)(h2, rp)
+            return out, None
+
+        hh, _ = jax.lax.scan(rec_step, hh, rp2)
+        hh = C.maybe_remat(
+            lambda a, b_: _attention_block(a, b_, cfg, spec, positions),
+            cfg.remat)(hh, ap)
+        return hh, None
+
+    h, _ = jax.lax.scan(superblock, h, (params["rec"], params["attn"]))
+    if "rec_tail" in params:
+        def rec_step2(h2, rp):
+            out, _, _ = _recurrent_block(h2, rp, cfg, spec)
+            return out, None
+        h, _ = jax.lax.scan(rec_step2, h, params["rec_tail"])
+
+    h = C.rmsnorm(h, params["final_norm"])
+    logits = AL.gemm(h, params["lm_head"], spec)
+    return hint(logits, "batch", None, "vocab"), 0.0
+
+
+# --- serving -------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int = 0, dtype=None
+               ) -> dict:
+    """O(window) attention cache + O(1) recurrent state (long_500k-safe)."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    n_super, tail = _pattern(cfg)
+    w = cfg.lru_width or cfg.d_model
+    win = cfg.window
+    cache = {
+        "rec_conv": jnp.zeros((n_super, 2, batch, 3, w), dtype),
+        "rec_lru": jnp.zeros((n_super, 2, batch, w), jnp.float32),
+        "att_k": jnp.zeros((n_super, batch, win, cfg.n_kv_heads, cfg.hd),
+                           dtype),
+        "att_v": jnp.zeros((n_super, batch, win, cfg.n_kv_heads, cfg.hd),
+                           dtype),
+        "length": jnp.zeros((), jnp.int32),
+    }
+    if tail:
+        cache["tail_conv"] = jnp.zeros((tail, batch, 3, w), dtype)
+        cache["tail_lru"] = jnp.zeros((tail, batch, w), jnp.float32)
+    return cache
+
+
+def decode_step(params: Params, cache: dict, tokens: jax.Array,
+                cfg: ModelConfig, spec=None, **_) -> tuple:
+    b = tokens.shape[0]
+    h = AL.embed(tokens, params["embed"])
+    length = cache["length"]
+    win = cfg.window
+
+    def attn_decode(hh, ap, ck, cv):
+        x = C.rmsnorm(hh, ap["ln"])
+        hd = cfg.hd
+        pos = jnp.full((b, 1), length, jnp.int32)
+        q = AL.gemm(x, ap["wq"], spec).reshape(b, 1, cfg.n_heads, hd)
+        k = AL.gemm(x, ap["wk"], spec).reshape(b, 1, cfg.n_kv_heads, hd)
+        v = AL.gemm(x, ap["wv"], spec).reshape(b, 1, cfg.n_kv_heads, hd)
+        q = C.apply_rope(q, pos, cfg.rope_theta)
+        k = C.apply_rope(k, pos, cfg.rope_theta)
+        slot = jnp.mod(length, win)
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype),
+                                                 slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype),
+                                                 slot, axis=1)
+        # rolling-window validity: all slots valid once length >= win
+        n_valid = jnp.minimum(length + 1, win)
+        attn = C.decode_attention(q, ck, cv, jnp.full((b,), 0, jnp.int32)
+                                  + n_valid)
+        hh = hh + AL.gemm(attn.reshape(b, 1, -1), ap["wo"], spec)
+        x = C.rmsnorm(hh, ap["mln"])
+        return hh + _geglu(x, ap, spec), ck, cv
+
+    def superblock(hh, sp):
+        rp2, ap, rc, rl, ck, cv = sp
+
+        def rec_step(h2, inner):
+            rp, conv_st, lru_st = inner
+            out, nc, nl = _recurrent_block(h2, rp, cfg, spec, conv_st,
+                                           lru_st, decode=True)
+            return out, (nc, nl)
+
+        hh, (rc, rl) = jax.lax.scan(rec_step, hh, (rp2, rc, rl))
+        hh, ck, cv = attn_decode(hh, ap, ck, cv)
+        return hh, (rc, rl, ck, cv)
+
+    h, (rc, rl, ck, cv) = jax.lax.scan(
+        superblock, h,
+        (params["rec"], params["attn"], cache["rec_conv"],
+         cache["rec_lru"], cache["att_k"], cache["att_v"]))
+
+    new_cache = dict(cache, rec_conv=rc, rec_lru=rl, att_k=ck, att_v=cv,
+                     length=length + 1)
+    if "rec_tail" in params:
+        def rec_step2(h2, inner):
+            rp, conv_st, lru_st = inner
+            out, nc, nl = _recurrent_block(h2, rp, cfg, spec, conv_st,
+                                           lru_st, decode=True)
+            return out, (nc, nl)
+        h, (tc, tl) = jax.lax.scan(
+            rec_step2, h,
+            (params["rec_tail"], cache["tail_conv"], cache["tail_lru"]))
+        new_cache["tail_conv"] = tc
+        new_cache["tail_lru"] = tl
+
+    h = C.rmsnorm(h, params["final_norm"])
+    logits = AL.gemm(h, params["lm_head"], spec)
+    return logits, new_cache
+
+
+def _rolling_slots(s: int, win: int) -> tuple[jax.Array, jax.Array]:
+    """Map rolling-cache slots -> absolute positions after s prefilled
+    tokens; invalid slots marked."""
+    slots = jnp.arange(win)
+    pos = (s - 1) - jnp.mod((s - 1) - slots, win)
+    valid = (pos >= 0) & (pos > s - 1 - win)
+    return pos, valid
+
+
+def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig, spec=None,
+            max_len: int | None = None, **_) -> tuple:
+    """Full-sequence pass capturing decode state: final RG-LRU states, conv
+    tails, and the last-`window` KV laid out in rolling-slot order so
+    decode_step continues seamlessly at absolute position s."""
+    b, s = tokens.shape
+    h = AL.embed(tokens, params["embed"])
+    positions = jnp.arange(s)[None, :]
+    win = cfg.window
+    pos_map, valid = _rolling_slots(s, win)
+    pos_map_c = jnp.maximum(pos_map, 0)
+
+    def attn_collect(hh, ap):
+        bsz, ss, d = hh.shape
+        hd = cfg.hd
+        x = C.rmsnorm(hh, ap["ln"])
+        q = AL.gemm(x, ap["wq"], spec).reshape(bsz, ss, cfg.n_heads, hd)
+        k = AL.gemm(x, ap["wk"], spec).reshape(bsz, ss, cfg.n_kv_heads, hd)
+        v = AL.gemm(x, ap["wv"], spec).reshape(bsz, ss, cfg.n_kv_heads, hd)
+        q = C.apply_rope(q, positions, cfg.rope_theta)
+        k = C.apply_rope(k, positions, cfg.rope_theta)
+        from repro.models.attention import blockwise_attention
+        attn = blockwise_attention(q, k, v, cfg.attn_chunk, True, win)
+        hh = hh + AL.gemm(attn.reshape(bsz, ss, -1), ap["wo"], spec)
+        x = C.rmsnorm(hh, ap["mln"])
+        hh = hh + _geglu(x, ap, spec)
+        ck = jnp.where(valid[None, :, None, None], k[:, pos_map_c], 0)
+        cv = jnp.where(valid[None, :, None, None], v[:, pos_map_c], 0)
+        return hh, ck.astype(jnp.dtype(cfg.dtype)), \
+            cv.astype(jnp.dtype(cfg.dtype))
+
+    def superblock(hh, sp):
+        rp2, ap = sp
+
+        def rec_step(h2, rp):
+            out, conv_tail, lru_last = _recurrent_block(h2, rp, cfg, spec)
+            return out, (conv_tail, lru_last)
+
+        hh, (rc, rl) = jax.lax.scan(rec_step, hh, rp2)
+        hh, ck, cv = attn_collect(hh, ap)
+        return hh, (rc, rl, ck, cv)
+
+    h, (rc, rl, ck, cv) = jax.lax.scan(superblock, h,
+                                       (params["rec"], params["attn"]))
+    cache = {
+        "rec_conv": rc.astype(jnp.dtype(cfg.dtype)), "rec_lru": rl,
+        "att_k": ck, "att_v": cv,
+        "length": jnp.asarray(s, jnp.int32),
+    }
+    if "rec_tail" in params:
+        def rec_step2(h2, rp):
+            out, conv_tail, lru_last = _recurrent_block(h2, rp, cfg, spec)
+            return out, (conv_tail, lru_last)
+        h, (tc, tl) = jax.lax.scan(rec_step2, h, params["rec_tail"])
+        cache["tail_conv"] = tc.astype(jnp.dtype(cfg.dtype))
+        cache["tail_lru"] = tl
+
+    h = C.rmsnorm(h[:, -1:], params["final_norm"])
+    logits = AL.gemm(h, params["lm_head"], spec)[:, 0]
+    return logits, cache

@@ -1,0 +1,418 @@
+"""Decoder-only transformer LM: dense, MoE, and vision-cross-attention
+variants (tinyllama / qwen1.5 / starcoder2 / mistral-large / grok-1 /
+llama4-maverick / llama-3.2-vision).
+
+Layer-stacked parameters + lax.scan over layers (compile-time stays flat in
+depth: mistral-large's 88 layers lower as one scanned block).  For VLM, the
+scan unit is a superblock of `cross_every` self-attention layers followed by
+one cross-attention layer, so the 3:1 interleave is exact without per-layer
+branching.
+
+All projections route through the approximate-GEMM layer (`spec`).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.approx import layers as AL
+from repro.configs.base import ModelConfig
+from repro.models import common as C
+from repro.models.moe import moe_ffn
+from repro.sharding.ctx import hint
+
+Params = dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _layer_param_shapes(cfg: ModelConfig, moe: bool | None = None
+                        ) -> dict[str, tuple]:
+    """moe=None: follow cfg.is_moe for every layer; True/False pin the
+    layer kind (for interleaved dense/MoE stacks)."""
+    d, hd = cfg.d_model, cfg.hd
+    h, kv, f = cfg.n_heads, cfg.n_kv_heads, cfg.d_ff
+    moe = cfg.is_moe if moe is None else moe
+    shapes = {
+        "ln1": (d,), "ln2": (d,),
+        "wq": (d, h * hd), "wk": (d, kv * hd), "wv": (d, kv * hd),
+        "wo": (h * hd, d),
+    }
+    if cfg.qkv_bias:
+        shapes |= {"bq": (h * hd,), "bk": (kv * hd,), "bv": (kv * hd,)}
+    if moe:
+        e = cfg.n_experts
+        shapes |= {"router": (d, e), "we_gate": (e, d, f),
+                   "we_up": (e, d, f), "we_down": (e, f, d)}
+        if cfg.shared_expert:
+            shapes |= {"ws_gate": (d, f), "ws_up": (d, f), "ws_down": (f, d)}
+    else:
+        fd = (cfg.d_ff_dense or f) if cfg.is_moe else f
+        if cfg.mlp_style == "swiglu":
+            shapes |= {"w_gate": (d, fd), "w_up": (d, fd), "w_down": (fd, d)}
+        else:
+            shapes |= {"w_up": (d, fd), "w_down": (fd, d),
+                       "mb_up": (fd,), "mb_down": (d,)}
+    return shapes
+
+
+def _cross_param_shapes(cfg: ModelConfig) -> dict[str, tuple]:
+    d, hd = cfg.d_model, cfg.hd
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    return {"xln": (d,), "xln_kv": (d,),
+            "xwq": (d, h * hd), "xwk": (d, kv * hd), "xwv": (d, kv * hd),
+            "xwo": (h * hd, d), "xgate": (1,)}
+
+
+def _init_stack(key, shapes: dict[str, tuple], stack: tuple[int, ...],
+                dtype) -> Params:
+    out = {}
+    keys = C.split_keys(key, len(shapes))
+    for k_, (name, shp) in zip(keys, sorted(shapes.items())):
+        full = (*stack, *shp)
+        if name.startswith(("ln", "xln", "b", "mb", "xgate")):
+            out[name] = jnp.zeros(full, dtype)
+        else:
+            scale = shp[-2] ** -0.5 if len(shp) >= 2 else 0.02
+            out[name] = (jax.random.normal(k_, full, jnp.float32) * scale
+                         ).astype(dtype)
+    return out
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    k_emb, k_layers, k_cross, k_head = jax.random.split(key, 4)
+    p: Params = {
+        "embed": (jax.random.normal(k_emb, (cfg.vocab, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if cfg.cross_every:
+        assert not (cfg.is_moe and cfg.moe_every > 1)
+        n_super = cfg.n_layers // cfg.cross_every
+        p["layers"] = _init_stack(k_layers, _layer_param_shapes(cfg),
+                                  (n_super, cfg.cross_every), dtype)
+        p["cross"] = _init_stack(k_cross, _cross_param_shapes(cfg),
+                                 (n_super,), dtype)
+    elif cfg.is_moe and cfg.moe_every > 1:
+        # interleaved dense/MoE: superblock = (moe_every-1) dense + 1 MoE
+        n_super = cfg.n_layers // cfg.moe_every
+        k_d, k_m = jax.random.split(k_layers)
+        p["layers"] = _init_stack(
+            k_d, _layer_param_shapes(cfg, moe=False),
+            (n_super, cfg.moe_every - 1), dtype)
+        p["moe"] = _init_stack(k_m, _layer_param_shapes(cfg, moe=True),
+                               (n_super,), dtype)
+    else:
+        p["layers"] = _init_stack(k_layers, _layer_param_shapes(cfg),
+                                  (cfg.n_layers,), dtype)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = C.dense_init(k_head, cfg.d_model, cfg.vocab, dtype,
+                                    scale=0.02)
+    return p
+
+
+# --------------------------------------------------------------------------
+# blocks
+# --------------------------------------------------------------------------
+
+def _qkv(h, lp, cfg: ModelConfig, spec, positions):
+    b, s, d = h.shape
+    hd = cfg.hd
+    q = AL.dense(h, lp["wq"], lp.get("bq"), spec).reshape(
+        b, s, cfg.n_heads, hd)
+    k = AL.dense(h, lp["wk"], lp.get("bk"), spec).reshape(
+        b, s, cfg.n_kv_heads, hd)
+    v = AL.dense(h, lp["wv"], lp.get("bv"), spec).reshape(
+        b, s, cfg.n_kv_heads, hd)
+    q = C.apply_rope(q, positions, cfg.rope_theta)
+    k = C.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _ffn(h, lp, cfg: ModelConfig, spec):
+    if "router" in lp:
+        b, s, d = h.shape
+        out, aux = moe_ffn(h.reshape(b * s, d), lp["router"], lp["we_gate"],
+                           lp["we_up"], lp["we_down"], cfg.top_k,
+                           cfg.capacity_factor, spec)
+        out = out.reshape(b, s, d)
+        if cfg.shared_expert:
+            out = out + C.swiglu(h, lp["ws_gate"], lp["ws_up"],
+                                 lp["ws_down"], spec)
+        return out, aux
+    if "w_gate" in lp:
+        return C.swiglu(h, lp["w_gate"], lp["w_up"], lp["w_down"], spec), 0.0
+    return C.gelu_mlp(h, lp["w_up"], lp["mb_up"], lp["w_down"],
+                      lp["mb_down"], spec), 0.0
+
+
+def decoder_block(h, lp, cfg: ModelConfig, spec, positions):
+    """Standard pre-norm block; returns (h, aux)."""
+    x = C.rmsnorm(h, lp["ln1"])
+    q, k, v = _qkv(x, lp, cfg, spec, positions)
+    attn = C.attention(q, k, v, impl=cfg.attn_impl, chunk=cfg.attn_chunk,
+                       causal=True, window=0)
+    attn = hint(attn, "batch", None, "heads", None)
+    h = h + AL.dense(attn.reshape(*h.shape[:2], -1), lp["wo"], None, spec)
+    x = C.rmsnorm(h, lp["ln2"])
+    ff, aux = _ffn(x, lp, cfg, spec)
+    h = h + ff
+    return hint(h, "batch", None, None), aux
+
+
+def cross_block(h, xp, img, cfg: ModelConfig, spec):
+    """Gated cross-attention to image embeddings (llama-3.2-vision style)."""
+    x = C.rmsnorm(h, xp["xln"])
+    b, s, d = x.shape
+    hd = cfg.hd
+    q = AL.gemm(x, xp["xwq"], spec).reshape(b, s, cfg.n_heads, hd)
+    ikv = C.rmsnorm(img, xp["xln_kv"])
+    k = AL.gemm(ikv, xp["xwk"], spec).reshape(b, -1, cfg.n_kv_heads, hd)
+    v = AL.gemm(ikv, xp["xwv"], spec).reshape(b, -1, cfg.n_kv_heads, hd)
+    from repro.models.attention import blockwise_attention
+    attn = C.naive_attention(q, k, v, causal=False) \
+        if img.shape[1] * s <= 1 << 20 else blockwise_attention(
+            q, k, v, cfg.attn_chunk, False, 0)
+    o = AL.gemm(attn.reshape(b, s, -1), xp["xwo"], spec)
+    return h + jnp.tanh(xp["xgate"]).astype(h.dtype) * o
+
+
+# --------------------------------------------------------------------------
+# forward (training)
+# --------------------------------------------------------------------------
+
+def forward(params: Params, tokens: jax.Array, cfg: ModelConfig,
+            spec=None, img_embeds: jax.Array | None = None) -> tuple:
+    """tokens (b, s) -> (logits (b, s, v), aux_loss)."""
+    b, s = tokens.shape
+    h = AL.embed(tokens, params["embed"])
+    h = hint(h, "batch", None, None)
+    positions = jnp.arange(s)[None, :]
+
+    def block(h, lp):
+        return decoder_block(h, lp, cfg, spec, positions)
+
+    if cfg.cross_every:
+        img = img_embeds if img_embeds is not None else jnp.zeros(
+            (b, cfg.n_img_tokens, cfg.d_model), h.dtype)
+
+        def superblock(carry, sp):
+            h, aux = carry
+            lp, xp = sp
+
+            def inner(carry2, lp_i):
+                h2, a2 = carry2
+                h2, ai = C.maybe_remat(block, cfg.remat)(h2, lp_i)
+                return (h2, a2 + ai), None
+
+            (h, aux), _ = jax.lax.scan(inner, (h, aux), lp)
+            h = C.maybe_remat(
+                lambda hh, xx: cross_block(hh, xx, img, cfg, spec),
+                cfg.remat)(h, xp)
+            return (h, aux), None
+
+        (h, aux), _ = jax.lax.scan(superblock, (h, 0.0),
+                                   (params["layers"], params["cross"]))
+    elif "moe" in params:
+        def superblock_moe(carry, sp):
+            h, aux = carry
+            lp_dense, lp_moe = sp
+
+            def inner(carry2, lp_i):
+                h2, a2 = carry2
+                h2, ai = C.maybe_remat(block, cfg.remat)(h2, lp_i)
+                return (h2, a2 + ai), None
+
+            (h, aux), _ = jax.lax.scan(inner, (h, aux), lp_dense)
+            h, ai = C.maybe_remat(block, cfg.remat)(h, lp_moe)
+            return (h, aux + ai), None
+
+        (h, aux), _ = jax.lax.scan(superblock_moe, (h, 0.0),
+                                   (params["layers"], params["moe"]))
+    else:
+        def scan_block(carry, lp):
+            h, aux = carry
+            h, ai = C.maybe_remat(block, cfg.remat)(h, lp)
+            return (h, aux + ai), None
+
+        (h, aux), _ = jax.lax.scan(scan_block, (h, 0.0), params["layers"])
+
+    h = C.rmsnorm(h, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = AL.gemm(h, head, spec)
+    logits = hint(logits, "batch", None, "vocab")
+    return logits, aux
+
+
+# --------------------------------------------------------------------------
+# serving: prefill + decode with KV cache
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None
+               ) -> dict:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    if cfg.cross_every:
+        n_super = cfg.n_layers // cfg.cross_every
+        shape = (n_super, cfg.cross_every, batch, max_len, kv, hd)
+    elif cfg.is_moe and cfg.moe_every > 1:
+        n_super = cfg.n_layers // cfg.moe_every
+        shape = (n_super, cfg.moe_every, batch, max_len, kv, hd)
+    else:
+        shape = (cfg.n_layers, batch, max_len, kv, hd)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def _decode_block(h, lp, ck, cv, length, cfg: ModelConfig, spec):
+    """Single-token block against cache slices ck/cv (b, smax, kv, hd)."""
+    b = h.shape[0]
+    x = C.rmsnorm(h, lp["ln1"])
+    pos = jnp.full((b, 1), length, jnp.int32)
+    q, k, v = _qkv(x, lp, cfg, spec, pos)
+    ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), length,
+                                             axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), length,
+                                             axis=1)
+    lens = jnp.full((b,), length + 1, jnp.int32)
+    attn = C.decode_attention(q, ck, cv, lens)
+    h = h + AL.dense(attn.reshape(b, 1, -1), lp["wo"], None, spec)
+    x = C.rmsnorm(h, lp["ln2"])
+    ff, _ = _ffn(x, lp, cfg, spec)
+    return h + ff, ck, cv
+
+
+def decode_step(params: Params, cache: dict, tokens: jax.Array,
+                cfg: ModelConfig, spec=None,
+                img_embeds: jax.Array | None = None) -> tuple:
+    """tokens (b, 1) -> (logits (b, 1, v), updated cache)."""
+    b = tokens.shape[0]
+    h = AL.embed(tokens, params["embed"])
+    length = cache["length"]
+
+    if cfg.cross_every:
+        img = img_embeds if img_embeds is not None else jnp.zeros(
+            (b, cfg.n_img_tokens, cfg.d_model), h.dtype)
+
+        def superblock(h, sp):
+            lp, xp, ck_s, cv_s = sp
+
+            def inner(h2, inner_sp):
+                lp_i, ck, cv = inner_sp
+                h2, ck, cv = _decode_block(h2, lp_i, ck, cv, length, cfg,
+                                           spec)
+                return h2, (ck, cv)
+
+            h, (ck_s, cv_s) = jax.lax.scan(inner, h, (lp, ck_s, cv_s))
+            h = cross_block(h, xp, img, cfg, spec)
+            return h, (ck_s, cv_s)
+
+        h, (ck, cv) = jax.lax.scan(
+            superblock, h,
+            (params["layers"], params["cross"], cache["k"], cache["v"]))
+    elif "moe" in params:
+        m = cfg.moe_every
+
+        def superblock_moe(h, sp):
+            lp_dense, lp_moe, ck_s, cv_s = sp
+
+            def inner(h2, inner_sp):
+                lp_i, ck, cv = inner_sp
+                h2, ck, cv = _decode_block(h2, lp_i, ck, cv, length, cfg,
+                                           spec)
+                return h2, (ck, cv)
+
+            h, (ck_d, cv_d) = jax.lax.scan(
+                inner, h, (lp_dense, ck_s[:m - 1], cv_s[:m - 1]))
+            h, ck_m, cv_m = _decode_block(h, lp_moe, ck_s[m - 1],
+                                          cv_s[m - 1], length, cfg, spec)
+            return h, (jnp.concatenate([ck_d, ck_m[None]], 0),
+                       jnp.concatenate([cv_d, cv_m[None]], 0))
+
+        h, (ck, cv) = jax.lax.scan(
+            superblock_moe, h,
+            (params["layers"], params["moe"], cache["k"], cache["v"]))
+    else:
+        def scan_block(h, sp):
+            lp, ck, cv = sp
+            h, ck, cv = _decode_block(h, lp, ck, cv, length, cfg, spec)
+            return h, (ck, cv)
+
+        h, (ck, cv) = jax.lax.scan(
+            scan_block, h, (params["layers"], cache["k"], cache["v"]))
+
+    h = C.rmsnorm(h, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = AL.gemm(h, head, spec)
+    new_cache = {"k": ck, "v": cv, "length": length + 1}
+    return logits, new_cache
+
+
+def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig, spec=None,
+            max_len: int | None = None,
+            img_embeds: jax.Array | None = None) -> tuple:
+    """tokens (b, s) -> (logits of last position (b, v), cache)."""
+    b, s = tokens.shape
+    max_len = max_len or s
+    h = AL.embed(tokens, params["embed"])
+    positions = jnp.arange(s)[None, :]
+
+    def block_collect(h, lp):
+        x = C.rmsnorm(h, lp["ln1"])
+        q, k, v = _qkv(x, lp, cfg, spec, positions)
+        attn = C.attention(q, k, v, impl=cfg.attn_impl, chunk=cfg.attn_chunk)
+        h = h + AL.dense(attn.reshape(b, s, -1), lp["wo"], None, spec)
+        x = C.rmsnorm(h, lp["ln2"])
+        ff, _ = _ffn(x, lp, cfg, spec)
+        return h + ff, (k, v)
+
+    img = None
+    if cfg.cross_every:
+        img = img_embeds if img_embeds is not None else jnp.zeros(
+            (b, cfg.n_img_tokens, cfg.d_model), h.dtype)
+
+        def superblock(h, sp):
+            lp, xp = sp
+            h, kvs = jax.lax.scan(
+                lambda h2, lp_i: block_collect(h2, lp_i), h, lp)
+            h = cross_block(h, xp, img, cfg, spec)
+            return h, kvs
+
+        h, (ks, vs) = jax.lax.scan(superblock, h,
+                                   (params["layers"], params["cross"]))
+    elif "moe" in params:
+        def superblock_moe(h, sp):
+            lp_dense, lp_moe = sp
+            h, (kd, vd) = jax.lax.scan(block_collect, h, lp_dense)
+            h, (km, vm) = block_collect(h, lp_moe)
+            return h, (jnp.concatenate([kd, km[None]], 0),
+                       jnp.concatenate([vd, vm[None]], 0))
+
+        h, (ks, vs) = jax.lax.scan(superblock_moe, h,
+                                   (params["layers"], params["moe"]))
+    else:
+        h, (ks, vs) = jax.lax.scan(block_collect, h, params["layers"])
+
+    h = C.rmsnorm(h[:, -1:], params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = AL.gemm(h, head, spec)[:, 0]
+
+    pad = max_len - s
+    if pad > 0:
+        widths = [(0, 0)] * ks.ndim
+        widths[-3] = (0, pad)
+        ks = jnp.pad(ks, widths)
+        vs = jnp.pad(vs, widths)
+    cache = {"k": ks.astype(jnp.dtype(cfg.dtype)),
+             "v": vs.astype(jnp.dtype(cfg.dtype)),
+             "length": jnp.asarray(s, jnp.int32)}
+    return logits, cache

@@ -1,0 +1,278 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+HLO_FLOPs / HLO_bytes come from compiled.cost_analysis(); collective bytes
+are parsed out of the post-SPMD optimized HLO text (operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute),
+per the brief.  Hardware constants: TPU v5e-class chip.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+# --- hardware constants (TPU v5e-class target) -------------------------------
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_LINK_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+# matches e.g.  f32[16,4096,128]{2,1,0}  or  bf16[]  (scalars)
+_TYPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+# an HLO instruction line:  %name = TYPE kind(args...)
+_INSTR_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(([^)]*)\)")
+
+
+def _type_bytes(dtype: str, dims: str) -> int:
+    nbytes = _DTYPE_BYTES.get(dtype)
+    if nbytes is None:
+        return 0
+    numel = 1
+    if dims:
+        for d in dims.split(","):
+            numel *= int(d)
+    return numel * nbytes
+
+
+def parse_collectives(hlo_text: str) -> dict[str, int]:
+    """Sum operand bytes per collective kind from optimized HLO text."""
+    out: dict[str, int] = {k: 0 for k in COLLECTIVE_KINDS}
+    for m in _INSTR_RE.finditer(hlo_text):
+        kind, args = m.group(1), m.group(2)
+        total = 0
+        for tm in _TYPE_RE.finditer(args):
+            total += _type_bytes(tm.group(1), tm.group(2))
+        out[kind] += total
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    flops: float                   # whole-program HLO flops
+    hbm_bytes: float               # whole-program bytes accessed
+    collective_bytes: float        # summed collective operand bytes
+    collectives: dict              # per-kind bytes
+    chips: int
+    model_flops: float             # 6*N*D (or inference analogue)
+    # Pallas-kernel deployment model: traffic of vmem_kernel-tagged scopes
+    # (materialized by the XLA-CPU lowering, VMEM-resident in the Mosaic
+    # kernel) and the kernel's true HBM I/O to swap in instead.
+    tagged_bytes: float = 0.0
+    kernel_io_bytes: float = 0.0
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / (self.chips * PEAK_FLOPS_BF16)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / (self.chips * HBM_BW)
+
+    @property
+    def hbm_bytes_kernel_adj(self) -> float:
+        """HBM bytes with tagged scopes replaced by Pallas-kernel I/O."""
+        return max(self.hbm_bytes - self.tagged_bytes, 0.0) + \
+            self.kernel_io_bytes
+
+    @property
+    def memory_kernel_adj_s(self) -> float:
+        return self.hbm_bytes_kernel_adj / (self.chips * HBM_BW)
+
+    @property
+    def roofline_fraction_kernel_adj(self) -> float:
+        ideal = self.model_flops / (self.chips * PEAK_FLOPS_BF16)
+        worst = max(self.compute_s, self.memory_kernel_adj_s,
+                    self.collective_s)
+        return ideal / worst if worst > 0 else 0.0
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / (self.chips * ICI_LINK_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs: <1 means remat/overhead; >1 means the
+        compiler sees fewer flops than the analytic model (e.g. int8)."""
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute fraction of the step's roofline-limited time:
+        model_flops/(chips*peak) / max(term)."""
+        ideal = self.model_flops / (self.chips * PEAK_FLOPS_BF16)
+        worst = max(self.compute_s, self.memory_s, self.collective_s)
+        return ideal / worst if worst > 0 else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes,
+            "collectives": dict(self.collectives), "chips": self.chips,
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "tagged_bytes": self.tagged_bytes,
+            "kernel_io_bytes": self.kernel_io_bytes,
+            "memory_kernel_adj_s": self.memory_kernel_adj_s,
+            "roofline_fraction_kernel_adj":
+                self.roofline_fraction_kernel_adj,
+        }
+
+
+def model_flops_for_cell(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS for one step of a cell.
+
+    train:   6 * N_active * tokens          (fwd+bwd)
+    prefill: 2 * N_active * tokens
+    decode:  2 * N_active * batch           (one token per sequence)
+    """
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch
+
+
+def kernel_io_bytes_for_cell(cfg, shape) -> float:
+    """Analytic HBM I/O of the Pallas attention kernels for one step
+    (q/k/v or cache reads + out writes, x passes: fwd / remat / bwd)."""
+    if cfg.family == "ssm":
+        return 0.0
+    b, s = shape.global_batch, shape.seq_len
+    hd = cfg.hd
+    if cfg.family == "hybrid":
+        n_attn = cfg.n_layers // 3
+        s_kv = min(s, cfg.window)
+    else:
+        n_attn = cfg.n_layers + cfg.n_enc_layers
+        s_kv = s
+    if shape.kind == "decode":
+        # fused decode attention streams the KV cache once per layer
+        cache = 2 * b * s_kv * cfg.n_kv_heads * hd * 2
+        return n_attn * cache
+    qo = b * s * cfg.n_heads * hd * 2
+    kv = 2 * b * s * cfg.n_kv_heads * hd * 2
+    passes = 4.0 if shape.kind == "train" else 2.0
+    return n_attn * passes * (2 * qo + kv)
+
+
+def terms_from_compiled(compiled, cfg, shape, chips: int) -> RooflineTerms:
+    """Preferred path: the while-aware HLO module analyzer (hlo_parse.py).
+    XLA's cost_analysis undercounts scanned layers (bodies counted once) —
+    it is recorded in the dry-run JSON for cross-checking only."""
+    from repro.roofline import hlo_parse
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = ""
+    stats = hlo_parse.analyze_module(hlo)
+    # the SPMD-partitioned module is per-device; the roofline formulas want
+    # whole-program totals (they divide by `chips` again)
+    return RooflineTerms(
+        flops=stats.flops * chips, hbm_bytes=stats.traffic_bytes * chips,
+        collective_bytes=stats.collective_bytes * chips,
+        collectives={k: v * chips for k, v in stats.collectives.items()},
+        chips=chips, model_flops=model_flops_for_cell(cfg, shape),
+        tagged_bytes=stats.tagged_traffic_bytes * chips,
+        kernel_io_bytes=kernel_io_bytes_for_cell(cfg, shape))
+
+
+def analytic_memory_per_device(cfg, shape, mesh_shape: dict,
+                               accum: int = 1, fsdp: bool | None = None,
+                               moment_bytes: float = 8.0) -> dict:
+    """TPU-side per-device memory estimate (bytes).
+
+    The CPU-backend compile inflates temp memory by materializing f32 copies
+    of bf16 layer-stacked saves (XLA-CPU computes bf16 in f32 and hoists the
+    converts); TPUs have native bf16, so this analytic model is the honest
+    HBM estimate that accompanies the raw memory_analysis() numbers.
+    """
+    model_par = mesh_shape.get("model", 1)
+    dp = 1
+    for ax in ("pod", "data"):
+        dp *= mesh_shape.get(ax, 1)
+    n = cfg.param_count()
+    if fsdp is None:
+        fsdp = n >= 20e9
+    wshard = model_par * (dp if fsdp else 1)
+    params = 2.0 * n / wshard
+    grads = 2.0 * n / wshard
+    moments = moment_bytes * n / wshard
+    out = {"params": params, "grads": 0.0, "opt": 0.0, "activations": 0.0,
+           "cache": 0.0, "logits": 0.0}
+    if shape.kind == "train":
+        mb_local = max(shape.global_batch // dp // accum, 1)
+        out["grads"] = grads
+        out["opt"] = moments
+        out["activations"] = (cfg.n_layers * mb_local * shape.seq_len
+                              * cfg.d_model * 2.0)
+        out["logits"] = (mb_local * shape.seq_len
+                         * max(cfg.vocab // model_par, 1) * 4.0)
+    elif shape.kind == "prefill":
+        b_local = max(shape.global_batch // dp, 1)
+        out["activations"] = (b_local * shape.seq_len * cfg.d_model * 2.0
+                              * 4)
+        out["cache"] = (cfg.n_layers * b_local * shape.seq_len
+                        * cfg.n_kv_heads * cfg.hd * 2 * 2.0)
+    else:  # decode
+        b_local = max(shape.global_batch // dp, 1)
+        if cfg.family == "ssm":
+            d_in = cfg.ssm_expand * cfg.d_model
+            h = cfg.ssm_heads or 32
+            p = d_in // h
+            out["cache"] = cfg.n_layers * b_local * (
+                h * p * cfg.ssm_state * 4.0 + 3 * (d_in + 2 * cfg.ssm_state))
+        elif cfg.family == "hybrid":
+            n_attn = cfg.n_layers // 3
+            w = cfg.lru_width or cfg.d_model
+            out["cache"] = (n_attn * b_local * cfg.window * cfg.n_kv_heads
+                            * cfg.hd * 2 * 2.0
+                            + cfg.n_layers * b_local * w * 6.0)
+        else:
+            kvshard = model_par if (cfg.n_kv_heads * cfg.hd) % model_par \
+                == 0 else 1
+            out["cache"] = (cfg.n_layers * b_local * shape.seq_len
+                            * cfg.n_kv_heads * cfg.hd * 2 * 2.0 / kvshard)
+    out["total"] = sum(v for k, v in out.items())
+    return out
+
+
+def memory_summary(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        val = getattr(ma, attr, None)
+        if val is not None:
+            out[attr] = int(val)
+    return out

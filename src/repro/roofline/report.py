@@ -1,0 +1,119 @@
+"""Render the dry-run JSON into the EXPERIMENTS.md roofline tables.
+
+  PYTHONPATH=src python -m repro.roofline.report dryrun_results.json
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def _fmt(v: float) -> str:
+    if v == 0:
+        return "0"
+    if v >= 1e4 or v < 1e-3:
+        return f"{v:.2e}"
+    return f"{v:.3f}"
+
+
+def roofline_table(results: list[dict], mesh: str = "single") -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | bottleneck"
+        " | MODEL/HLO flops | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in results:
+        if r["mesh"] != mesh:
+            continue
+        if r.get("skip_reason"):
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | *skipped* |"
+                f" — | — |")
+            continue
+        if not r["ok"]:
+            lines.append(f"| {r['arch']} | {r['shape']} | FAILED: "
+                         f"{r['error'][:60]} | | | | | |")
+            continue
+        rf = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt(rf['compute_s'])} | "
+            f"{_fmt(rf['memory_s'])} | {_fmt(rf['collective_s'])} | "
+            f"{rf['bottleneck']} | {_fmt(rf['useful_flops_ratio'])} | "
+            f"{_fmt(rf['roofline_fraction'])} |")
+    return "\n".join(lines)
+
+
+def dryrun_table(results: list[dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | compile s | HLO flops | HLO bytes | "
+        "collective bytes | per-dev args GB | per-dev temps GB | "
+        "TPU-est GB |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in results:
+        if r.get("skip_reason"):
+            if r["mesh"] == "single":
+                lines.append(f"| {r['arch']} | {r['shape']} | — | *skip:* "
+                             f"{r['skip_reason'][:50]}… | | | | | | |")
+            continue
+        if not r["ok"]:
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"FAIL | | | | | | |")
+            continue
+        rf = r["roofline"]
+        mem = r["memory"]
+        args = mem.get("argument_size_in_bytes", 0) / 1e9
+        temps = mem.get("temp_size_in_bytes", 0) / 1e9
+        tpu = mem.get("tpu_estimate", {}).get("total", 0) / 1e9
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['compile_s']:.0f} | {rf['flops']:.2e} | "
+            f"{rf['hbm_bytes']:.2e} | {rf['collective_bytes']:.2e} | "
+            f"{args:.2f} | {temps:.2f} | {tpu:.2f} |")
+    return "\n".join(lines)
+
+
+def bottleneck_summary(results: list[dict]) -> str:
+    picks = {"worst_fraction": None, "most_collective": None}
+    for r in results:
+        if not r["ok"] or r["mesh"] != "single":
+            continue
+        rf = r["roofline"]
+        key = (r["arch"], r["shape"])
+        if picks["worst_fraction"] is None or rf["roofline_fraction"] < \
+                picks["worst_fraction"][1]:
+            picks["worst_fraction"] = (key, rf["roofline_fraction"])
+        ratio = rf["collective_s"] / max(
+            rf["compute_s"], rf["memory_s"], 1e-12)
+        if picks["most_collective"] is None or ratio > \
+                picks["most_collective"][1]:
+            picks["most_collective"] = (key, ratio)
+    out = []
+    if picks["worst_fraction"]:
+        out.append(f"* worst roofline fraction: "
+                   f"{picks['worst_fraction'][0]} "
+                   f"({picks['worst_fraction'][1]:.4f})")
+    if picks["most_collective"]:
+        out.append(f"* most collective-bound: "
+                   f"{picks['most_collective'][0]} "
+                   f"(coll/max(other) = {picks['most_collective'][1]:.2f})")
+    return "\n".join(out)
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json"
+    results = json.load(open(path))
+    print("## Roofline (single pod, 256 chips)\n")
+    print(roofline_table(results, "single"))
+    print("\n## Roofline (multi-pod, 512 chips)\n")
+    print(roofline_table(results, "multi"))
+    print("\n## Dry-run detail\n")
+    print(dryrun_table(results))
+    print("\n## Hillclimb candidates\n")
+    print(bottleneck_summary(results))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

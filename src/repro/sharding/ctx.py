@@ -1,0 +1,73 @@
+"""Logical-axis sharding hints.
+
+Models are written against *logical* axis names ("batch", "heads", "ff",
+"experts", ...).  A training/serving step activates a mesh + rule set; the
+`hint` calls inside model code then become `with_sharding_constraint`s.
+Outside any context (unit tests, single-device smoke runs) hints are no-ops,
+so model code never depends on distribution state.
+
+A rule maps logical axis -> mesh axis (or tuple of mesh axes, or None).
+`hint` drops a mapping whenever the dimension is not divisible by the mesh
+axes' total size (e.g. kv_heads=4 on a model=16 axis), which keeps every
+constraint valid for every architecture without per-arch special cases.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import math
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACTIVE: list[tuple[Mesh, dict[str, Any]]] = []
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh, rules: dict[str, Any]):
+    _ACTIVE.append((mesh, rules))
+    try:
+        yield
+    finally:
+        _ACTIVE.pop()
+
+
+def active() -> tuple[Mesh, dict[str, Any]] | None:
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return math.prod(mesh.shape[a] for a in axis)
+    return mesh.shape[axis]
+
+
+def spec_for(shape: tuple[int, ...], logical: tuple[str | None, ...],
+             mesh: Mesh, rules: dict[str, Any]) -> P:
+    assert len(shape) == len(logical), (shape, logical)
+    out = []
+    used: set = set()
+    for dim, name in zip(shape, logical):
+        axis = rules.get(name) if name else None
+        if axis is not None and dim % _axis_size(mesh, axis) != 0:
+            axis = None  # not divisible -> replicate this dim
+        if axis is not None:
+            flat = tuple(axis) if isinstance(axis, (tuple, list)) else (axis,)
+            if any(a in used for a in flat):
+                axis = None  # a mesh axis can appear at most once per spec
+            else:
+                used.update(flat)
+        out.append(axis)
+    return P(*out)
+
+
+def hint(x: jax.Array, *logical: str | None) -> jax.Array:
+    ctx = active()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = spec_for(x.shape, logical, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

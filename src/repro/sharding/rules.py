@@ -1,0 +1,192 @@
+"""Parameter / batch / cache PartitionSpec rules for every architecture.
+
+Megatron-style TP on the "model" axis, optional ZeRO-3/FSDP weight sharding
+on the "data" axis, EP for MoE experts, and pod-composed data parallelism on
+the multi-pod mesh.  Every rule passes through a divisibility check: an axis
+that does not divide the dimension is dropped (replicated) — this is what
+makes one rule set valid for all 10 architectures (e.g. kv_heads=4 on a
+model=16 axis, or 8 experts on 16-way model parallelism).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+
+def dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def logical_rules(mesh: Mesh, fsdp: bool = True) -> dict[str, Any]:
+    """Rules for activation hints (sharding/ctx.py)."""
+    return {
+        "batch": dp_axes(mesh),
+        "heads": "model",
+        "kv_heads": "model",
+        "ff": "model",
+        "vocab": "model",
+        "experts": "model",
+        "embed": None,
+        "seq": None,
+    }
+
+
+def _fits(dim: int, mesh: Mesh, axis) -> bool:
+    if axis is None:
+        return True
+    axes = axis if isinstance(axis, tuple) else (axis,)
+    return dim % math.prod(mesh.shape[a] for a in axes) == 0
+
+
+def _clean(spec_axes: list, shape: tuple[int, ...], mesh: Mesh) -> P:
+    out = []
+    for dim, ax in zip(shape, spec_axes):
+        out.append(ax if _fits(dim, mesh, ax) else None)
+    return P(*out)
+
+
+# core-dimension rules per parameter name: list of mesh-axis entries for the
+# *trailing* dims; leading stack dims (layer / superblock) get None.
+def _param_rules(fsdp_ax) -> dict[str, list]:
+    col = [fsdp_ax, "model"]     # (in, out) column-parallel
+    row = ["model", fsdp_ax]     # (in, out) row-parallel
+    return {
+        # embeddings / heads
+        "embed": ["model", None],
+        "lm_head": col,
+        "dec_pos": [None, None],
+        # attention (incl. whisper x-prefixed and vlm cross)
+        "wq": col, "wk": col, "wv": col, "wo": row,
+        "xwq": col, "xwk": col, "xwv": col, "xwo": row,
+        # dense mlp
+        "w_gate": col, "w_up": col, "w_down": row,
+        "m_gate": col, "m_up": col, "m_down": row,
+        # moe
+        "router": [fsdp_ax, None],
+        "we_gate": ["model", fsdp_ax, None],
+        "we_up": ["model", fsdp_ax, None],
+        "we_down": ["model", None, fsdp_ax],
+        # mamba2
+        "in_proj": col, "out_proj": row,
+        "conv_w": [None, "model"], "conv_b": ["model"],
+        # rg-lru
+        "w_x": col, "w_gate_br": col, "w_rg": col, "w_in": col,
+        "w_out": row,
+    }
+
+
+def _moe_fallback(name: str, shape: tuple[int, ...], mesh: Mesh, fsdp_ax
+                  ) -> P | None:
+    """Experts not divisible by the model axis -> TP inside each expert."""
+    if name in ("we_gate", "we_up") and not _fits(shape[-3], mesh, "model"):
+        return _clean([None, fsdp_ax, "model"], shape[-3:], mesh)
+    if name == "we_down" and not _fits(shape[-3], mesh, "model"):
+        return _clean([None, "model", fsdp_ax], shape[-3:], mesh)
+    return None
+
+
+def param_pspec(path: tuple, arr_shape: tuple[int, ...], mesh: Mesh,
+                fsdp: bool = True) -> P:
+    fsdp_ax = "data" if fsdp else None
+    name = None
+    for part in reversed(path):
+        key = getattr(part, "key", None) or getattr(part, "name", None) or \
+            (part if isinstance(part, str) else None)
+        if key is not None and str(key) not in ("q", "s"):
+            # skip int8-weight wrapper levels ({"q","s"} dict leaves)
+            name = str(key)
+            break
+    rules = _param_rules(fsdp_ax)
+    if name not in rules:
+        return P()  # norms, scalars, biases, gates: replicated
+    core = rules[name]
+    ncore = len(core)
+    if len(arr_shape) < ncore:
+        return P()
+    moe_alt = _moe_fallback(name, arr_shape, mesh, fsdp_ax)
+    if moe_alt is not None:
+        core_spec = list(moe_alt)
+    else:
+        core_spec = list(_clean(core, arr_shape[-ncore:], mesh))
+    lead = [None] * (len(arr_shape) - ncore)
+    return P(*lead, *core_spec)
+
+
+def param_shardings(params_shape: Any, mesh: Mesh, fsdp: bool = True) -> Any:
+    """Tree of NamedShardings matching a params (shape-)tree."""
+    def mk(path, leaf):
+        shape = leaf.shape
+        return NamedSharding(mesh, param_pspec(path, shape, mesh, fsdp))
+    return jax.tree_util.tree_map_with_path(mk, params_shape)
+
+
+# --- batches ------------------------------------------------------------------
+
+def batch_pspec(name: str, shape: tuple[int, ...], mesh: Mesh) -> P:
+    dp = dp_axes(mesh)
+    if not shape:
+        return P()
+    spec = [dp if _fits(shape[0], mesh, dp) else None]
+    spec += [None] * (len(shape) - 1)
+    return P(*spec)
+
+
+def batch_shardings(specs: dict, mesh: Mesh) -> dict:
+    return {k: NamedSharding(mesh, batch_pspec(k, v.shape, mesh))
+            for k, v in specs.items()}
+
+
+# --- decode caches --------------------------------------------------------------
+
+# batch-dim position per cache key (negative = from the end)
+_CACHE_BATCH_DIM = {
+    "k": -4, "v": -4, "xk": -4, "xv": -4,
+    "conv": 1, "ssm": 1,
+    "rec_conv": 2, "rec_lru": 2, "att_k": 1, "att_v": 1,
+    "tail_conv": 1, "tail_lru": 1,
+}
+# additionally shard kv-heads/head dims on "model" where they exist
+_CACHE_MODEL_DIM = {"k": -2, "v": -2, "xk": -2, "xv": -2,
+                    "att_k": -2, "att_v": -2, "ssm": 2}
+
+
+def cache_pspec(key: str, shape: tuple[int, ...], mesh: Mesh) -> P:
+    if key == "length" or not shape:
+        return P()
+    dp = dp_axes(mesh)
+    spec: list = [None] * len(shape)
+    bpos = _CACHE_BATCH_DIM.get(key)
+    if bpos is not None:
+        bpos = bpos % len(shape)
+        if _fits(shape[bpos], mesh, dp):
+            spec[bpos] = dp
+    mpos = _CACHE_MODEL_DIM.get(key)
+    if mpos is not None:
+        mpos = mpos % len(shape)
+        if spec[mpos] is None and _fits(shape[mpos], mesh, "model"):
+            spec[mpos] = "model"
+    return P(*spec)
+
+
+def cache_shardings(cache_tree: Any, mesh: Mesh) -> Any:
+    def mk(path, leaf):
+        key = None
+        for part in reversed(path):
+            k = getattr(part, "key", None)
+            if k is not None:
+                key = str(k)
+                break
+        return NamedSharding(mesh, cache_pspec(key or "", leaf.shape, mesh))
+    return jax.tree_util.tree_map_with_path(mk, cache_tree)
+
+
+def should_fsdp(cfg: ModelConfig) -> bool:
+    """ZeRO-3 weight sharding on the data axis for >=20B-param configs."""
+    return cfg.param_count() >= 20e9

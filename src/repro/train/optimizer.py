@@ -1,0 +1,251 @@
+"""Optimizers: AdamW (f32 / bf16 / block-int8 moments) and Adafactor.
+
+Quantized optimizer states are a first-class memory lever at scale: grok-1's
+314B params with f32 Adam moments cost 2.5 TB; int8 moments with block-128
+scales cut that 4x (see EXPERIMENTS.md §Dry-run memory table).  All
+quantize/dequantize math is per-block symmetric, error is bounded by the
+block absmax, and the update path dequantizes -> updates in f32 ->
+requantizes (no error feedback needed at beta1/beta2's smoothing levels).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 128
+
+
+# --- block-quantized tensor state --------------------------------------------
+
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=("q", "scale"), meta_fields=("shape", "pad"))
+@dataclasses.dataclass(frozen=True)
+class QMoment:
+    """int8 moment tensor with per-(last-dim-block) f32 scales.  shape/pad
+    are static metadata so the state pytree stays jit-friendly."""
+    q: jax.Array
+    scale: jax.Array
+    shape: tuple
+    pad: int
+
+
+def _quantize_block(x: jax.Array) -> QMoment:
+    """q keeps the parameter's dimensionality (padded last dim) so the
+    parameter sharding rules apply to the quantized moments unchanged."""
+    shape = tuple(x.shape)
+    if not shape:
+        shape = (1,)
+        x = x.reshape(1)
+    last = shape[-1]
+    pad = (-last) % BLOCK
+    xp = jnp.pad(x, [(0, 0)] * (len(shape) - 1) + [(0, pad)])
+    blocks = xp.reshape(*shape[:-1], -1, BLOCK)
+    absmax = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return QMoment(q.reshape(*shape[:-1], last + pad),
+                   scale[..., 0].astype(jnp.float32), shape, pad)
+
+
+def _dequantize_block(st: QMoment) -> jax.Array:
+    blocks = st.q.reshape(*st.q.shape[:-1], -1, BLOCK).astype(jnp.float32)
+    x = blocks * st.scale[..., None]
+    x = x.reshape(*st.q.shape[:-1], -1)
+    if st.pad:
+        x = x[..., :-st.pad]
+    return x.reshape(st.shape)
+
+
+class _QTensor:
+    """Marker-free storage helpers for moment tensors."""
+
+    @staticmethod
+    def store(x: jax.Array, mode: str):
+        if mode == "f32":
+            return x.astype(jnp.float32)
+        if mode == "bf16":
+            return x.astype(jnp.bfloat16)
+        if mode == "int8":
+            return _quantize_block(x)
+        raise ValueError(mode)
+
+    @staticmethod
+    def load(st) -> jax.Array:
+        if isinstance(st, QMoment):
+            return _dequantize_block(st)
+        return jnp.asarray(st, jnp.float32)
+
+
+# --- schedules -----------------------------------------------------------------
+
+def warmup_cosine(step: jax.Array, base_lr: float, warmup: int,
+                  total: int, min_frac: float = 0.1) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = base_lr * step / max(warmup, 1)
+    prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = base_lr * (min_frac + (1 - min_frac) * 0.5 *
+                     (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+# --- AdamW ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    clip_norm: float = 1.0
+    moment_dtype: str = "f32"        # "f32" | "bf16" | "int8"
+
+
+def _store_v(v: jax.Array, mode: str):
+    """Second moments are nonnegative with huge dynamic range: store
+    sqrt(v) under int8 (square on load) — measured to recover f32-Adam
+    trajectories to ~1e-5 where plain int8 v diverges."""
+    if mode == "int8":
+        return _QTensor.store(jnp.sqrt(jnp.maximum(v, 0.0)), mode)
+    return _QTensor.store(v, mode)
+
+
+def _load_v(st, mode: str) -> jax.Array:
+    x = _QTensor.load(st)
+    if mode == "int8":
+        return x * x
+    return x
+
+
+def adamw_init(params: Any, cfg: AdamWConfig) -> dict:
+    zeros = jax.tree_util.tree_map(
+        lambda p: _QTensor.store(jnp.zeros_like(p, jnp.float32),
+                                 cfg.moment_dtype), params)
+    zeros2 = jax.tree_util.tree_map(
+        lambda p: _store_v(jnp.zeros_like(p, jnp.float32),
+                           cfg.moment_dtype), params)
+    return {"m": zeros, "v": zeros2,
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2)
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def _is_moment(x) -> bool:
+    return isinstance(x, dict) and "q" in x
+
+
+def adamw_update(params: Any, grads: Any, state: dict, cfg: AdamWConfig
+                 ) -> tuple[Any, dict]:
+    step = state["step"] + 1
+    lr = warmup_cosine(step, cfg.lr, cfg.warmup_steps, cfg.total_steps)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+
+    def upd(p, g, m_st, v_st):
+        g = g.astype(jnp.float32) * scale
+        m = _QTensor.load(m_st)
+        v = _load_v(v_st, cfg.moment_dtype)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m / (1 - cfg.b1 ** step.astype(jnp.float32))
+        vh = v / (1 - cfg.b2 ** step.astype(jnp.float32))
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + \
+            cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, _QTensor.store(m, cfg.moment_dtype), \
+            _store_v(v, cfg.moment_dtype)
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    outs = [upd(p, g, m, v) for p, g, m, v in
+            zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = tdef.unflatten([o[0] for o in outs])
+    new_m = tdef.unflatten([o[1] for o in outs])
+    new_v = tdef.unflatten([o[2] for o in outs])
+    return new_params, {"m": new_m, "v": new_v, "step": step}
+
+
+# --- Adafactor (factored second moments for >=2-D params) -----------------------
+
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    lr: float = 1e-3
+    decay: float = 0.999
+    eps: float = 1e-30
+    clip_rms: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    weight_decay: float = 0.0
+
+
+def adafactor_init(params: Any, cfg: AdafactorConfig) -> dict:
+    def mk(p):
+        if p.ndim >= 2:
+            return {"row": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "col": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                     jnp.float32)}
+        return {"full": jnp.zeros_like(p, jnp.float32)}
+    return {"f": jax.tree_util.tree_map(
+        mk, params, is_leaf=lambda x: isinstance(x, jax.Array)),
+        "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(params: Any, grads: Any, state: dict,
+                     cfg: AdafactorConfig) -> tuple[Any, dict]:
+    step = state["step"] + 1
+    lr = warmup_cosine(step, cfg.lr, cfg.warmup_steps, cfg.total_steps)
+
+    def upd(p, g, f):
+        g = g.astype(jnp.float32)
+        g2 = g * g + cfg.eps
+        if p.ndim >= 2:
+            row = cfg.decay * f["row"] + (1 - cfg.decay) * g2.mean(-1)
+            col = cfg.decay * f["col"] + (1 - cfg.decay) * g2.mean(-2)
+            rmean = row.mean(-1, keepdims=True)
+            vhat = (row / jnp.maximum(rmean, cfg.eps))[..., None] * \
+                col[..., None, :]
+            newf = {"row": row, "col": col}
+        else:
+            full = cfg.decay * f["full"] + (1 - cfg.decay) * g2
+            vhat = full
+            newf = {"full": full}
+        update = g / jnp.sqrt(vhat + cfg.eps)
+        rms = jnp.sqrt(jnp.mean(update ** 2))
+        update = update / jnp.maximum(1.0, rms / cfg.clip_rms)
+        new_p = (p.astype(jnp.float32) - lr *
+                 (update + cfg.weight_decay * p.astype(jnp.float32))
+                 ).astype(p.dtype)
+        return new_p, newf
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_f = tdef.flatten_up_to(state["f"])
+    outs = [upd(p, g, f) for p, g, f in zip(flat_p, flat_g, flat_f)]
+    return (tdef.unflatten([o[0] for o in outs]),
+            {"f": tdef.unflatten([o[1] for o in outs]), "step": step})
+
+
+# --- façade -----------------------------------------------------------------------
+
+def make_optimizer(kind: str = "adamw", **kw):
+    if kind == "adamw":
+        cfg = AdamWConfig(**kw)
+        return (functools.partial(adamw_init, cfg=cfg),
+                functools.partial(adamw_update, cfg=cfg))
+    if kind == "adafactor":
+        cfg = AdafactorConfig(**kw)
+        return (functools.partial(adafactor_init, cfg=cfg),
+                functools.partial(adafactor_update, cfg=cfg))
+    raise ValueError(kind)

@@ -1,0 +1,192 @@
+"""Distributed train/serve step builders (pjit).
+
+`make_train_step` produces a jit-compiled function whose in/out shardings
+come from sharding/rules.py; inside, model code runs under the logical-rule
+context so activation hints become GSPMD constraints.  Gradient accumulation
+is a lax.scan over microbatches (the standard compute/communication-overlap
+lever: per-microbatch backward matmuls overlap the previous microbatch's
+gradient reduce-scatter under XLA's latency-hiding scheduler).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+from repro.sharding import ctx, rules
+from repro.train import optimizer as opt
+
+
+@dataclasses.dataclass(frozen=True)
+class StepOptions:
+    accum_steps: int = 1
+    optimizer: str = "adamw"
+    moment_dtype: str = "f32"
+    lr: float = 3e-4
+    total_steps: int = 10000
+    warmup_steps: int = 100
+    fsdp: bool | None = None      # None -> auto by model size
+    param_dtype: str | None = None
+    # "grad_of_scan": differentiate through the microbatch scan, so DP
+    # gradient all-reduces fire ONCE per step instead of once per
+    # microbatch ("no_sync" semantics).  Measured on grok-1 train_4k
+    # (accum=8): collective bytes 1.9e15 -> see EXPERIMENTS.md §Perf.
+    # "scan_of_grad" is the naive per-microbatch value_and_grad.
+    accum_mode: str = "scan_of_grad"
+
+
+def _split_microbatches(batch: dict, n: int) -> dict:
+    def split(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        return x.reshape(n, b // n, *x.shape[1:])
+    return {k: split(v) for k, v in batch.items()}
+
+
+def make_train_fns(cfg: ModelConfig, options: StepOptions):
+    """Returns (init_fn(rng)->state, step_fn(state, batch)->(state, metrics)).
+    Both are plain functions; wrap with jit/shardings via make_train_step."""
+    spec = api.make_spec(cfg)
+    init_opt, update_opt = opt.make_optimizer(
+        options.optimizer, lr=options.lr, total_steps=options.total_steps,
+        warmup_steps=options.warmup_steps,
+        **({"moment_dtype": options.moment_dtype}
+           if options.optimizer == "adamw" else {}))
+
+    def init_fn(rng):
+        params = api.init_params(cfg, rng)
+        return {"params": params, "opt": init_opt(params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def loss(params, mb):
+        return api.loss_fn(params, mb, cfg, spec)
+
+    def step_fn(state, batch):
+        params = state["params"]
+        if options.accum_steps > 1 and options.accum_mode == "grad_of_scan":
+            mbs = _split_microbatches(batch, options.accum_steps)
+
+            def total_loss(p):
+                def micro(l_acc, mb):
+                    l, _extras = loss(p, mb)
+                    return l_acc + l, None
+                lsum, _ = jax.lax.scan(micro, 0.0, mbs)
+                return lsum / options.accum_steps
+
+            lval, grads = jax.value_and_grad(total_loss)(params)
+        elif options.accum_steps > 1:
+            mbs = _split_microbatches(batch, options.accum_steps)
+
+            def micro(carry, mb):
+                g_acc, l_acc = carry
+                (l, _extras), g = jax.value_and_grad(loss, has_aux=True)(
+                    params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, lsum), _ = jax.lax.scan(micro, (zeros, 0.0), mbs)
+            grads = jax.tree_util.tree_map(
+                lambda g: g / options.accum_steps, grads)
+            lval = lsum / options.accum_steps
+        else:
+            (lval, _extras), grads = jax.value_and_grad(loss, has_aux=True)(
+                params, batch)
+        new_params, new_opt = update_opt(params, grads, state["opt"])
+        metrics = {"loss": lval, "gnorm": opt.global_norm(grads),
+                   "step": state["step"] + 1}
+        return {"params": new_params, "opt": new_opt,
+                "step": state["step"] + 1}, metrics
+
+    return init_fn, step_fn
+
+
+def state_shardings(cfg: ModelConfig, options: StepOptions, mesh: Mesh,
+                    init_fn) -> Any:
+    """NamedShardings for the full train state (params + optimizer)."""
+    fsdp = options.fsdp if options.fsdp is not None else rules.should_fsdp(cfg)
+    shapes = jax.eval_shape(init_fn, jax.random.key(0))
+
+    def mk(path, leaf):
+        keys = [str(getattr(p, "key", "")) for p in path]
+        if keys and keys[0] == "params":
+            return NamedSharding(mesh, rules.param_pspec(
+                path[1:], leaf.shape, mesh, fsdp))
+        if keys and keys[0] == "opt":
+            # moments mirror their parameter's sharding; strip the opt
+            # wrapper levels ("m"/"v"/"f" + quantization internals)
+            core = [p for p in path[1:]
+                    if str(getattr(p, "key", "")) not in
+                    ("m", "v", "f", "q", "scale", "row", "col", "full")]
+            if keys[-1] in ("step",) or leaf.ndim == 0:
+                return NamedSharding(mesh, P())
+            pspec = rules.param_pspec(core, leaf.shape, mesh, fsdp)
+            if len(pspec) > leaf.ndim or any(
+                    ax is not None and leaf.shape[i] %
+                    _axsize(mesh, ax) != 0
+                    for i, ax in enumerate(list(pspec) + [None] *
+                                           (leaf.ndim - len(pspec)))
+                    if i < leaf.ndim):
+                return NamedSharding(mesh, P())
+            return NamedSharding(mesh, pspec)
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(mk, shapes)
+
+
+def _axsize(mesh: Mesh, ax) -> int:
+    import math
+    axes = ax if isinstance(ax, tuple) else (ax,)
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def make_train_step(cfg: ModelConfig, options: StepOptions, mesh: Mesh,
+                    donate: bool = True):
+    """jit-compiled distributed train step + its state shardings."""
+    init_fn, step_fn = make_train_fns(cfg, options)
+    st_sh = state_shardings(cfg, options, mesh, init_fn)
+
+    def wrapped(state, batch):
+        with ctx.use_rules(mesh, rules.logical_rules(mesh)):
+            return step_fn(state, batch)
+
+    jit_kwargs: dict = dict(
+        in_shardings=(st_sh, None), out_shardings=(st_sh, None))
+    if donate:
+        jit_kwargs["donate_argnums"] = (0,)
+    step = jax.jit(wrapped, **jit_kwargs)
+    return init_fn, step, st_sh
+
+
+# --- serving steps -----------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh):
+    spec = api.make_spec(cfg)
+
+    def wrapped(params, tokens, extras):
+        with ctx.use_rules(mesh, rules.logical_rules(mesh)):
+            return api.prefill(params, tokens, cfg, spec=spec,
+                               extras=extras)
+
+    return jax.jit(wrapped)
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Mesh, donate: bool = True):
+    spec = api.make_spec(cfg)
+
+    def wrapped(params, cache, tokens, extras):
+        with ctx.use_rules(mesh, rules.logical_rules(mesh)):
+            return api.decode_step(params, cache, tokens, cfg, spec=spec,
+                                   extras=extras)
+
+    kwargs = {"donate_argnums": (1,)} if donate else {}
+    return jax.jit(wrapped, **kwargs)

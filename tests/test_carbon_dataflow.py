@@ -1,0 +1,193 @@
+"""Carbon model, accelerator area model, dataflow perf model, GA-CDP."""
+
+import math
+
+import pytest
+
+from repro.core import accelerator as acc
+from repro.core import carbon as cb
+from repro.core import codesign
+from repro.core import dataflow as df
+from repro.core import ga
+from repro.core import multipliers as mm
+from repro.core import workloads as wl
+
+
+# --- carbon ------------------------------------------------------------------
+
+def test_yield_decreases_with_area_and_node():
+    assert cb.murphy_yield(10, 7) > cb.murphy_yield(100, 7)
+    assert cb.murphy_yield(50, 28) > cb.murphy_yield(50, 7)
+    assert 0 < cb.murphy_yield(500, 7) < 1
+    assert cb.murphy_yield(1e-6, 7) == pytest.approx(1.0, abs=1e-4)
+
+
+def test_carbon_monotone_in_area():
+    prev = 0.0
+    for a in (1, 5, 20, 100, 400):
+        c = cb.embodied_carbon(a, 7).total_g
+        assert c > prev
+        prev = c
+
+
+def test_carbon_superlinear_in_area():
+    """Yield loss makes carbon grow faster than area (paper's 'exponential
+    carbon increase' for compute-heavy designs)."""
+    c1 = cb.embodied_carbon(50, 7).total_g
+    c2 = cb.embodied_carbon(100, 7).total_g
+    assert c2 > 2.0 * c1 * 0.999
+
+
+def test_cfpa_eq2_structure():
+    val, y = cb.cfpa(7, 50.0)
+    p = cb.NODE_PARAMS[7]
+    expect = (cb.CI_FAB_G_PER_KWH * p["EPA"] + p["C_gas"]
+              + cb.C_MATERIAL_G_PER_CM2) / y
+    assert val == pytest.approx(expect)
+
+
+def test_dies_per_wafer_sane():
+    assert cb.dies_per_wafer(100) > cb.dies_per_wafer(400)
+    # a 300mm wafer is ~70,685 mm^2
+    assert cb.dies_per_wafer(100) < 70686 / 100
+
+
+def test_cdp():
+    assert cb.cdp(100.0, 50.0) == pytest.approx(2.0)
+
+
+# --- accelerator area ---------------------------------------------------------
+
+def test_area_scales_with_pes_and_multiplier():
+    a_exact = acc.area_model(acc.nvdla_default(1024, 7, "exact"))
+    a_trunc = acc.area_model(acc.nvdla_default(1024, 7, "trunc3x3"))
+    assert a_trunc.total_mm2 < a_exact.total_mm2
+    assert a_trunc.mult_mm2 < a_exact.mult_mm2
+    a_small = acc.area_model(acc.nvdla_default(64, 7, "exact"))
+    assert a_small.total_mm2 < a_exact.total_mm2
+
+
+def test_mult_fraction_plausible():
+    """Multiplier share of die must sit in the band that reproduces the
+    paper's 3-13% approx-only carbon savings."""
+    for pes in (512, 1024, 2048):
+        for node in (7, 14, 28):
+            frac = acc.area_model(acc.nvdla_default(pes, node)).mult_fraction
+            assert 0.05 < frac < 0.35, (pes, node, frac)
+
+
+def test_invalid_config_rejected():
+    with pytest.raises(ValueError):
+        acc.AcceleratorConfig(10, 10, 32, 256, "exact", 7).validate()
+
+
+# --- workloads ----------------------------------------------------------------
+
+def test_workload_macs_match_literature():
+    assert wl.total_macs(wl.vgg16()) == pytest.approx(15.5e9, rel=0.02)
+    assert wl.total_macs(wl.vgg19()) == pytest.approx(19.6e9, rel=0.02)
+    assert wl.total_macs(wl.resnet50()) == pytest.approx(4.1e9, rel=0.08)
+    assert wl.total_macs(wl.resnet152()) == pytest.approx(11.5e9, rel=0.05)
+
+
+# --- dataflow ------------------------------------------------------------------
+
+def test_perf_model_invariants():
+    for pes in (64, 512, 2048):
+        cfg = acc.nvdla_default(pes, 7)
+        p = df.workload_perf("vgg16", cfg)
+        assert 0 < p.avg_utilization <= 1.0
+        assert p.fps > 0
+        for lp in p.layers:
+            assert lp.utilization <= 1.0 + 1e-9
+            # compute cycles lower-bounded by macs / peak
+            assert lp.compute_cycles >= 0
+
+
+def test_perf_monotone_in_pes():
+    f = [df.fps("vgg16", acc.nvdla_default(p, 7)) for p in (64, 256, 1024)]
+    assert f[0] < f[1] < f[2]
+
+
+def test_perf_compute_bound_matches_roofline():
+    """With huge DRAM bandwidth, cycles -> pure compute cycles >= macs/PEs."""
+    cfg = acc.AcceleratorConfig(32, 32, 32, 512, "exact", 7, dram_gbps=1e6)
+    p = df.workload_perf("vgg16", cfg)
+    ideal = wl.total_macs(wl.vgg16()) / 1024
+    assert p.total_cycles >= ideal
+    assert p.total_cycles < 3.0 * ideal  # array is reasonably utilized
+
+
+def test_memory_bound_when_bandwidth_tiny():
+    fast = df.workload_perf(
+        "vgg16", acc.AcceleratorConfig(32, 32, 32, 512, "exact", 7,
+                                       dram_gbps=100.0))
+    slow = df.workload_perf(
+        "vgg16", acc.AcceleratorConfig(32, 32, 32, 512, "exact", 7,
+                                       dram_gbps=0.5))
+    assert slow.fps < fast.fps
+
+
+# --- GA ------------------------------------------------------------------------
+
+def _fast_mults():
+    return [mm.exact_multiplier(), mm.truncated(1, 1), mm.truncated(2, 2),
+            mm.truncated(3, 3)]
+
+
+def test_ga_respects_accuracy_constraint():
+    res = ga.run_ga("vgg16", 7, 30.0, max_accuracy_drop=0.5,
+                    mults=_fast_mults(),
+                    cfg=ga.GAConfig(pop_size=10, generations=4, seed=3))
+    m = mm.get_multiplier(res.best.config.multiplier)
+    assert ga.proxy_accuracy_drop(m) <= 0.5
+
+
+def test_ga_meets_fps_or_penalized():
+    res = ga.run_ga("vgg16", 7, 30.0, 2.0, mults=_fast_mults(),
+                    cfg=ga.GAConfig(pop_size=12, generations=6, seed=0))
+    assert res.best.fps >= 30.0 * 0.999
+
+
+def test_ga_improves_over_generations():
+    res = ga.run_ga("vgg16", 7, 30.0, 2.0, mults=_fast_mults(),
+                    cfg=ga.GAConfig(pop_size=12, generations=6, seed=0))
+    assert res.history[-1] <= res.history[0]
+
+
+def test_ga_deterministic():
+    kw = dict(mults=_fast_mults(),
+              cfg=ga.GAConfig(pop_size=8, generations=3, seed=11))
+    r1 = ga.run_ga("vgg16", 7, 30.0, 2.0, **kw)
+    r2 = ga.run_ga("vgg16", 7, 30.0, 2.0, **kw)
+    assert r1.best.cdp == r2.best.cdp
+    assert r1.best.config == r2.best.config
+
+
+def test_exact_baseline_meets_fps():
+    e = ga.exact_baseline("vgg16", 7, 30.0)
+    assert e.fps >= 30.0
+    assert e.config.multiplier == "exact"
+
+
+# --- codesign -------------------------------------------------------------------
+
+def test_codesign_reductions_positive_and_ordered():
+    rep = codesign.run_codesign(
+        "vgg16", 7, 30.0, 2.0, mults=_fast_mults(),
+        ga_cfg=ga.GAConfig(pop_size=12, generations=6, seed=0))
+    # approx-only saves something; GA-CDP saves at least as much as approx-only
+    assert rep.approx_only_reduction > 0.0
+    assert rep.ga_reduction >= rep.approx_only_reduction - 1e-9
+    assert rep.ga_cdp.fps >= 30.0 * 0.999
+
+
+def test_approx_only_band_matches_paper():
+    """Paper Fig.2 table: approx-only carbon reduction (same arch) is in the
+    single-digit-to-low-teens percent band."""
+    for node in (7, 14, 28):
+        rep = codesign.run_codesign(
+            "vgg16", node, 30.0, 2.0, mults=_fast_mults(),
+            ga_cfg=ga.GAConfig(pop_size=8, generations=3, seed=0))
+        assert 0.005 <= rep.approx_only_reduction <= 0.20, (
+            node, rep.approx_only_reduction)

@@ -1,0 +1,151 @@
+"""Approx-GEMM dispatch, quantization, layers, and gradients (STE)."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.approx import gemm as G
+from repro.approx import layers as L
+from repro.approx import quant
+from repro.core import multipliers as mm
+from repro.kernels import ref
+
+
+def test_quantize_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((64, 128)), jnp.float32)
+    q, s = quant.quantize(x)
+    err = np.abs(np.asarray(quant.dequantize(q, s)) - np.asarray(x))
+    assert err.max() <= np.asarray(s).max() * 0.5 + 1e-7
+
+
+def test_quantize_per_channel_axes():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((16, 32)) * 100, jnp.float32)
+    q, s = quant.quantize(x, axis=1)
+    assert s.shape == (1, 32)
+    # each channel must use its own scale
+    x2 = np.asarray(quant.dequantize(q, s))
+    np.testing.assert_allclose(x2, np.asarray(x), atol=np.asarray(s).max())
+
+
+def test_spec_modes():
+    assert G.from_multiplier(mm.exact_multiplier()).mode == "exact"
+    assert G.from_multiplier(mm.truncated(2, 2)).mode == "trunc"
+    m = mm.pruned(np.ones(10, bool).repeat(1)[:10] if False else
+                  (np.random.default_rng(0).random(
+                      len(__import__("repro.core.netlist",
+                                     fromlist=["bw8"]).bw8()
+                          .prunable_gates())) < 0.03))
+    assert G.from_multiplier(m).mode == "lowrank"
+
+
+def test_spec_is_pytree():
+    spec = G.spec_from_name("trunc2x2")
+    leaves = jax.tree_util.tree_leaves(spec)
+    assert all(isinstance(l, jax.Array) for l in leaves)
+    # must be usable as a jit static-free argument
+    @jax.jit
+    def f(s, a, b):
+        return G.approx_qgemm(a, b, s)
+    a = jnp.ones((8, 8), jnp.int8)
+    b = jnp.ones((8, 8), jnp.int8)
+    f(spec, a, b)
+
+
+def test_approx_matmul_exact_spec_matches_float():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((32, 64)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((64, 16)), jnp.float32)
+    out = G.approx_matmul(x, w, G.exact_spec())
+    want = np.asarray(x) @ np.asarray(w)
+    # int8 quantization error only
+    np.testing.assert_allclose(np.asarray(out), want, rtol=0.1, atol=0.5)
+
+
+def test_approx_matmul_lut_consistency():
+    """Float wrapper == manual quantize -> LUT-matmul -> dequantize."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((16, 32)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((32, 8)), jnp.float32)
+    mobj = mm.truncated(3, 3)
+    spec = G.from_multiplier(mobj)
+    out = np.asarray(G.approx_matmul(x, w, spec))
+    xq, sx = quant.quantize(x.reshape(-1, 32), axis=0)
+    wq, sw = quant.quantize(w, axis=1)
+    lut_out = np.asarray(ref.lut_matmul(xq, wq, jnp.asarray(mobj.lut)))
+    want = lut_out.astype(np.float32) * np.asarray(sx) * np.asarray(sw)
+    np.testing.assert_allclose(out, want, rtol=1e-6)
+
+
+def test_ste_gradients_flow():
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((16, 4)), jnp.float32)
+    spec = G.spec_from_name("trunc2x2")
+
+    def loss(w_):
+        return jnp.sum(G.approx_matmul(x, w_, spec) ** 2)
+
+    g = jax.grad(loss)(w)
+    assert g.shape == w.shape
+    assert np.isfinite(np.asarray(g)).all()
+    assert np.abs(np.asarray(g)).max() > 0
+
+
+def test_ste_gradient_equals_exact_backward():
+    """Backward pass must be the float-exact gradient (ApproxTrain STE)."""
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((16, 4)), jnp.float32)
+    spec = G.spec_from_name("trunc3x3")
+    gout = jnp.asarray(rng.standard_normal((8, 4)), jnp.float32)
+    _, vjp = jax.vjp(lambda xx, ww: G.approx_matmul(xx, ww, spec), x, w)
+    dx, dw = vjp(gout)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(gout) @ np.asarray(w).T,
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(x).T @ np.asarray(gout),
+                               rtol=1e-5)
+
+
+def test_conv2d_exact_vs_approx_small_error():
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.standard_normal((2, 8, 8, 3)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 3, 3, 4)) * 0.1, jnp.float32)
+    y_exact = L.conv2d(x, w, spec=None)
+    y_trunc1 = L.conv2d(x, w, spec=G.spec_from_name("trunc1x1"))
+    rel = np.linalg.norm(np.asarray(y_trunc1) - np.asarray(y_exact)) / \
+        np.linalg.norm(np.asarray(y_exact))
+    assert rel < 0.1, rel
+    # deeper truncation -> more error
+    y_trunc4 = L.conv2d(x, w, spec=G.spec_from_name("trunc4x4"))
+    rel4 = np.linalg.norm(np.asarray(y_trunc4) - np.asarray(y_exact)) / \
+        np.linalg.norm(np.asarray(y_exact))
+    assert rel4 > rel
+
+
+def test_im2col_matches_lax_conv():
+    rng = np.random.default_rng(7)
+    for stride, padding, r in [(1, 1, 3), (2, 0, 1), (2, 3, 7)]:
+        h = 16
+        x = jnp.asarray(rng.standard_normal((2, h, h, 5)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((r, r, 5, 6)), jnp.float32)
+        want = jax.lax.conv_general_dilated(
+            x, w, (stride, stride), [(padding, padding), (padding, padding)],
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        patches, ho, wo = L._im2col(x, r, r, stride, padding)
+        got = (patches.reshape(-1, r * r * 5) @ w.reshape(-1, 6)).reshape(
+            2, ho, wo, 6)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_dense_bias_exact():
+    x = jnp.ones((2, 4), jnp.float32)
+    w = jnp.ones((4, 3), jnp.float32)
+    b = jnp.arange(3, dtype=jnp.float32)
+    y = L.dense(x, w, b, spec=G.spec_from_name("trunc2x2"))
+    y0 = L.dense(x, w, None, spec=G.spec_from_name("trunc2x2"))
+    np.testing.assert_allclose(np.asarray(y - y0), np.broadcast_to(
+        np.arange(3, dtype=np.float32), (2, 3)), atol=1e-5)

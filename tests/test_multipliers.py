@@ -1,0 +1,134 @@
+"""Exhaustive correctness of the gate-level multiplier substrate."""
+
+import numpy as np
+import pytest
+
+from repro.core import lut as lutmod
+from repro.core import multipliers as mm
+from repro.core import netlist as nlmod
+from repro.core import pareto
+
+
+def test_bw8_exact_exhaustive():
+    nlmod.self_check()  # all 65,536 int8 pairs
+
+
+def test_packed_matches_unpacked():
+    nl = nlmod.bw8()
+    pr = nlmod.truncation_pruning(nl, 2, 1)
+    a_bits, b_bits, _, _ = nlmod.all_input_bits()
+    slow = nlmod.bits_to_int16(nl.evaluate(a_bits, b_bits, pr))
+    fast = nlmod.bits_to_int16(nlmod.evaluate_packed(nl, pr))
+    np.testing.assert_array_equal(slow, fast)
+
+
+@pytest.mark.parametrize("t", [1, 2, 3, 4])
+def test_truncation_closed_form(t):
+    """Precision scaling == zeroing t LSBs of each two's-complement operand."""
+    m = mm.truncated(t, t)
+    a = np.arange(-128, 128, dtype=np.int64)
+    ta = a - np.mod(a, 2 ** t)  # positive remainder mod
+    expect = ta[:, None] * ta[None, :]
+    got = np.empty((256, 256), dtype=np.int64)
+    ua = (a & 0xFF).astype(int)
+    got = m.lut[np.ix_(ua, ua)].astype(np.int64)
+    np.testing.assert_array_equal(got, expect)
+
+
+def test_truncation_area_monotone():
+    areas = [mm.truncated(t, t).area_nand2eq for t in range(5)]
+    assert all(a1 > a2 for a1, a2 in zip(areas, areas[1:]))
+
+
+def test_truncation_error_monotone():
+    nmeds = [mm.truncated(t, t).stats.nmed for t in range(5)]
+    assert nmeds[0] == 0.0
+    assert all(e1 < e2 for e1, e2 in zip(nmeds, nmeds[1:]))
+
+
+def test_pruning_reduces_area_and_reports_error():
+    nl = nlmod.bw8()
+    n = len(nl.prunable_gates())
+    rng = np.random.default_rng(0)
+    mask = rng.random(n) < 0.05
+    m = mm.pruned(mask)
+    ex = mm.exact_multiplier()
+    assert m.area_nand2eq < ex.area_nand2eq
+    assert m.stats.nmed >= 0
+    assert m.stats.wce >= 0
+
+
+def test_exact_multiplier_is_exact():
+    ex = mm.exact_multiplier()
+    assert ex.stats.wce == 0
+    assert ex.stats.nmed == 0.0
+    assert ex.lowrank.rank == 0
+
+
+def test_dead_gate_elimination_credits_truncation():
+    """Truncating operands must remove whole partial-product cones."""
+    nl = nlmod.bw8()
+    pr = nlmod.constant_propagate(nl, nlmod.truncation_pruning(nl, 4, 4))
+    assert nl.area_nand2eq(pr) < 0.6 * nl.area_nand2eq()
+
+
+def test_lowrank_reconstruction_bound():
+    m = mm.truncated(2, 2)
+    lr = lutmod.lowrank_error(m.lut, rank=4)
+    e = lutmod.error_surface(m.lut).astype(np.float64)
+    resid = np.abs(e - lr.reconstruct())
+    assert resid.mean() / lutmod.MAX_ABS_PRODUCT <= lr.residual_nmed + 1e-12
+    # truncation errors are (numerically) rank <= 3
+    assert lr.residual_nmed < 1e-6
+
+
+def test_lowrank_rank_zero_for_exact():
+    ex = mm.exact_multiplier()
+    lr = lutmod.choose_rank(ex.lut)
+    assert lr.rank == 0 and lr.residual_nmed == 0.0
+
+
+def test_choose_rank_meets_tolerance_or_maxrank():
+    nl = nlmod.bw8()
+    rng = np.random.default_rng(1)
+    mask = rng.random(len(nl.prunable_gates())) < 0.04
+    m = mm.pruned(mask)
+    lr = lutmod.choose_rank(m.lut, tol_nmed=5e-4, max_rank=8)
+    assert lr.rank <= 8
+    if lr.rank < 8:
+        assert lr.residual_nmed <= 5e-4
+
+
+def test_nsga2_front_is_nondominated():
+    front = pareto.nsga2(pareto.NSGAConfig(pop_size=10, generations=3, seed=1))
+    objs = np.array([[p.area, p.nmed] for p in front])
+    for i in range(len(objs)):
+        for j in range(len(objs)):
+            if i == j:
+                continue
+            dominates = (objs[j] <= objs[i]).all() and (objs[j] < objs[i]).any()
+            assert not dominates, f"{j} dominates {i} in final front"
+
+
+def test_nsga2_deterministic():
+    cfg = pareto.NSGAConfig(pop_size=8, generations=2, seed=7)
+    f1 = pareto.nsga2(cfg)
+    f2 = pareto.nsga2(cfg)
+    assert [(p.area, p.nmed) for p in f1] == [(p.area, p.nmed) for p in f2]
+
+
+def test_pick_by_nmed():
+    lib = list(mm.static_library().values())
+    m = pareto.pick_by_nmed(lib, 0.01)
+    assert m.stats.nmed <= 0.01
+    # must pick something cheaper than exact when allowed error
+    assert m.area_nand2eq < mm.exact_multiplier().area_nand2eq
+    # zero budget -> exact
+    m0 = pareto.pick_by_nmed(lib, 0.0)
+    assert m0.stats.wce == 0
+
+
+def test_static_library_names_unique_and_loadable():
+    lib = mm.static_library()
+    for name in lib:
+        assert mm.get_multiplier(name).name == name

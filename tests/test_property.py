@@ -1,0 +1,128 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.approx import quant
+from repro.core import carbon as cb
+from repro.core import lut as lutmod
+from repro.core import multipliers as mm
+from repro.core import netlist as nl
+
+SET = settings(max_examples=25, deadline=None)
+
+
+@SET
+@given(st.integers(0, 2 ** 32 - 1),
+       st.integers(1, 8), st.integers(2, 64))
+def test_quantize_roundtrip_bound(seed, m, k):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((m, k)) * rng.uniform(0.1, 100),
+                    jnp.float32)
+    q, s = quant.quantize(x)
+    err = np.abs(np.asarray(quant.dequantize(q, s)) - np.asarray(x))
+    assert err.max() <= float(np.asarray(s).max()) * 0.5 + 1e-6
+    assert np.asarray(q).min() >= -128 and np.asarray(q).max() <= 127
+
+
+@SET
+@given(st.integers(0, 4), st.integers(0, 4))
+def test_truncation_closed_form_property(ta, tb):
+    m = mm.truncated(ta, tb)
+    a = np.arange(-128, 128, dtype=np.int64)
+    ta_v = a - np.mod(a, 2 ** ta) if ta else a
+    tb_v = a - np.mod(a, 2 ** tb) if tb else a
+    ua = (a & 0xFF).astype(int)
+    got = m.lut[np.ix_(ua, ua)].astype(np.int64)
+    np.testing.assert_array_equal(got, ta_v[:, None] * tb_v[None, :])
+
+
+@SET
+@given(st.integers(0, 2 ** 32 - 1), st.floats(0.005, 0.10))
+def test_pruning_invariants(seed, density):
+    rng = np.random.default_rng(seed)
+    mask = rng.random(len(nl.bw8().prunable_gates())) < density
+    m = mm.pruned(mask, name=f"prop{seed % 1000}")
+    ex = mm.exact_multiplier()
+    assert m.area_nand2eq <= ex.area_nand2eq + 1e-9
+    assert m.stats.nmed <= m.stats.wce / lutmod.MAX_ABS_PRODUCT + 1e-12
+    assert 0.0 <= m.stats.error_rate <= 1.0
+
+
+@SET
+@given(st.integers(0, 2 ** 32 - 1))
+def test_lowrank_residual_monotone_in_rank(seed):
+    """SVD truncation is monotone in the FROBENIUS norm (the L1-based NMED
+    may wiggle slightly, so the invariant is asserted on MSE)."""
+    rng = np.random.default_rng(seed)
+    mask = rng.random(len(nl.bw8().prunable_gates())) < 0.03
+    m = mm.pruned(mask, name=f"lrprop{seed % 1000}")
+    e = lutmod.error_surface(m.lut).astype(np.float64)
+    mses = []
+    for r in (0, 1, 2, 4, 8):
+        lr = lutmod.lowrank_error(m.lut, r)
+        resid = e - (lr.reconstruct() if lr.rank else 0.0)
+        mses.append(float((resid ** 2).mean()))
+    for a, b in zip(mses, mses[1:]):
+        assert b <= a * (1 + 1e-9) + 1e-9
+
+
+@SET
+@given(st.floats(0.5, 500.0), st.floats(0.5, 500.0),
+       st.sampled_from([7, 14, 28]))
+def test_carbon_monotone_property(a1, a2, node):
+    lo, hi = sorted((a1, a2))
+    c_lo = cb.embodied_carbon(lo, node).total_g
+    c_hi = cb.embodied_carbon(hi, node).total_g
+    if hi > lo * 1.001:
+        assert c_hi > c_lo
+    y = cb.murphy_yield(hi, node)
+    assert 0.0 < y <= 1.0
+
+
+@SET
+@given(st.integers(1, 6), st.integers(1, 6), st.integers(1, 6),
+       st.integers(0, 2 ** 31 - 1))
+def test_approx_gemm_linearity_in_k(m_, n_, k_, seed):
+    """sum_k structure: concatenating along K adds contributions exactly."""
+    from repro.approx import gemm as G
+    from repro.kernels import ref
+    rng = np.random.default_rng(seed)
+    mult = mm.truncated(2, 2)
+    lut = jnp.asarray(mult.lut)
+    a1 = jnp.asarray(rng.integers(-128, 128, (m_, k_)), jnp.int8)
+    a2 = jnp.asarray(rng.integers(-128, 128, (m_, k_)), jnp.int8)
+    b1 = jnp.asarray(rng.integers(-128, 128, (k_, n_)), jnp.int8)
+    b2 = jnp.asarray(rng.integers(-128, 128, (k_, n_)), jnp.int8)
+    whole = ref.lut_matmul(jnp.concatenate([a1, a2], 1),
+                           jnp.concatenate([b1, b2], 0), lut)
+    parts = ref.lut_matmul(a1, b1, lut) + ref.lut_matmul(a2, b2, lut)
+    np.testing.assert_array_equal(np.asarray(whole), np.asarray(parts))
+
+
+@SET
+@given(st.integers(1, 4), st.integers(8, 64), st.integers(8, 64),
+       st.integers(0, 2 ** 31 - 1))
+def test_blockwise_attention_matches_naive(b, sq, d16, seed):
+    from repro.models import attention as A
+    from repro.models import common as C
+    d = (d16 // 8) * 8 or 8
+    rng = np.random.default_rng(seed)
+    h, kvh = 4, 2
+    q = jnp.asarray(rng.standard_normal((b, sq, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, sq, kvh, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, sq, kvh, d)), jnp.float32)
+    want = np.asarray(C.naive_attention(q, k, v, causal=True))
+    got = np.asarray(A.blockwise_attention(q, k, v, 16, True, 0))
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+@SET
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 64))
+def test_hlo_type_bytes(seed, n):
+    from repro.roofline import hlo_parse as hp
+    rng = np.random.default_rng(seed)
+    dims = rng.integers(1, 64, size=rng.integers(1, 4))
+    s = f"bf16[{','.join(map(str, dims))}]"
+    assert hp._type_bytes(s) == int(np.prod(dims)) * 2
