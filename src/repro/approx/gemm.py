@@ -41,7 +41,7 @@ MODES = ("exact", "trunc", "lowrank")
     jax.tree_util.register_dataclass,
     data_fields=("fu_q", "fv_q", "s_r"),
     meta_fields=("name", "mode", "trunc_a", "trunc_b", "rank",
-                 "residual_nmed", "nmed"),
+                 "residual_nmed", "nmed", "policy"),
 )
 @dataclasses.dataclass(frozen=True)
 class MultSpec:
@@ -56,10 +56,26 @@ class MultSpec:
     fu_q: jax.Array           # (R, 256) int8   (row r of U factor, by a&0xFF)
     fv_q: jax.Array           # (R, 256) int8
     s_r: jax.Array            # (R,) f32        (per-rank dequant scale)
+    # Kernel-dispatch policy ("auto" | "pallas" | "xla"), a *meta* field:
+    # it is part of the treedef, so changing it is a new jit cache key.
+    policy: str = "auto"
 
     @property
     def is_exact(self) -> bool:
         return self.mode == "exact"
+
+    @property
+    def n_planes(self) -> int:
+        """Operand planes the stacked kernel runs: raw + R corrections."""
+        return 1 + self.rank
+
+    def with_policy(self, policy: str | None) -> "MultSpec":
+        """Same spec under a different kernel-dispatch policy (validated)."""
+        from repro.kernels import dispatch
+        p = dispatch.resolve(policy)
+        if p == self.policy:
+            return self
+        return dataclasses.replace(self, policy=p)
 
 
 def exact_spec() -> MultSpec:
@@ -154,19 +170,21 @@ def approx_qgemm(a_q: jax.Array, b_q: jax.Array, spec: MultSpec
 # Float-in / float-out approximate matmul with straight-through gradients
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
-def approx_matmul(x: jax.Array, w: jax.Array, spec: MultSpec,
-                  use_kernel: bool = False) -> jax.Array:
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def approx_matmul(x: jax.Array, w: jax.Array, spec: MultSpec) -> jax.Array:
     """x (..., k) @ w (k, n) through the approximate multiplier.
 
     Activations quantize per-tensor, weights per-output-channel (standard
-    int8 accelerator setup).  `use_kernel=True` routes the O(mkn) work
-    through the Pallas TPU kernel (kernels/approx_qgemm.py).
+    int8 accelerator setup).  Whether the O(mkn) work runs on the Pallas
+    TPU kernel (kernels/approx_qgemm.py) or the XLA reference path is
+    decided per GEMM by `spec.policy` (kernels/dispatch.py) from the
+    backend, the trace-time shapes, and the spec's plane count.
     """
-    return _approx_matmul_fwd(x, w, spec, use_kernel)[0]
+    return _approx_matmul_fwd(x, w, spec)[0]
 
 
-def _approx_matmul_fwd(x, w, spec: MultSpec, use_kernel: bool):
+def _approx_matmul_fwd(x, w, spec: MultSpec):
+    from repro.kernels import dispatch
     lead = x.shape[:-1]
     k = x.shape[-1]
     x2 = x.reshape(-1, k)
@@ -176,7 +194,8 @@ def _approx_matmul_fwd(x, w, spec: MultSpec, use_kernel: bool):
     # tinyllama train_4k approx cell; see EXPERIMENTS.md §Perf).
     xq, sx = quant.quantize(x2, axis=0)       # (m, k) -> scales (m, 1)
     wq, sw = quant.quantize(w, axis=1)        # (k, n) -> per-n scales (1, n)
-    if use_kernel:
+    if dispatch.use_pallas_gemm(spec.policy, m=x2.shape[0], k=k,
+                                n=w.shape[1], n_planes=spec.n_planes):
         from repro.kernels import ops as kops
         acc = kops.approx_qgemm(xq, wq, spec)
     else:
@@ -185,7 +204,7 @@ def _approx_matmul_fwd(x, w, spec: MultSpec, use_kernel: bool):
     return out.reshape(*lead, w.shape[1]).astype(x.dtype), (x, w)
 
 
-def _approx_matmul_bwd(spec: MultSpec, use_kernel: bool, res, g):
+def _approx_matmul_bwd(spec: MultSpec, res, g):
     x, w = res
     gf = g.astype(jnp.float32)
     xf = x.astype(jnp.float32)

@@ -25,20 +25,26 @@ def _as_weight(w, dtype):
 
 def gemm(x: jax.Array, w,
          spec: gemm_mod.MultSpec | None = None,
-         use_kernel: bool = False) -> jax.Array:
-    """x (..., k) @ w (k, n), approximate if spec says so."""
+         policy: str | None = None) -> jax.Array:
+    """x (..., k) @ w (k, n), approximate if spec says so.
+
+    `policy` overrides the spec-carried kernel-dispatch policy for this
+    call ("auto" | "pallas" | "xla"); None keeps `spec.policy`.
+    """
     w = _as_weight(w, x.dtype)
     if spec is None or spec.is_exact:
         return jnp.einsum("...k,kn->...n", x, w)
-    return gemm_mod.approx_matmul(x, w, spec, use_kernel)
+    if policy is not None:
+        spec = spec.with_policy(policy)
+    return gemm_mod.approx_matmul(x, w, spec)
 
 
 def dense(x: jax.Array, w: jax.Array, b: jax.Array | None = None,
           spec: gemm_mod.MultSpec | None = None,
-          use_kernel: bool = False) -> jax.Array:
+          policy: str | None = None) -> jax.Array:
     """Linear layer.  The bias add stays exact (the paper approximates the
     MAC multipliers; accumulators/adders are exact)."""
-    y = gemm(x, w, spec, use_kernel)
+    y = gemm(x, w, spec, policy)
     if b is not None:
         y = y + b
     return y
@@ -62,7 +68,7 @@ def _im2col(x: jax.Array, r: int, s: int, stride: int, padding: int
 
 def conv2d(x: jax.Array, w: jax.Array, stride: int = 1, padding: int = 1,
            spec: gemm_mod.MultSpec | None = None,
-           use_kernel: bool = False) -> jax.Array:
+           policy: str | None = None) -> jax.Array:
     """NHWC conv via im2col + (approximate) GEMM.
 
     x (n, h, w, c_in), w (r, s, c_in, c_out).  im2col is exactly how the
@@ -77,7 +83,7 @@ def conv2d(x: jax.Array, w: jax.Array, stride: int = 1, padding: int = 1,
             dimension_numbers=("NHWC", "HWIO", "NHWC"))
     patches, ho, wo = _im2col(x, r, s, stride, padding)
     w2 = w.reshape(r * s * c_in, c_out)
-    y = gemm(patches, w2, spec, use_kernel)
+    y = gemm(patches, w2, spec, policy)
     return y.reshape(x.shape[0], ho, wo, c_out)
 
 

@@ -1,0 +1,77 @@
+"""Mesh-construction shims.
+
+Two APIs drifted across JAX releases:
+
+* `jax.sharding.AbstractMesh` — newer JAX takes `(axis_sizes, axis_names)`
+  as two sequences; 0.4.x takes a single tuple of `(name, size)` pairs.
+  The constructor style is feature-probed once (trial construction of a
+  1-element mesh) and cached.
+* `jax.make_mesh` — present since 0.4.35; older versions need a manual
+  device reshape into `jax.sharding.Mesh`.
+
+Everything here is callable-only (no module-level device probes): importing
+this module never initializes JAX device state.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+# AbstractMesh appeared mid-0.4.x; importing it unconditionally would break
+# this package on the oldest JAX the make_mesh fallback below exists for.
+_AbstractMesh = getattr(jax.sharding, "AbstractMesh", None)
+
+
+@functools.lru_cache(maxsize=None)
+def _abstract_mesh_style() -> str:
+    """"split" = AbstractMesh(sizes, names); "pairs" = 0.4.x pair-tuples."""
+    try:
+        _AbstractMesh((1,), ("_compat_probe",))
+        return "split"
+    except TypeError:
+        pass
+    _AbstractMesh((("_compat_probe", 1),))
+    return "pairs"
+
+
+def make_abstract_mesh(axis_shapes: Sequence[int],
+                       axis_names: Sequence[str]):
+    """Device-free mesh for sharding-rule evaluation, on any JAX that has
+    AbstractMesh (raises a targeted error on ones that predate it)."""
+    if _AbstractMesh is None:
+        raise NotImplementedError(
+            f"jax {jax.__version__} has no jax.sharding.AbstractMesh; "
+            "build a concrete mesh via repro.compat.make_mesh instead")
+    sizes = tuple(int(s) for s in axis_shapes)
+    names = tuple(str(n) for n in axis_names)
+    if len(sizes) != len(names):
+        raise ValueError(f"{len(sizes)} axis sizes vs {len(names)} names")
+    if _abstract_mesh_style() == "split":
+        return _AbstractMesh(sizes, names)
+    return _AbstractMesh(tuple(zip(names, sizes)))
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
+              devices: Sequence | None = None) -> Mesh:
+    """`jax.make_mesh` where available, manual Mesh construction otherwise.
+
+    With `devices=None` on a make_mesh-capable JAX this defers entirely to
+    jax.make_mesh (which picks a contiguous, locality-aware device order);
+    the fallback uses jax.devices() order.
+    """
+    sizes = tuple(int(s) for s in axis_shapes)
+    names = tuple(str(n) for n in axis_names)
+    n = math.prod(sizes)
+    if devices is None and hasattr(jax, "make_mesh"):
+        return jax.make_mesh(sizes, names)
+    devs = list(devices) if devices is not None else jax.devices()
+    if len(devs) < n:
+        raise ValueError(f"mesh {dict(zip(names, sizes))} needs {n} devices, "
+                         f"have {len(devs)}")
+    return Mesh(np.asarray(devs[:n], dtype=object).reshape(sizes), names)

@@ -1,0 +1,62 @@
+"""Pallas TPU API shims.
+
+JAX renamed the TPU compiler-params dataclass across releases
+(`pltpu.TPUCompilerParams` on 0.4.x / early 0.5.x, `pltpu.CompilerParams`
+after the rename; very old versions took a plain dict keyed by backend).
+Kernel modules must not spell any of these directly — they call
+`tpu_compiler_params(...)` and get whatever the installed JAX accepts.
+
+Dimension-semantics strings are normalized too: the Mosaic vocabulary is
+("parallel", "arbitrary"); "sequential" is accepted as an alias for
+"arbitrary" since some external kernel code uses that spelling.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+from jax.experimental.pallas import tpu as pltpu
+
+_DIM_SEMANTICS_ALIASES = {
+    "parallel": "parallel",
+    "arbitrary": "arbitrary",
+    "sequential": "arbitrary",
+}
+
+# Feature probe, newest spelling first.
+_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams", None)
+
+
+def normalize_dimension_semantics(sem: Sequence[str]) -> tuple[str, ...]:
+    """Map each grid-dimension semantic onto the Mosaic vocabulary."""
+    out = []
+    for s in sem:
+        canon = _DIM_SEMANTICS_ALIASES.get(str(s).lower())
+        if canon is None:
+            raise ValueError(
+                f"unknown dimension semantic {s!r}; expected one of "
+                f"{sorted(_DIM_SEMANTICS_ALIASES)}")
+        out.append(canon)
+    return tuple(out)
+
+
+def tpu_compiler_params(*, dimension_semantics: Sequence[str] | None = None,
+                        **kwargs: Any) -> Any:
+    """Build the `compiler_params=` argument for a TPU `pl.pallas_call`.
+
+    Returns the params dataclass the installed JAX exposes; on ancient
+    versions with neither class, falls back to the dict form pallas_call
+    accepted there.
+    """
+    if dimension_semantics is not None:
+        kwargs["dimension_semantics"] = \
+            normalize_dimension_semantics(dimension_semantics)
+    if _PARAMS_CLS is None:
+        return dict(mosaic=kwargs)
+    return _PARAMS_CLS(**kwargs)
+
+
+def compiler_params_cls() -> Any:
+    """The resolved params class (None on dict-form JAX). For tests/docs."""
+    return _PARAMS_CLS

@@ -48,6 +48,7 @@ class ModelConfig:
     # numerics / execution
     dtype: str = "bfloat16"
     mult: str = "exact"         # approximate-multiplier library name
+    kernel_policy: str = "auto"  # "auto" | "pallas" | "xla" (kernels/dispatch)
     attn_impl: str = "chunked"  # "naive" | "chunked" | "flash"
     attn_chunk: int = 512
     remat: bool = True

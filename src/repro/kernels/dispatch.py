@@ -1,0 +1,91 @@
+"""Kernel-dispatch policy: Pallas kernels vs the XLA reference path.
+
+Replaces the old `use_kernel: bool` threaded through approx/gemm.py with a
+named policy resolved per GEMM at trace time:
+
+  "xla"    — never use the Pallas kernels (pure jnp/lax path);
+  "pallas" — always use them (interpret mode off-TPU, Mosaic on TPU);
+  "auto"   — use them when they plausibly win: real TPU backend, operand
+             dims at least one MXU tile (padding a tiny GEMM to 128-multiples
+             costs more than it saves), and few enough correction planes to
+             fit the VMEM accumulator budget.  Off-TPU, auto picks XLA —
+             interpret-mode Pallas is a correctness vehicle, not a fast path.
+
+The policy rides on `MultSpec.policy` (a static/meta pytree field, so a
+policy change is a new jit cache key — no stale-trace footgun), is settable
+per model via `ModelConfig.kernel_policy`, per run via the `--kernel-policy`
+flag on launch/train.py and launch/serve.py, and process-wide via the
+`REPRO_KERNEL_POLICY` environment variable.
+"""
+
+from __future__ import annotations
+
+import os
+
+from repro import compat
+
+POLICIES = ("auto", "pallas", "xla")
+
+#: Below one MXU tile on any operand dim, block padding dominates.
+MIN_DIM = 128
+#: (R+1) int8 operand planes; beyond this the (P, bm, bn) int32 accumulator
+#: plus double-buffered operands blow the ~16 MiB/core VMEM budget at the
+#: default block shape.
+MAX_PLANES = 8
+
+_ENV_VAR = "REPRO_KERNEL_POLICY"
+
+
+def default_policy() -> str:
+    """Process-wide default: $REPRO_KERNEL_POLICY or "auto"."""
+    p = os.environ.get(_ENV_VAR, "auto").strip().lower()
+    return p if p in POLICIES else "auto"
+
+
+def resolve(policy: str | None) -> str:
+    """Normalize a user-supplied policy.
+
+    None/"" and "auto" both resolve through the process default, so
+    $REPRO_KERNEL_POLICY can pin "pallas"/"xla" process-wide for any run
+    that didn't explicitly choose a non-auto policy.
+    """
+    p = "auto" if policy in (None, "") else str(policy).lower()
+    if p not in POLICIES:
+        raise ValueError(f"unknown kernel policy {policy!r}; "
+                         f"expected one of {POLICIES}")
+    return default_policy() if p == "auto" else p
+
+
+def interpret_mode() -> bool:
+    """Pallas TPU kernels must run interpret=True off-TPU (CPU containers);
+    on a real TPU the same pallas_call lowers through Mosaic."""
+    return not compat.is_tpu_backend()
+
+
+def use_pallas_gemm(policy: str | None, *, m: int, k: int, n: int,
+                    n_planes: int = 1) -> bool:
+    """Should this (m, k, n) approximate GEMM with `n_planes` operand planes
+    run on the Pallas kernel?  Resolved at trace time (shapes are static)."""
+    p = resolve(policy)
+    if p == "xla":
+        return False
+    if p == "pallas":
+        return True
+    # auto
+    if not compat.is_tpu_backend():
+        return False
+    if n_planes > MAX_PLANES:
+        return False
+    return min(m, k, n) >= MIN_DIM
+
+
+def use_pallas_attention(policy: str | None, *, seq: int,
+                         head_dim: int) -> bool:
+    """Same decision for flash attention (kv-blocked kernel vs the XLA
+    blockwise custom-VJP twin in models/attention.py)."""
+    p = resolve(policy)
+    if p == "xla":
+        return False
+    if p == "pallas":
+        return True
+    return compat.is_tpu_backend() and seq >= MIN_DIM and head_dim >= 64

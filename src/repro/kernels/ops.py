@@ -17,11 +17,9 @@ import numpy as np
 
 from repro.approx import gemm as gemm_mod
 from repro.kernels import approx_qgemm as qk
+from repro.kernels import dispatch
 from repro.kernels import flash_attention as fk
 from repro.kernels import quantize as qz
-
-# CPU containers must run Pallas TPU kernels in interpret mode.
-INTERPRET = jax.default_backend() != "tpu"
 
 
 def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
@@ -70,7 +68,7 @@ def approx_qgemm(a_q: jax.Array, b_q: jax.Array, spec: gemm_mod.MultSpec,
     a_s = _pad_to(_pad_to(a_s, 1, bm), 2, bk)
     b_s = _pad_to(_pad_to(b_s, 1, bk), 2, bn)
     out = qk.approx_qgemm_stacked(a_s, b_s, s, bm=bm, bk=bk, bn=bn,
-                                  interpret=INTERPRET)
+                                  interpret=dispatch.interpret_mode())
     return out[:m, :n]
 
 
@@ -85,7 +83,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     assert sq % bq == 0 and skv % bkv == 0, \
         "pad sequence to block multiples before calling"
     return fk.flash_attention(q, k, v, causal=causal, bq=bq, bkv=bkv,
-                              interpret=INTERPRET)
+                              interpret=dispatch.interpret_mode())
 
 
 def quantize_rows(x: jax.Array, *, bm: int | None = None
@@ -94,5 +92,5 @@ def quantize_rows(x: jax.Array, *, bm: int | None = None
     m, k = x.shape
     bm = bm or min(qz.DEFAULT_BM, max(8, 1 << (m - 1).bit_length()))
     xp = _pad_to(x, 0, bm)
-    q, s = qz.quantize_rows(xp, bm=bm, interpret=INTERPRET)
+    q, s = qz.quantize_rows(xp, bm=bm, interpret=dispatch.interpret_mode())
     return q[:m], s[:m]

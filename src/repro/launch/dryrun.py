@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro import configs
+from repro import compat, configs
 from repro.configs.base import ModelConfig, ShapeSpec
 from repro.launch.mesh import make_production_mesh
 from repro.models import api
@@ -216,7 +216,7 @@ def main() -> int:
         d, m = (int(x) for x in args.mesh_override.split(","))
         assert d * m == 256, "single-pod override must use 256 chips"
         meshes.append((f"single{d}x{m}",
-                       jax.make_mesh((d, m), ("data", "model"))))
+                       compat.make_mesh((d, m), ("data", "model"))))
     if args.mesh in ("single", "both") and not args.mesh_override:
         meshes.append(("single", make_production_mesh(multi_pod=False)))
     if args.mesh in ("multi", "both") and not args.mesh_override:

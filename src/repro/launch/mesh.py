@@ -10,6 +10,8 @@ from __future__ import annotations
 import jax
 from jax.sharding import Mesh
 
+from repro import compat
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """Single pod: (data=16, model=16) = 256 chips (TPU v5e pod-slice).
@@ -18,7 +20,7 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     (DCN between pods, ICI within)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+    return compat.make_mesh(shape, axes)
 
 
 def make_host_mesh(model: int | None = None) -> Mesh:
@@ -26,4 +28,4 @@ def make_host_mesh(model: int | None = None) -> Mesh:
     n = len(jax.devices())
     model = model or (2 if n % 2 == 0 and n > 1 else 1)
     data = n // model
-    return jax.make_mesh((data, model), ("data", "model"))
+    return compat.make_mesh((data, model), ("data", "model"))

@@ -33,15 +33,24 @@ def main(argv=None) -> int:
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--mult", default="")
+    ap.add_argument("--kernel-policy", default="",
+                    choices=["", "auto", "pallas", "xla"],
+                    help="Pallas/XLA GEMM dispatch (kernels/dispatch.py); "
+                         "'pallas' on CPU runs kernels in interpret mode")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = configs.get_config(args.arch)
     if args.reduced:
         cfg = reduce_cfg(cfg)
+    over = {}
     if args.mult:
+        over["mult"] = args.mult
+    if args.kernel_policy:
+        over["kernel_policy"] = args.kernel_policy
+    if over:
         import dataclasses
-        cfg = dataclasses.replace(cfg, mult=args.mult)
+        cfg = dataclasses.replace(cfg, **over)
 
     mesh = make_host_mesh()
     rng = np.random.default_rng(args.seed)

@@ -40,6 +40,10 @@ def main(argv=None) -> int:
     ap.add_argument("--accum", type=int, default=1)
     ap.add_argument("--mult", default="",
                     help="approximate multiplier (paper mode)")
+    ap.add_argument("--kernel-policy", default="",
+                    choices=["", "auto", "pallas", "xla"],
+                    help="Pallas/XLA GEMM dispatch (kernels/dispatch.py); "
+                         "'pallas' on CPU runs kernels in interpret mode")
     ap.add_argument("--optimizer", default="adamw",
                     choices=["adamw", "adafactor"])
     ap.add_argument("--moment-dtype", default="f32",
@@ -59,6 +63,8 @@ def main(argv=None) -> int:
     over = {}
     if args.mult:
         over["mult"] = args.mult
+    if args.kernel_policy:
+        over["kernel_policy"] = args.kernel_policy
     if args.d_model:
         over["d_model"] = args.d_model
         over["n_heads"] = max(4, args.d_model // 64)

@@ -32,9 +32,16 @@ def family_module(cfg: ModelConfig):
 
 
 def make_spec(cfg: ModelConfig) -> gemm_mod.MultSpec | None:
+    """Resolve the config's multiplier AND its kernel-dispatch policy.
+
+    The policy rides on the spec (static pytree field), so every model /
+    train / serve path that threads a spec automatically dispatches GEMMs
+    per `cfg.kernel_policy` — no separate plumbing.
+    """
     if cfg.mult in ("exact", "", None):
         return None
-    return gemm_mod.spec_from_name(cfg.mult)
+    spec = gemm_mod.spec_from_name(cfg.mult)
+    return spec.with_policy(cfg.kernel_policy)
 
 
 def init_params(cfg: ModelConfig, key: jax.Array) -> Params:

@@ -249,10 +249,17 @@ def _decode_attention(q, k_cache, v_cache, length, window=0) -> jax.Array:
 
 
 def attention(q, k, v, impl: str = "chunked", chunk: int = 512,
-              causal: bool = True, window: int = 0) -> jax.Array:
+              causal: bool = True, window: int = 0,
+              policy: str | None = None) -> jax.Array:
     """Dispatch.  "chunked" = blockwise flash-style custom-VJP attention
     (models/attention.py): O(chunk*s) fwd AND bwd memory — the lax.scan
-    variants in this file are kept as test oracles only."""
+    variants in this file are kept as test oracles only.
+
+    For impl="flash", the kernel-dispatch `policy` (kernels/dispatch.py)
+    decides Pallas kernel vs the XLA blockwise twin: "xla" (and "auto"
+    off-TPU) falls back to blockwise_attention, "pallas" forces the kernel
+    (interpret mode off-TPU).
+    """
     from repro.models.attention import blockwise_attention
     if window:
         return blockwise_attention(q, k, v, chunk, True, window)
@@ -261,8 +268,11 @@ def attention(q, k, v, impl: str = "chunked", chunk: int = 512,
     if impl == "chunked":
         return blockwise_attention(q, k, v, chunk, causal, 0)
     if impl == "flash":
-        from repro.kernels import ops as kops
+        from repro.kernels import dispatch
         b, s, h, d = q.shape
+        if not dispatch.use_pallas_attention(policy, seq=s, head_dim=d):
+            return blockwise_attention(q, k, v, chunk, causal, 0)
+        from repro.kernels import ops as kops
         kvh = k.shape[2]
         g = h // kvh
         ke = jnp.repeat(k, g, axis=2) if g > 1 else k

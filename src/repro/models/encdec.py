@@ -97,7 +97,8 @@ def _mha(x, kv_src, p, cfg: ModelConfig, spec, prefix="", causal=True,
     if impl == "chunked" and x.shape[1] != kv_src.shape[1]:
         impl = "naive"  # cross-attention (small enc side): direct
     attn = C.attention(q, k, v, impl=impl, chunk=cfg.attn_chunk,
-                       causal=causal)
+                       causal=causal,
+                       policy=spec.policy if spec is not None else None)
     return AL.dense(attn.reshape(b, s, -1), p[prefix + "wo"],
                     p[prefix + "bo"], spec)
 
@@ -210,7 +211,8 @@ def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig, spec=None,
             b, s, cfg.n_kv_heads, hd)
         v = AL.dense(x, lp["wv"], lp["bv"], spec).reshape(
             b, s, cfg.n_kv_heads, hd)
-        attn = C.attention(q, k, v, impl=cfg.attn_impl, chunk=cfg.attn_chunk)
+        attn = C.attention(q, k, v, impl=cfg.attn_impl, chunk=cfg.attn_chunk,
+                           policy=spec.policy if spec is not None else None)
         hh = hh + AL.dense(attn.reshape(b, s, -1), lp["wo"], lp["bo"], spec)
         x = C.layernorm(hh, lp["xln"], lp["xlnb"])
         hh = hh + _mha(x, enc_out, lp, cfg, spec, prefix="x", causal=False)

@@ -157,7 +157,8 @@ def decoder_block(h, lp, cfg: ModelConfig, spec, positions):
     x = C.rmsnorm(h, lp["ln1"])
     q, k, v = _qkv(x, lp, cfg, spec, positions)
     attn = C.attention(q, k, v, impl=cfg.attn_impl, chunk=cfg.attn_chunk,
-                       causal=True, window=0)
+                       causal=True, window=0,
+                       policy=spec.policy if spec is not None else None)
     attn = hint(attn, "batch", None, "heads", None)
     h = h + AL.dense(attn.reshape(*h.shape[:2], -1), lp["wo"], None, spec)
     x = C.rmsnorm(h, lp["ln2"])
@@ -369,7 +370,8 @@ def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig, spec=None,
     def block_collect(h, lp):
         x = C.rmsnorm(h, lp["ln1"])
         q, k, v = _qkv(x, lp, cfg, spec, positions)
-        attn = C.attention(q, k, v, impl=cfg.attn_impl, chunk=cfg.attn_chunk)
+        attn = C.attention(q, k, v, impl=cfg.attn_impl, chunk=cfg.attn_chunk,
+                           policy=spec.policy if spec is not None else None)
         h = h + AL.dense(attn.reshape(b, s, -1), lp["wo"], None, spec)
         x = C.rmsnorm(h, lp["ln2"])
         ff, _ = _ffn(x, lp, cfg, spec)

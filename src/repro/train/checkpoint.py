@@ -1,6 +1,9 @@
 """Sharded, async, atomic checkpointing with elastic restore.
 
 Layout:  <dir>/step_<N>/proc_<k>.msgpack.zst  +  <dir>/step_<N>/manifest.json
+(the .zst suffix is historical; the actual codec — zstd when the optional
+`zstandard` package is installed, stdlib zlib otherwise — is recorded in the
+blob header and manifest, and restore follows the header)
 
 * atomic: written to `step_<N>.tmp/`, fsync'd, renamed — a crash never
   leaves a half-checkpoint that restore would pick up;
@@ -28,9 +31,39 @@ from typing import Any
 import jax
 import msgpack
 import numpy as np
-import zstandard
 
-_FORMAT_VERSION = 2
+try:
+    import zstandard
+except ImportError:  # optional dep: stdlib zlib is the fallback codec
+    zstandard = None
+
+# v3 adds the top-level "codec" header field ("zstd" | "zlib"); v2 blobs
+# (no field) are implicitly zstd and still restore.
+_FORMAT_VERSION = 3
+
+
+def default_codec() -> str:
+    return "zstd" if zstandard is not None else "zlib"
+
+
+def _compressor(codec: str):
+    """One compression callable per _pack() call, reused across leaves."""
+    if codec == "zstd":
+        return zstandard.ZstdCompressor(level=3).compress
+    if codec == "zlib":
+        return lambda raw: zlib.compress(raw, 6)
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
+
+
+def _decompressor(codec: str):
+    if codec == "zstd":
+        if zstandard is None:
+            raise IOError("checkpoint was written with zstd but the "
+                          "'zstandard' package is not installed")
+        return zstandard.ZstdDecompressor().decompress
+    if codec == "zlib":
+        return zlib.decompress
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
 
 
 def _flatten(state: Any) -> dict[str, np.ndarray]:
@@ -40,25 +73,27 @@ def _flatten(state: Any) -> dict[str, np.ndarray]:
     return flat
 
 
-def _pack(flat: dict[str, np.ndarray]) -> bytes:
-    cctx = zstandard.ZstdCompressor(level=3)
+def _pack(flat: dict[str, np.ndarray], codec: str | None = None) -> bytes:
+    codec = codec or default_codec()
+    compress = _compressor(codec)
     entries = {}
     for key, arr in flat.items():
         raw = arr.tobytes()
         entries[key] = {
             "dtype": str(arr.dtype), "shape": list(arr.shape),
-            "crc": zlib.crc32(raw), "data": cctx.compress(raw),
+            "crc": zlib.crc32(raw), "data": compress(raw),
         }
-    return msgpack.packb({"version": _FORMAT_VERSION, "entries": entries},
-                         use_bin_type=True)
+    return msgpack.packb({"version": _FORMAT_VERSION, "codec": codec,
+                          "entries": entries}, use_bin_type=True)
 
 
 def _unpack(blob: bytes) -> dict[str, np.ndarray]:
-    dctx = zstandard.ZstdDecompressor()
     doc = msgpack.unpackb(blob, raw=False)
+    codec = doc.get("codec", "zstd")   # pre-v3 blobs are always zstd
+    decompress = _decompressor(codec)
     out = {}
     for key, e in doc["entries"].items():
-        raw = dctx.decompress(e["data"])
+        raw = decompress(e["data"])
         if zlib.crc32(raw) != e["crc"]:
             raise IOError(f"checksum mismatch for {key}")
         out[key] = np.frombuffer(raw, dtype=np.dtype(e["dtype"])).reshape(
@@ -92,6 +127,7 @@ class CheckpointManager:
                 _pack(flat))
             manifest = {
                 "step": step, "version": _FORMAT_VERSION,
+                "codec": default_codec(),
                 "process_count": self.process_count,
                 "leaves": {k: {"shape": list(v.shape),
                                "dtype": str(v.dtype)}

@@ -68,14 +68,15 @@ def test_param_pspec_divisibility_drop():
 
 
 def test_moe_expert_sharding_fallback():
-    from jax.sharding import AbstractMesh, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
+    from repro.compat import make_abstract_mesh
     from repro.sharding import rules
 
     class K:
         def __init__(self, k):
             self.key = k
 
-    mesh = AbstractMesh((1, 2), ("data", "model"))
+    mesh = make_abstract_mesh((1, 2), ("data", "model"))
     # 128 experts % 2 == 0 -> EP on experts dim
     assert rules.param_pspec((K("we_gate"),), (128, 512, 256), mesh) == \
         P("model", "data", None)
@@ -83,7 +84,7 @@ def test_moe_expert_sharding_fallback():
     assert rules.param_pspec((K("we_gate"),), (3, 512, 256), mesh) == \
         P(None, "data", "model")
     # production mesh: grok's 8 experts vs model=16 -> in-expert TP
-    mesh16 = AbstractMesh((16, 16), ("data", "model"))
+    mesh16 = make_abstract_mesh((16, 16), ("data", "model"))
     assert rules.param_pspec((K("we_gate"),), (8, 6144, 32768), mesh16) == \
         P(None, "data", "model")
     # llama4's 128 experts vs model=16 -> EP
@@ -252,9 +253,10 @@ def test_elastic_checkpoint_restore_across_meshes():
 
 
 def test_hierarchical_batch_sharding_multipod():
-    from jax.sharding import AbstractMesh, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
+    from repro.compat import make_abstract_mesh
     from repro.sharding import rules
-    mesh = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    mesh = make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
     spec = rules.batch_pspec("tokens", (256, 4096), mesh)
     assert spec == P(("pod", "data"), None)
     # batch=1 (long_500k) not divisible -> replicated
