@@ -45,6 +45,30 @@ def get_config(arch: str, **overrides) -> ModelConfig:
     return cfg
 
 
+def apply_overrides(cfg: ModelConfig, *, reduced: bool = False,
+                    mult: str = "", kernel_policy: str = "",
+                    **extra) -> ModelConfig:
+    """The CLI config-override dance shared by launch/train and
+    launch/serve: optional tiny same-family config, approximate
+    multiplier, kernel-dispatch policy, plus arbitrary ModelConfig field
+    overrides.  `mult` / `kernel_policy` treat "" as "flag not given"
+    (argparse defaults); extras are applied unless None, so falsy values
+    like `window=0` or `tie_embeddings=False` are honored."""
+    import dataclasses
+    from repro.configs import base
+    if reduced:
+        cfg = base.reduced(cfg)
+    over = {}
+    if mult:
+        over["mult"] = mult
+    if kernel_policy:
+        over["kernel_policy"] = kernel_policy
+    over.update({k: v for k, v in extra.items() if v is not None})
+    if over:
+        cfg = dataclasses.replace(cfg, **over)
+    return cfg
+
+
 def cell_supported(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
     """Whether (arch x shape) is a runnable cell; else the documented skip."""
     if shape.name == "long_500k" and cfg.family not in ("ssm", "hybrid"):

@@ -1,28 +1,26 @@
-"""Batched serving driver: prefill + decode with a KV/state cache.
+"""Batched serving CLI: a thin shell over the continuous-batching Engine
+(`repro.serving`).
 
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
       --reduced --batch 4 --prompt-len 64 --gen 32
 
-Runs a batch of synthetic prompts through prefill, then greedy-decodes;
-reports per-phase latency and tokens/s.  `--mult` serves under an
-approximate multiplier (the paper's accelerator in simulation).
+Submits a batch of synthetic prompts as requests, serves them through the
+engine's prefill-then-join decode loop, and reports per-phase latency and
+tokens/s.  `--mult` serves under an approximate multiplier (the paper's
+accelerator in simulation) on the exact same code path.  All four model
+families go through the engine's single jitted prefill — no family
+special cases.
 """
 
 from __future__ import annotations
 
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.configs.base import reduced as reduce_cfg
 from repro.data import synthetic
-from repro.launch.mesh import make_host_mesh
-from repro.models import api
-from repro.train import train_step as ts
+from repro.serving import Engine, Request, SamplingParams
 
 
 def main(argv=None) -> int:
@@ -38,67 +36,53 @@ def main(argv=None) -> int:
                     help="Pallas/XLA GEMM dispatch (kernels/dispatch.py); "
                          "'pallas' on CPU runs kernels in interpret mode")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--capacity", type=int, default=0,
+                    help="decode-arena slots (default: --batch)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k filter (0 = off)")
     args = ap.parse_args(argv)
 
-    cfg = configs.get_config(args.arch)
-    if args.reduced:
-        cfg = reduce_cfg(cfg)
-    over = {}
-    if args.mult:
-        over["mult"] = args.mult
-    if args.kernel_policy:
-        over["kernel_policy"] = args.kernel_policy
-    if over:
-        import dataclasses
-        cfg = dataclasses.replace(cfg, **over)
+    cfg = configs.apply_overrides(configs.get_config(args.arch),
+                                  reduced=args.reduced, mult=args.mult,
+                                  kernel_policy=args.kernel_policy)
 
-    mesh = make_host_mesh()
     rng = np.random.default_rng(args.seed)
-    params = api.init_params(cfg, jax.random.key(args.seed))
-
-    prompts = jnp.asarray(
-        rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32)
-    extras = {}
+    prompts = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len))
+    frames = img = None
     if cfg.family == "encdec":
-        extras["frames"] = jnp.asarray(synthetic.frames_batch(
-            args.batch, cfg.enc_seq, cfg.d_model, 0, args.seed))
+        frames = synthetic.frames_batch(args.batch, cfg.enc_seq,
+                                        cfg.d_model, 0, args.seed)
     if cfg.cross_every:
-        extras["img_embeds"] = jnp.asarray(synthetic.img_batch(
-            args.batch, cfg.n_img_tokens, cfg.d_model, 0, args.seed))
+        img = synthetic.img_batch(args.batch, cfg.n_img_tokens,
+                                  cfg.d_model, 0, args.seed)
 
     max_len = args.prompt_len + args.gen
-    prefill = ts.make_prefill_step(cfg, mesh)
-    decode = ts.make_decode_step(cfg, mesh, donate=False)
+    eng = Engine(cfg, capacity=args.capacity or args.batch, max_len=max_len,
+                 prefill_buckets=(args.prompt_len,), seed=args.seed)
+    sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                        max_new_tokens=args.gen)
+    for i in range(args.batch):
+        extras = {}
+        if frames is not None:
+            extras["frames"] = frames[i]
+        if img is not None:
+            extras["img_embeds"] = img[i]
+        eng.submit(Request(f"r{i}", prompts[i].tolist(), sp,
+                           extras=extras or None))
+    done = eng.run_until_complete()
 
-    t0 = time.time()
-    if cfg.family == "hybrid":
-        # hybrid prefill keeps O(window) state; use api.prefill via jit
-        logits, cache = prefill(params, prompts, extras)
-    else:
-        spec = api.make_spec(cfg)
-        logits, cache = api.prefill(params, prompts, cfg, spec=spec,
-                                    max_len=max_len, extras=extras)
-    logits = jax.block_until_ready(logits)
-    t_prefill = time.time() - t0
-
-    # greedy decode
-    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-    generated = [tok]
-    t0 = time.time()
-    for _ in range(args.gen - 1):
-        lg, cache = decode(params, cache, tok, extras)
-        tok = jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)[:, None]
-        generated.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.time() - t0
-
-    out = jnp.concatenate(generated, axis=1)
-    toks_per_s = args.batch * (args.gen - 1) / max(t_decode, 1e-9)
+    stats = eng.stats()
+    decode_toks = sum(len(c.tokens) - 1 for c in done)
+    toks_per_s = decode_toks / max(stats["decode_s"], 1e-9)
+    first = next(c for c in done if c.request_id == "r0")
     print(f"[serve] arch={cfg.name} mult={cfg.mult or 'exact'} "
           f"batch={args.batch}")
-    print(f"[serve] prefill {args.prompt_len} toks: {t_prefill:.3f}s; "
-          f"decode: {toks_per_s:.1f} tok/s")
-    print(f"[serve] sample continuation ids: {np.asarray(out[0, :16])}")
+    print(f"[serve] prefill {args.prompt_len} toks: "
+          f"{stats['prefill_s']:.3f}s; decode: {toks_per_s:.1f} tok/s")
+    print(f"[serve] sample continuation ids: "
+          f"{np.asarray(first.tokens[:16])}")
     return 0
 
 

@@ -20,7 +20,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.configs.base import reduced as reduce_cfg
 from repro.data import synthetic
 from repro.launch.mesh import make_host_mesh
 from repro.train import checkpoint as ckpt
@@ -57,14 +56,7 @@ def main(argv=None) -> int:
     ap.add_argument("--n-layers", type=int, default=0)
     args = ap.parse_args(argv)
 
-    cfg = configs.get_config(args.arch)
-    if args.reduced:
-        cfg = reduce_cfg(cfg)
     over = {}
-    if args.mult:
-        over["mult"] = args.mult
-    if args.kernel_policy:
-        over["kernel_policy"] = args.kernel_policy
     if args.d_model:
         over["d_model"] = args.d_model
         over["n_heads"] = max(4, args.d_model // 64)
@@ -73,9 +65,9 @@ def main(argv=None) -> int:
         over["head_dim"] = 64
     if args.n_layers:
         over["n_layers"] = args.n_layers
-    if over:
-        import dataclasses
-        cfg = dataclasses.replace(cfg, **over)
+    cfg = configs.apply_overrides(configs.get_config(args.arch),
+                                  reduced=args.reduced, mult=args.mult,
+                                  kernel_policy=args.kernel_policy, **over)
 
     mesh = make_host_mesh()
     options = ts.StepOptions(

@@ -90,10 +90,18 @@ def decode_step(params: Params, cache: dict, tokens: jax.Array,
 
 
 def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig, spec=None,
-            max_len: int | None = None, extras: dict | None = None) -> tuple:
+            max_len: int | None = None, extras: dict | None = None,
+            true_len: jax.Array | None = None) -> tuple:
+    """Uniform jit-compatible prefill for every family.
+
+    `true_len` (b,) supports right-padded prompts (serving buckets): the
+    returned logits are those of each row's last valid token and the cache
+    carries per-row lengths, so mixed-length requests can share one decode
+    batch."""
     mod = family_module(cfg)
     kwargs = dict(extras or {})
-    return mod.prefill(params, tokens, cfg, spec, max_len=max_len, **kwargs)
+    return mod.prefill(params, tokens, cfg, spec, max_len=max_len,
+                       true_len=true_len, **kwargs)
 
 
 def param_count(params: Params) -> int:

@@ -248,6 +248,65 @@ def _decode_attention(q, k_cache, v_cache, length, window=0) -> jax.Array:
     return o.reshape(b, 1, h, d).astype(q.dtype)
 
 
+def rowwise_cache_update(cache: jax.Array, new: jax.Array,
+                         lengths: jax.Array) -> jax.Array:
+    """Write `new` (b, 1, ...) into `cache` (b, smax, ...) at per-row
+    positions `lengths` (b,) — each row of a decode batch may sit at a
+    different sequence offset (continuous batching)."""
+    def upd(c, x, l):
+        return jax.lax.dynamic_update_slice_in_dim(c, x, l, axis=0)
+    return jax.vmap(upd)(cache, new.astype(cache.dtype), lengths)
+
+
+def cache_lengths(cache: dict, batch: int) -> jax.Array:
+    """Normalize cache["length"] — scalar (lock-step) or (b,) (per-slot) —
+    to a per-row (b,) int32 vector."""
+    return jnp.broadcast_to(cache["length"], (batch,)).astype(jnp.int32)
+
+
+def last_valid_slice(h: jax.Array, true_len: jax.Array | None) -> jax.Array:
+    """h (b, s, d) -> (b, 1, d) hidden state of the last *valid* position.
+
+    With right-padded prompts (serving buckets) the last real token of row
+    i is at true_len[i] - 1, not at s - 1."""
+    if true_len is None:
+        return h[:, -1:]
+    idx = jnp.clip(true_len - 1, 0, h.shape[1] - 1)
+    return jnp.take_along_axis(h, idx[:, None, None], axis=1)
+
+
+def tail_window(x: jax.Array, true_len: jax.Array | None, width: int
+                ) -> jax.Array:
+    """Last `width` valid steps of x (b, s, ch) -> (b, width, ch).
+
+    Rows shorter than `width` are zero-filled on the left, matching what a
+    causal conv state would have seen."""
+    if true_len is None:
+        return x[:, -width:]
+    xp = jnp.pad(x, ((0, 0), (width, 0), (0, 0)))
+
+    def row(xr, t):
+        return jax.lax.dynamic_slice_in_dim(xr, t, width, axis=0)
+
+    return jax.vmap(row)(xp, jnp.clip(true_len, 0, x.shape[1]))
+
+
+def prefill_length(true_len: jax.Array | None, s: int) -> jax.Array:
+    """Cache "length" entry after prefilling s tokens: per-row (b,) when a
+    true_len vector is given (mixed-length serving), scalar otherwise."""
+    if true_len is None:
+        return jnp.asarray(s, jnp.int32)
+    return true_len.astype(jnp.int32)
+
+
+def valid_mask(true_len: jax.Array | None, b: int, s: int
+               ) -> jax.Array | None:
+    """(b, s) float mask of valid (non-pad) positions, or None."""
+    if true_len is None:
+        return None
+    return (jnp.arange(s)[None, :] < true_len[:, None]).astype(jnp.float32)
+
+
 def attention(q, k, v, impl: str = "chunked", chunk: int = 512,
               causal: bool = True, window: int = 0,
               policy: str | None = None) -> jax.Array:

@@ -191,9 +191,11 @@ def precompute_cross(params: Params, enc_out: jax.Array, cfg: ModelConfig,
 
 def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig, spec=None,
             max_len: int | None = None, frames: jax.Array | None = None,
-            **_) -> tuple:
+            true_len=None, **_) -> tuple:
     """Encode frames + teacher-forced decoder pass collecting self-KV and
-    precomputing cross-KV."""
+    precomputing cross-KV.  `true_len` (b,) supports right-padded prompts
+    (causal self-attention keeps valid rows exact; pads are masked at
+    decode time via per-row cache lengths)."""
     b, s = tokens.shape
     max_len = max_len or s
     if frames is None:
@@ -223,7 +225,8 @@ def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig, spec=None,
 
     h, (ks, vs) = jax.lax.scan(blk, h, params["dec_layers"])
     xk, xv = precompute_cross(params, enc_out, cfg, spec)
-    h = C.layernorm(h[:, -1:], params["final_norm"], params["final_normb"])
+    h = C.layernorm(C.last_valid_slice(h, true_len), params["final_norm"],
+                    params["final_normb"])
     logits = AL.gemm(h, params["embed"].T, spec)[:, 0]
     pad = max_len - s
     if pad > 0:
@@ -234,16 +237,16 @@ def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig, spec=None,
     dtype = jnp.dtype(cfg.dtype)
     cache = {"k": ks.astype(dtype), "v": vs.astype(dtype),
              "xk": xk.astype(dtype), "xv": xv.astype(dtype),
-             "length": jnp.asarray(s, jnp.int32)}
+             "length": C.prefill_length(true_len, s)}
     return logits, cache
 
 
 def decode_step(params: Params, cache: dict, tokens: jax.Array,
                 cfg: ModelConfig, spec=None, **_) -> tuple:
     b = tokens.shape[0]
-    length = cache["length"]
-    pos_emb = jax.lax.dynamic_slice_in_dim(params["dec_pos"], length, 1, 0)
-    h = AL.embed(tokens, params["embed"]) + pos_emb[None]
+    length = C.cache_lengths(cache, b)
+    pos_emb = jnp.take(params["dec_pos"], length, axis=0)    # (b, d)
+    h = AL.embed(tokens, params["embed"]) + pos_emb[:, None]
     hd = cfg.hd
 
     def blk(hh, sp):
@@ -255,12 +258,9 @@ def decode_step(params: Params, cache: dict, tokens: jax.Array,
             b, 1, cfg.n_kv_heads, hd)
         v = AL.dense(x, lp["wv"], lp["bv"], spec).reshape(
             b, 1, cfg.n_kv_heads, hd)
-        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype),
-                                                 length, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype),
-                                                 length, axis=1)
-        lens = jnp.full((b,), length + 1, jnp.int32)
-        attn = C.decode_attention(q, ck, cv, lens)
+        ck = C.rowwise_cache_update(ck, k, length)
+        cv = C.rowwise_cache_update(cv, v, length)
+        attn = C.decode_attention(q, ck, cv, length + 1)
         hh = hh + AL.dense(attn.reshape(b, 1, -1), lp["wo"], lp["bo"], spec)
         # cross attention against precomputed enc K/V
         x = C.layernorm(hh, lp["xln"], lp["xlnb"])
@@ -280,4 +280,4 @@ def decode_step(params: Params, cache: dict, tokens: jax.Array,
                  cache["xk"], cache["xv"]))
     h = C.layernorm(h, params["final_norm"], params["final_normb"])
     logits = AL.gemm(h, params["embed"].T, spec)
-    return logits, dict(cache, k=ck, v=cv, length=length + 1)
+    return logits, dict(cache, k=ck, v=cv, length=cache["length"] + 1)

@@ -146,9 +146,15 @@ def _split_proj(z: jax.Array, cfg: ModelConfig):
     return zg, xin, Bm, Cm, dt
 
 
-def block(hstate, lp, cfg: ModelConfig, spec, init_state=None):
+def block(hstate, lp, cfg: ModelConfig, spec, init_state=None,
+          true_len=None):
     """One mamba2 block over a full sequence.  Returns (h, final_ssm_state,
-    conv_tail)."""
+    conv_tail).
+
+    `true_len` (b,) marks right-padded rows: pad positions get dt = 0,
+    which makes their state update the identity (decay exp(0) = 1, input
+    contribution 0), so the final state is exactly the state after the
+    last valid token; the conv tail is sliced at the valid boundary."""
     b, s, d = hstate.shape
     d_in, h, p, n, conv_ch = _dims(cfg)
     x = C.rmsnorm(hstate, lp["ln"])
@@ -160,6 +166,9 @@ def block(hstate, lp, cfg: ModelConfig, spec, init_state=None):
     xin, Bm, Cm = jnp.split(conv_out, [d_in, d_in + NGROUPS * n], axis=-1)
 
     dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])   # (b,s,h)
+    mask = C.valid_mask(true_len, b, s)
+    if mask is not None:
+        dt = dt * mask[:, :, None]
     A = -jnp.exp(lp["A_log"])                                      # (h,)
     dtA = dt * A
     xh = xin.reshape(b, s, h, p).astype(jnp.float32)
@@ -172,7 +181,7 @@ def block(hstate, lp, cfg: ModelConfig, spec, init_state=None):
     y = y.reshape(b, s, d_in).astype(hstate.dtype)
     y = C.rmsnorm(y * jax.nn.silu(zg), lp["norm_gate"])
     out = AL.gemm(y, lp["out_proj"], spec)
-    conv_tail = conv_in[:, -(cfg.conv_width - 1):]
+    conv_tail = C.tail_window(conv_in, true_len, cfg.conv_width - 1)
     return hstate + out, final_state, conv_tail
 
 
@@ -249,20 +258,25 @@ def decode_step(params: Params, cache: dict, tokens: jax.Array,
 
 
 def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig, spec=None,
-            max_len: int | None = None, **_) -> tuple:
-    """Run the chunked form over the prompt, carrying states into a cache."""
+            max_len: int | None = None, true_len=None, **_) -> tuple:
+    """Run the chunked form over the prompt, carrying states into a cache.
+
+    With `true_len` (b,), right-padded rows carry exact per-row states
+    (pads are identity updates in the SSD recurrence, see `block`)."""
     b, s = tokens.shape
     hcur = AL.embed(tokens, params["embed"])
 
     def scan_block(hh, lp):
-        out, final_state, conv_tail = block(hh, lp, cfg, spec)
+        out, final_state, conv_tail = block(hh, lp, cfg, spec,
+                                            true_len=true_len)
         return out, (final_state, conv_tail)
 
     hcur, (ssm_states, conv_tails) = jax.lax.scan(scan_block, hcur,
                                                   params["layers"])
-    hcur = C.rmsnorm(hcur[:, -1:], params["final_norm"])
+    hcur = C.rmsnorm(C.last_valid_slice(hcur, true_len),
+                     params["final_norm"])
     logits = AL.gemm(hcur, params["lm_head"], spec)[:, 0]
     cache = {"conv": conv_tails.astype(jnp.dtype(cfg.dtype)),
              "ssm": ssm_states,
-             "length": jnp.asarray(s, jnp.int32)}
+             "length": C.prefill_length(true_len, s)}
     return logits, cache

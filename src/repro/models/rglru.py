@@ -113,20 +113,29 @@ def _rglru_scan(x: jax.Array, a: jax.Array, init: jax.Array | None
     return h, h[:, -1]
 
 
-def rglru(x: jax.Array, rp, init_state: jax.Array | None = None):
-    """RG-LRU over a sequence.  x (b, s, w) post-conv branch input."""
+def rglru(x: jax.Array, rp, init_state: jax.Array | None = None,
+          mask: jax.Array | None = None):
+    """RG-LRU over a sequence.  x (b, s, w) post-conv branch input.
+
+    `mask` (b, s) marks valid positions of right-padded rows: pads get
+    a = 1 and zero input, i.e. identity updates, so the carried state is
+    exactly the state after each row's last valid token."""
     xf = x.astype(jnp.float32)
     r = jax.nn.sigmoid(AL.gemm(xf, rp["w_rg"]))
     i = jax.nn.sigmoid(AL.gemm(xf, rp["w_in"]))
     log_a = -C_EXPONENT * r * jax.nn.softplus(rp["lam"])   # log a_t <= 0
     a = jnp.exp(log_a)
     gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+    if mask is not None:
+        a = jnp.where(mask[..., None] > 0, a, 1.0)
+        gated = gated * mask[..., None]
     h, last = _rglru_scan(gated, a, init_state)
     return h.astype(x.dtype), last
 
 
 def _recurrent_block(hstate, rp, cfg: ModelConfig, spec,
-                     conv_state=None, lru_state=None, decode=False):
+                     conv_state=None, lru_state=None, decode=False,
+                     true_len=None):
     x = C.rmsnorm(hstate, rp["ln"])
     branch = AL.gemm(x, rp["w_x"], spec)
     gate = jax.nn.gelu(AL.gemm(x, rp["w_gate_br"], spec))
@@ -147,8 +156,9 @@ def _recurrent_block(hstate, rp, cfg: ModelConfig, spec,
     else:
         from repro.models.mamba2 import _causal_conv
         conv = _causal_conv(branch, rp["conv_w"], rp["conv_b"])
-        lru_out, last = rglru(conv, rp, lru_state)
-        new_conv = branch[:, -3:]
+        mask = C.valid_mask(true_len, *hstate.shape[:2])
+        lru_out, last = rglru(conv, rp, lru_state, mask)
+        new_conv = C.tail_window(branch, true_len, 3)
         new_lru = last
     out = AL.gemm(lru_out * gate, rp["w_out"], spec)
     hstate = hstate + out
@@ -242,27 +252,24 @@ def decode_step(params: Params, cache: dict, tokens: jax.Array,
                 cfg: ModelConfig, spec=None, **_) -> tuple:
     b = tokens.shape[0]
     h = AL.embed(tokens, params["embed"])
-    length = cache["length"]
+    length = C.cache_lengths(cache, b)
     win = cfg.window
 
     def attn_decode(hh, ap, ck, cv):
         x = C.rmsnorm(hh, ap["ln"])
         hd = cfg.hd
-        pos = jnp.full((b, 1), length, jnp.int32)
+        pos = length[:, None]
         q = AL.gemm(x, ap["wq"], spec).reshape(b, 1, cfg.n_heads, hd)
         k = AL.gemm(x, ap["wk"], spec).reshape(b, 1, cfg.n_kv_heads, hd)
         v = AL.gemm(x, ap["wv"], spec).reshape(b, 1, cfg.n_kv_heads, hd)
         q = C.apply_rope(q, pos, cfg.rope_theta)
         k = C.apply_rope(k, pos, cfg.rope_theta)
         slot = jnp.mod(length, win)
-        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype),
-                                                 slot, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype),
-                                                 slot, axis=1)
+        ck = C.rowwise_cache_update(ck, k, slot)
+        cv = C.rowwise_cache_update(cv, v, slot)
         # rolling-window validity: all slots valid once length >= win
         n_valid = jnp.minimum(length + 1, win)
-        attn = C.decode_attention(q, ck, cv, jnp.full((b,), 0, jnp.int32)
-                                  + n_valid)
+        attn = C.decode_attention(q, ck, cv, n_valid)
         hh = hh + AL.gemm(attn.reshape(b, 1, -1), ap["wo"], spec)
         x = C.rmsnorm(hh, ap["mln"])
         return hh + _geglu(x, ap, spec), ck, cv
@@ -286,7 +293,7 @@ def decode_step(params: Params, cache: dict, tokens: jax.Array,
          cache["rec_lru"], cache["att_k"], cache["att_v"]))
 
     new_cache = dict(cache, rec_conv=rc, rec_lru=rl, att_k=ck, att_v=cv,
-                     length=length + 1)
+                     length=cache["length"] + 1)
     if "rec_tail" in params:
         def rec_step2(h2, inner):
             rp, conv_st, lru_st = inner
@@ -314,16 +321,26 @@ def _rolling_slots(s: int, win: int) -> tuple[jax.Array, jax.Array]:
 
 
 def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig, spec=None,
-            max_len: int | None = None, **_) -> tuple:
+            max_len: int | None = None, true_len=None, **_) -> tuple:
     """Full-sequence pass capturing decode state: final RG-LRU states, conv
     tails, and the last-`window` KV laid out in rolling-slot order so
-    decode_step continues seamlessly at absolute position s."""
+    decode_step continues seamlessly at absolute position s.
+
+    With `true_len` (b,) the rolling-slot layout, conv tails, LRU states,
+    and last-position logits are all taken at each row's own boundary."""
     b, s = tokens.shape
     h = AL.embed(tokens, params["embed"])
     positions = jnp.arange(s)[None, :]
     win = cfg.window
-    pos_map, valid = _rolling_slots(s, win)
-    pos_map_c = jnp.maximum(pos_map, 0)
+    if true_len is None:
+        pos_map, valid = _rolling_slots(s, win)        # (win,) shared
+        pos_map, valid = pos_map[None], valid[None]    # broadcast over b
+    else:
+        slots = jnp.arange(win)[None, :]
+        last = true_len[:, None] - 1                   # (b, 1)
+        pos_map = last - jnp.mod(last - slots, win)    # (b, win)
+        valid = (pos_map >= 0) & (pos_map > last - win)
+    pos_map_c = jnp.clip(pos_map, 0, s - 1)
 
     def attn_collect(hh, ap):
         bsz, ss, d = hh.shape
@@ -339,8 +356,12 @@ def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig, spec=None,
         hh = hh + AL.gemm(attn.reshape(bsz, ss, -1), ap["wo"], spec)
         x = C.rmsnorm(hh, ap["mln"])
         hh = hh + _geglu(x, ap, spec)
-        ck = jnp.where(valid[None, :, None, None], k[:, pos_map_c], 0)
-        cv = jnp.where(valid[None, :, None, None], v[:, pos_map_c], 0)
+        idx = jnp.broadcast_to(pos_map_c[..., None, None],
+                               (bsz, win, cfg.n_kv_heads, hd))
+        ck = jnp.where(valid[..., None, None],
+                       jnp.take_along_axis(k, idx, axis=1), 0)
+        cv = jnp.where(valid[..., None, None],
+                       jnp.take_along_axis(v, idx, axis=1), 0)
         return hh, ck.astype(jnp.dtype(cfg.dtype)), \
             cv.astype(jnp.dtype(cfg.dtype))
 
@@ -348,7 +369,8 @@ def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig, spec=None,
         rp2, ap = sp
 
         def rec_step(h2, rp):
-            out, conv_tail, lru_last = _recurrent_block(h2, rp, cfg, spec)
+            out, conv_tail, lru_last = _recurrent_block(h2, rp, cfg, spec,
+                                                        true_len=true_len)
             return out, (conv_tail, lru_last)
 
         hh, (rc, rl) = jax.lax.scan(rec_step, hh, rp2)
@@ -360,16 +382,17 @@ def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig, spec=None,
     cache = {
         "rec_conv": rc.astype(jnp.dtype(cfg.dtype)), "rec_lru": rl,
         "att_k": ck, "att_v": cv,
-        "length": jnp.asarray(s, jnp.int32),
+        "length": C.prefill_length(true_len, s),
     }
     if "rec_tail" in params:
         def rec_step2(h2, rp):
-            out, conv_tail, lru_last = _recurrent_block(h2, rp, cfg, spec)
+            out, conv_tail, lru_last = _recurrent_block(h2, rp, cfg, spec,
+                                                        true_len=true_len)
             return out, (conv_tail, lru_last)
         h, (tc, tl) = jax.lax.scan(rec_step2, h, params["rec_tail"])
         cache["tail_conv"] = tc.astype(jnp.dtype(cfg.dtype))
         cache["tail_lru"] = tl
 
-    h = C.rmsnorm(h[:, -1:], params["final_norm"])
+    h = C.rmsnorm(C.last_valid_slice(h, true_len), params["final_norm"])
     logits = AL.gemm(h, params["lm_head"], spec)[:, 0]
     return logits, cache

@@ -274,18 +274,19 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None
     }
 
 
-def _decode_block(h, lp, ck, cv, length, cfg: ModelConfig, spec):
-    """Single-token block against cache slices ck/cv (b, smax, kv, hd)."""
+def _decode_block(h, lp, ck, cv, lengths, cfg: ModelConfig, spec):
+    """Single-token block against cache slices ck/cv (b, smax, kv, hd).
+
+    `lengths` is per-row (b,): rows may sit at different positions, which
+    is what lets the serving engine run mixed-length requests lock-free in
+    one decode batch."""
     b = h.shape[0]
     x = C.rmsnorm(h, lp["ln1"])
-    pos = jnp.full((b, 1), length, jnp.int32)
+    pos = lengths[:, None]
     q, k, v = _qkv(x, lp, cfg, spec, pos)
-    ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), length,
-                                             axis=1)
-    cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), length,
-                                             axis=1)
-    lens = jnp.full((b,), length + 1, jnp.int32)
-    attn = C.decode_attention(q, ck, cv, lens)
+    ck = C.rowwise_cache_update(ck, k, lengths)
+    cv = C.rowwise_cache_update(cv, v, lengths)
+    attn = C.decode_attention(q, ck, cv, lengths + 1)
     h = h + AL.dense(attn.reshape(b, 1, -1), lp["wo"], None, spec)
     x = C.rmsnorm(h, lp["ln2"])
     ff, _ = _ffn(x, lp, cfg, spec)
@@ -295,10 +296,13 @@ def _decode_block(h, lp, ck, cv, length, cfg: ModelConfig, spec):
 def decode_step(params: Params, cache: dict, tokens: jax.Array,
                 cfg: ModelConfig, spec=None,
                 img_embeds: jax.Array | None = None) -> tuple:
-    """tokens (b, 1) -> (logits (b, 1, v), updated cache)."""
+    """tokens (b, 1) -> (logits (b, 1, v), updated cache).
+
+    cache["length"] may be a scalar (lock-step batch) or per-row (b,)
+    (continuous batching: each slot at its own position)."""
     b = tokens.shape[0]
     h = AL.embed(tokens, params["embed"])
-    length = cache["length"]
+    length = C.cache_lengths(cache, b)
 
     if cfg.cross_every:
         img = img_embeds if img_embeds is not None else jnp.zeros(
@@ -354,14 +358,19 @@ def decode_step(params: Params, cache: dict, tokens: jax.Array,
     h = C.rmsnorm(h, params["final_norm"])
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = AL.gemm(h, head, spec)
-    new_cache = {"k": ck, "v": cv, "length": length + 1}
+    new_cache = {"k": ck, "v": cv, "length": cache["length"] + 1}
     return logits, new_cache
 
 
 def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig, spec=None,
             max_len: int | None = None,
-            img_embeds: jax.Array | None = None) -> tuple:
-    """tokens (b, s) -> (logits of last position (b, v), cache)."""
+            img_embeds: jax.Array | None = None,
+            true_len: jax.Array | None = None) -> tuple:
+    """tokens (b, s) -> (logits of the last valid position (b, v), cache).
+
+    `true_len` (b,) marks right-padded prompts: logits come from position
+    true_len - 1 and the cache length is per-row.  Causality keeps the
+    valid KV rows exact; pad rows are masked out by decode_attention."""
     b, s = tokens.shape
     max_len = max_len or s
     h = AL.embed(tokens, params["embed"])
@@ -404,7 +413,7 @@ def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig, spec=None,
     else:
         h, (ks, vs) = jax.lax.scan(block_collect, h, params["layers"])
 
-    h = C.rmsnorm(h[:, -1:], params["final_norm"])
+    h = C.rmsnorm(C.last_valid_slice(h, true_len), params["final_norm"])
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = AL.gemm(h, head, spec)[:, 0]
 
@@ -416,5 +425,5 @@ def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig, spec=None,
         vs = jnp.pad(vs, widths)
     cache = {"k": ks.astype(jnp.dtype(cfg.dtype)),
              "v": vs.astype(jnp.dtype(cfg.dtype)),
-             "length": jnp.asarray(s, jnp.int32)}
+             "length": C.prefill_length(true_len, s)}
     return logits, cache

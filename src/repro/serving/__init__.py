@@ -1,0 +1,30 @@
+"""Continuous-batching serving engine over the unified model API.
+
+Quickstart::
+
+    from repro import configs
+    from repro.serving import Engine, Request, SamplingParams
+
+    cfg = configs.reduced(configs.get_config("tinyllama-1.1b"))
+    eng = Engine(cfg, capacity=4, max_len=128)
+    eng.submit(Request("a", [1, 2, 3],
+                       SamplingParams(max_new_tokens=8)))          # greedy
+    eng.submit(Request("b", list(range(30)),
+                       SamplingParams(temperature=0.8, top_k=16,
+                                      max_new_tokens=4),
+                       arrival=2.0))                   # joins mid-decode
+    for done in eng.run_until_complete():
+        print(done.request_id, done.tokens, done.finish_reason)
+
+Requests of heterogeneous prompt lengths, arrival times, and sampling
+params share one fixed-shape decode batch; free slots admit queued work
+mid-decode (prefill-then-join) and finished requests are evicted so
+their slots recycle.  See `engine.Engine` for the capacity / max_len /
+prefill_buckets knobs, and README "Serving engine" for how `--mult`
+approximate serving composes with it.
+"""
+
+from repro.serving.engine import Engine  # noqa: F401
+from repro.serving.types import (  # noqa: F401
+    Completion, Request, SamplingParams,
+)

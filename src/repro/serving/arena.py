@@ -1,0 +1,68 @@
+"""Fixed-capacity slot arena for decode state.
+
+The arena is the model's decode cache instantiated once at `capacity`
+slots with static shapes, so the jitted decode step compiles exactly once
+per config.  Admitting a request copies its single-row prefill cache into
+a free slot with `dynamic_update_slice`; the slot axis of every cache
+leaf is discovered structurally (families put the batch dimension at
+different depths — transformer KV at axis 1, vision superblocks at axis
+2, rglru tails at axis 1 — so nothing here is family-specific).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+
+
+def _slot_axis(req_shape: tuple, arena_shape: tuple) -> int:
+    """Axis along which a 1-row request cache stacks into the arena."""
+    if len(req_shape) != len(arena_shape):
+        raise ValueError(f"cache rank mismatch: {req_shape} vs {arena_shape}")
+    for i, (r, a) in enumerate(zip(req_shape, arena_shape)):
+        if r != a:
+            if r != 1:
+                raise ValueError(
+                    f"non-slot axis differs: {req_shape} vs {arena_shape}")
+            return i
+    return 0  # capacity == 1: a full overwrite along any axis is exact
+
+
+class SlotArena:
+    """Holds the batched decode cache + per-leaf slot axes and the jitted
+    insert.  `cache["length"]` is per-slot (capacity,), which is what the
+    refactored model decode paths consume."""
+
+    def __init__(self, cfg: ModelConfig, capacity: int, max_len: int):
+        self.cfg, self.capacity, self.max_len = cfg, capacity, max_len
+        cache = api.init_cache(cfg, capacity, max_len)
+        cache["length"] = jnp.zeros((capacity,), jnp.int32)
+        self.cache = cache
+        ref = jax.eval_shape(lambda: api.init_cache(cfg, 1, max_len))
+        ref["length"] = jax.ShapeDtypeStruct((1,), jnp.int32)
+        ref_flat, ref_def = jax.tree_util.tree_flatten(ref)
+        arena_flat, arena_def = jax.tree_util.tree_flatten(cache)
+        if ref_def != arena_def:
+            raise ValueError("cache structure depends on batch size")
+        self._axes = tuple(_slot_axis(r.shape, a.shape)
+                           for r, a in zip(ref_flat, arena_flat))
+        self._treedef = arena_def
+        self._insert = jax.jit(self._insert_impl)
+
+    def _insert_impl(self, cache: dict, req_cache: dict,
+                     slot: jax.Array) -> dict:
+        flat_c = jax.tree_util.tree_leaves(cache)
+        flat_r = jax.tree_util.tree_leaves(req_cache)
+        out = [jax.lax.dynamic_update_slice_in_dim(
+                   c, r.astype(c.dtype), slot, axis=ax)
+               for c, r, ax in zip(flat_c, flat_r, self._axes)]
+        return jax.tree_util.tree_unflatten(self._treedef, out)
+
+    def insert(self, req_cache: dict, slot: int) -> None:
+        """Copy a 1-row prefill cache (built with max_len=self.max_len and
+        a true_len vector) into `slot`."""
+        self.cache = self._insert(self.cache, req_cache,
+                                  jnp.asarray(slot, jnp.int32))

@@ -1,0 +1,312 @@
+"""Continuous-batching inference engine.
+
+The `Engine` turns the model API's (prefill, decode_step) pair into a
+request/response service: requests are admitted from a queue into free
+slots of a fixed-capacity decode arena (prefill-then-join), every decode
+step advances all occupied slots at their own per-slot lengths, and
+finished requests (max tokens / EOS) are evicted so their slots can be
+reused mid-flight.  All device work happens in three jitted functions —
+prefill (one compile per prompt bucket), slot insert, and
+decode+sample — whose shapes depend only on (config, capacity, max_len),
+never on the traffic, so there are no per-step recompiles.
+
+Approximate-multiplier serving composes transparently: the engine
+resolves `cfg.mult` / `cfg.kernel_policy` through `api.make_spec` exactly
+like training, so exact and approximate serving share this code path.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+from repro.serving import sampling
+from repro.serving.arena import SlotArena
+from repro.serving.scheduler import Scheduler
+from repro.serving.types import Completion, Request, SamplingParams
+from repro.sharding import ctx, rules
+from repro.train import train_step as ts
+
+
+class _Slot:
+    """Host-side record of one occupied arena slot."""
+
+    def __init__(self, request: Request, prompt_len: int, admitted_tick: int,
+                 ready_wall: float):
+        self.request = request
+        self.prompt_len = prompt_len
+        self.tokens: list[int] = []
+        self.admitted_tick = admitted_tick
+        self.ready_wall = ready_wall
+        self.first_wall = 0.0
+
+
+class Engine:
+    """Slot-based continuous-batching engine over `models/api.py`.
+
+    Args:
+      cfg: model config (any family: lm / ssm / hybrid / encdec).
+      params: model params; initialized from `seed` when None.
+      capacity: decode-arena slots (max concurrent requests).
+      max_len: arena sequence horizon; prompt_len + max_new_tokens - 1
+        must fit.
+      prefill_buckets: prompt pad lengths; each bucket compiles prefill
+        once.  Default (max_len,) keeps the one-compile-per-phase
+        guarantee; pass e.g. (32, 128, 512) to trade a few compiles for
+        less padded prefill compute.
+      mesh: device mesh (host mesh by default).
+      seed: engine RNG seed (params init + per-request sampling streams).
+      on_token: streaming callback `f(request_id, token_id)`.
+    """
+
+    def __init__(self, cfg: ModelConfig, params: Any | None = None, *,
+                 capacity: int = 4, max_len: int = 256,
+                 prefill_buckets: tuple[int, ...] | None = None,
+                 mesh=None, seed: int = 0,
+                 on_token: Callable[[str, int], None] | None = None):
+        if mesh is None:
+            from repro.launch.mesh import make_host_mesh
+            mesh = make_host_mesh()
+        self.cfg, self.mesh, self.seed = cfg, mesh, seed
+        self.capacity, self.max_len = capacity, max_len
+        self.buckets = tuple(sorted(prefill_buckets or (max_len,)))
+        self.on_token = on_token
+        self._spec = api.make_spec(cfg)
+        self.params = params if params is not None else api.init_params(
+            cfg, jax.random.key(seed))
+
+        self._arena = SlotArena(cfg, capacity, max_len)
+        self._state = {
+            "cache": self._arena.cache,
+            "tok": jnp.zeros((capacity, 1), jnp.int32),
+            "temp": jnp.zeros((capacity,), jnp.float32),
+            "topk": jnp.zeros((capacity,), jnp.int32),
+            "rng": jax.random.split(jax.random.key(seed), capacity),
+        }
+        if cfg.cross_every:
+            self._state["img"] = jnp.zeros(
+                (capacity, cfg.n_img_tokens, cfg.d_model),
+                jnp.dtype(cfg.dtype))
+        # commit the state once, replicated on the mesh, so the first
+        # decode step sees the same shardings as every later one (a
+        # single compilation, not uncommitted-then-committed twins)
+        from jax.sharding import NamedSharding, PartitionSpec
+        self._state = jax.device_put(
+            self._state, NamedSharding(self.mesh, PartitionSpec()))
+
+        self._prefill = ts.make_prefill_step(cfg, mesh, max_len=max_len)
+        self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
+        self._first = jax.jit(sampling.sample_tokens)
+
+        self._sched = Scheduler()
+        self._ids: set[str] = set()
+        self._slots: list[_Slot | None] = [None] * capacity
+        self._free = list(range(capacity - 1, -1, -1))
+        self._tick = 0
+        self._decode_steps = 0
+        self._admitted = 0
+        self._prefill_s = 0.0
+        self._decode_s = 0.0
+        self.completions: list[Completion] = []
+
+    # --- jitted decode + sample ------------------------------------------
+
+    def _decode_impl(self, params, state):
+        extras = {"img_embeds": state["img"]} if "img" in state else {}
+        with ctx.use_rules(self.mesh, rules.logical_rules(self.mesh)):
+            logits, cache = api.decode_step(params, state["cache"],
+                                            state["tok"], self.cfg,
+                                            spec=self._spec, extras=extras)
+        keys = jax.vmap(lambda k: jax.random.split(k))(state["rng"])
+        tok = sampling.sample_tokens(logits[:, -1], state["temp"],
+                                     state["topk"], keys[:, 0])
+        new = dict(state, cache=cache, tok=tok[:, None], rng=keys[:, 1])
+        return new, tok
+
+    # --- submission -------------------------------------------------------
+
+    def submit(self, request: Request) -> None:
+        """Queue a request for admission at its arrival tick."""
+        n = len(request.tokens)
+        sp = request.sampling
+        if request.request_id in self._ids:
+            raise ValueError(
+                f"duplicate request_id {request.request_id!r}")
+        if n < 1:
+            raise ValueError(f"{request.request_id}: empty prompt")
+        if n > self.buckets[-1]:
+            raise ValueError(
+                f"{request.request_id}: prompt len {n} exceeds largest "
+                f"prefill bucket {self.buckets[-1]}")
+        if sp.max_new_tokens < 1:
+            raise ValueError(f"{request.request_id}: max_new_tokens < 1")
+        if n + sp.max_new_tokens - 1 > self.max_len:
+            raise ValueError(
+                f"{request.request_id}: prompt {n} + {sp.max_new_tokens} "
+                f"new tokens exceeds arena max_len {self.max_len}")
+        self._ids.add(request.request_id)
+        self._sched.submit(request)
+
+    # --- admission (prefill-then-join) -----------------------------------
+
+    def _request_key(self, sp: SamplingParams) -> jax.Array:
+        if sp.seed is not None:
+            return jax.random.key(sp.seed)
+        return jax.random.fold_in(jax.random.key(self.seed),
+                                  1 + self._admitted)
+
+    def _prefill_extras(self, request: Request) -> dict:
+        cfg = self.cfg
+        ex = dict(request.extras or {})
+        out = {}
+        if cfg.family == "encdec":
+            frames = ex.get("frames")
+            if frames is None:
+                frames = jnp.zeros((1, cfg.enc_seq, cfg.d_model),
+                                   jnp.dtype(cfg.dtype))
+            out["frames"] = jnp.asarray(frames).reshape(
+                1, cfg.enc_seq, cfg.d_model)
+        if cfg.cross_every:
+            img = ex.get("img_embeds")
+            if img is None:
+                img = jnp.zeros((1, cfg.n_img_tokens, cfg.d_model),
+                                jnp.dtype(cfg.dtype))
+            out["img_embeds"] = jnp.asarray(img).reshape(
+                1, cfg.n_img_tokens, cfg.d_model)
+        return out
+
+    def _admit(self, request: Request, ready_wall: float) -> None:
+        slot_id = self._free.pop()
+        sp = request.sampling
+        prompt = np.asarray(request.tokens, np.int32)
+        n = prompt.shape[0]
+        bucket = next(b for b in self.buckets if b >= n)
+        padded = np.zeros((1, bucket), np.int32)
+        padded[0, :n] = prompt
+        extras = self._prefill_extras(request)
+        t0 = time.perf_counter()
+        logits, req_cache = self._prefill(
+            self.params, jnp.asarray(padded), extras,
+            true_len=jnp.asarray([n], jnp.int32))
+        jax.block_until_ready(logits)
+        self._prefill_s += time.perf_counter() - t0
+        key = self._request_key(sp)
+        first = self._first(logits.astype(jnp.float32),
+                            jnp.asarray([sp.temperature], jnp.float32),
+                            jnp.asarray([sp.top_k], jnp.int32),
+                            key[None])
+        self._admitted += 1
+
+        self._arena.cache = self._state["cache"]
+        self._arena.insert(req_cache, slot_id)
+        self._state["cache"] = self._arena.cache
+        at = jnp.asarray(slot_id)
+        self._state = dict(
+            self._state,
+            tok=self._state["tok"].at[at].set(first[:, None][0]),
+            temp=self._state["temp"].at[at].set(sp.temperature),
+            topk=self._state["topk"].at[at].set(sp.top_k),
+            rng=self._state["rng"].at[at].set(key))
+        if "img" in self._state:
+            self._state["img"] = jax.lax.dynamic_update_slice_in_dim(
+                self._state["img"], extras["img_embeds"].astype(
+                    self._state["img"].dtype), slot_id, axis=0)
+
+        slot = _Slot(request, n, self._tick, ready_wall)
+        slot.first_wall = time.perf_counter()
+        self._slots[slot_id] = slot
+        self._emit(slot_id, int(first[0]))
+
+    # --- token accounting / eviction -------------------------------------
+
+    def _emit(self, slot_id: int, token: int) -> None:
+        slot = self._slots[slot_id]
+        slot.tokens.append(token)
+        if self.on_token is not None:
+            self.on_token(slot.request.request_id, token)
+        sp = slot.request.sampling
+        if (sp.eos_id >= 0 and token == sp.eos_id) or \
+                len(slot.tokens) >= sp.max_new_tokens:
+            self._evict(slot_id, "eos" if sp.eos_id >= 0 and
+                        token == sp.eos_id else "length")
+
+    def _evict(self, slot_id: int, reason: str) -> None:
+        slot = self._slots[slot_id]
+        now = time.perf_counter()
+        self.completions.append(Completion(
+            request_id=slot.request.request_id,
+            prompt_len=slot.prompt_len,
+            tokens=slot.tokens,
+            finish_reason=reason,
+            arrival=slot.request.arrival,
+            admitted_tick=slot.admitted_tick,
+            finished_tick=self._tick,
+            ttft_s=slot.first_wall - slot.ready_wall,
+            latency_s=now - slot.ready_wall))
+        self._slots[slot_id] = None
+        self._free.append(slot_id)
+
+    # --- the serving loop -------------------------------------------------
+
+    @property
+    def tick(self) -> int:
+        """Current virtual-clock tick (one decode step per tick)."""
+        return self._tick
+
+    @property
+    def n_active(self) -> int:
+        return self.capacity - len(self._free)
+
+    @property
+    def n_queued(self) -> int:
+        return len(self._sched)
+
+    def step(self) -> None:
+        """One engine tick: admit due requests into free slots, then run
+        one decode step across the whole arena."""
+        now = self._tick
+        self._sched.note_ready(now, time.perf_counter())
+        while self._free:
+            request = self._sched.pop_ready(now)
+            if request is None:
+                break
+            self._admit(request, self._sched.ready_wall(request.request_id))
+        if self.n_active:
+            t0 = time.perf_counter()
+            self._state, tok = self._decode(self.params, self._state)
+            self._decode_steps += 1
+            tok_host = np.asarray(tok)          # syncs the step
+            self._decode_s += time.perf_counter() - t0
+            for slot_id in range(self.capacity):
+                if self._slots[slot_id] is not None:
+                    self._emit(slot_id, int(tok_host[slot_id]))
+        self._tick += 1
+
+    def run_until_complete(self) -> list[Completion]:
+        """Drive step() until the queue and the arena are both empty;
+        idle ticks fast-forward to the next arrival."""
+        while self.n_queued or self.n_active:
+            if not self.n_active:
+                nxt = self._sched.next_arrival()
+                if nxt is not None and nxt > self._tick:
+                    self._tick = int(math.ceil(nxt))
+            self.step()
+        return self.completions
+
+    def stats(self) -> dict:
+        out = {"ticks": self._tick, "decode_steps": self._decode_steps,
+               "admitted": self._admitted,
+               "completed": len(self.completions),
+               "prefill_s": self._prefill_s, "decode_s": self._decode_s}
+        for name, fn in (("prefill", self._prefill),
+                         ("decode", self._decode)):
+            if hasattr(fn, "_cache_size"):
+                out[f"{name}_compiles"] = fn._cache_size()
+        return out

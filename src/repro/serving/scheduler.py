@@ -1,0 +1,51 @@
+"""Continuous-batching admission scheduler.
+
+FIFO by (arrival tick, submission order).  The scheduler owns only the
+waiting queue — slot occupancy lives in the engine.  Arrival times are in
+engine ticks (one decode step = one tick), which keeps traces
+deterministic and replayable; wall-clock readiness is stamped the first
+time the engine observes a request as eligible, so latency metrics
+include queueing-for-capacity but not simulated future arrivals.
+"""
+
+from __future__ import annotations
+
+import heapq
+
+from repro.serving.types import Request
+
+
+class Scheduler:
+    def __init__(self):
+        self._heap: list[tuple[float, int, Request]] = []
+        self._order = 0
+        self._ready_wall: dict[str, float] = {}
+
+    def submit(self, request: Request) -> int:
+        """Queue a request; returns its submission index."""
+        idx = self._order
+        heapq.heappush(self._heap, (float(request.arrival), idx, request))
+        self._order += 1
+        return idx
+
+    def note_ready(self, now: float, wall: float) -> None:
+        """Stamp wall-clock readiness for requests whose arrival has
+        passed (first observation wins)."""
+        for arrival, _, req in self._heap:
+            if arrival <= now and req.request_id not in self._ready_wall:
+                self._ready_wall[req.request_id] = wall
+
+    def ready_wall(self, request_id: str) -> float:
+        return self._ready_wall.pop(request_id)
+
+    def pop_ready(self, now: float) -> Request | None:
+        """Next request with arrival <= now, FIFO; None if none is due."""
+        if self._heap and self._heap[0][0] <= now:
+            return heapq.heappop(self._heap)[2]
+        return None
+
+    def next_arrival(self) -> float | None:
+        return self._heap[0][0] if self._heap else None
+
+    def __len__(self) -> int:
+        return len(self._heap)

@@ -1,0 +1,60 @@
+"""Request/response dataclasses for the serving engine.
+
+A `Request` is a prompt plus `SamplingParams` and a (virtual-clock)
+arrival time; the engine answers with a `Completion`.  These are plain
+host-side objects — device state lives in the engine's slot arena.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+GREEDY = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decoding controls.
+
+    temperature <= 0 is greedy (argmax); top_k = 0 disables top-k
+    filtering; eos_id < 0 disables EOS stopping.  `seed` pins the
+    request's sampling stream (None derives one from the engine seed and
+    the submission index, so runs stay reproducible by default).
+    """
+    temperature: float = GREEDY
+    top_k: int = 0
+    max_new_tokens: int = 16
+    eos_id: int = -1
+    seed: int | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One inference request.
+
+    `arrival` is in engine ticks (one `Engine.step()` = one tick); the
+    scheduler will not admit the request before that tick, which is how
+    benchmarks replay arrival traces deterministically.  `extras` carries
+    family-specific conditioning: "frames" (enc_seq, d_model) for encdec,
+    "img_embeds" (n_img_tokens, d_model) for vision-cross models.
+    """
+    request_id: str
+    tokens: Sequence[int]
+    sampling: SamplingParams = SamplingParams()
+    arrival: float = 0.0
+    extras: dict[str, Any] | None = None
+
+
+@dataclasses.dataclass
+class Completion:
+    """The engine's answer: generated ids + scheduling/latency metadata."""
+    request_id: str
+    prompt_len: int
+    tokens: list[int]
+    finish_reason: str          # "length" | "eos"
+    arrival: float
+    admitted_tick: int
+    finished_tick: int
+    ttft_s: float               # ready -> first token (wall clock)
+    latency_s: float            # ready -> eviction (wall clock)

@@ -169,13 +169,18 @@ def make_train_step(cfg: ModelConfig, options: StepOptions, mesh: Mesh,
 
 # --- serving steps -----------------------------------------------------------
 
-def make_prefill_step(cfg: ModelConfig, mesh: Mesh):
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh,
+                      max_len: int | None = None):
+    """Jitted prefill, uniform for all four families (the serving engine's
+    prefill phase).  `max_len` pads position-indexed caches (KV) up to the
+    decode arena size; `true_len` supports right-padded prompt buckets."""
     spec = api.make_spec(cfg)
 
-    def wrapped(params, tokens, extras):
+    def wrapped(params, tokens, extras, true_len=None):
         with ctx.use_rules(mesh, rules.logical_rules(mesh)):
             return api.prefill(params, tokens, cfg, spec=spec,
-                               extras=extras)
+                               max_len=max_len, extras=extras,
+                               true_len=true_len)
 
     return jax.jit(wrapped)
 

@@ -1,0 +1,256 @@
+"""Continuous-batching engine tests: slot reuse, mixed prompt lengths,
+late arrivals joining mid-decode, per-request sampling, greedy
+determinism vs the pre-refactor lock-step driver, and a cross-family
+smoke — all on reduced configs (CPU-scale)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import api
+from repro.serving import Engine, Request, SamplingParams
+from repro.serving.sampling import sample_tokens
+from repro.serving.scheduler import Scheduler
+
+FAMILY_ARCHS = ["tinyllama-1.1b", "mamba2-370m", "recurrentgemma-9b",
+                "whisper-medium"]
+
+
+def _cfg(arch):
+    return configs.reduced(configs.get_config(arch))
+
+
+@functools.lru_cache(maxsize=None)
+def _params(arch):
+    return api.init_params(_cfg(arch), jax.random.key(0))
+
+
+def _prompt(n, seed, vocab=512):
+    return np.random.default_rng(seed).integers(1, vocab, (n,)).tolist()
+
+
+def _solo_greedy(cfg, params, tokens, gen, max_len, extras=None):
+    """Reference: one request alone, exact-length prefill + greedy loop."""
+    t = jnp.asarray([tokens], jnp.int32)
+    ex = {k: jnp.asarray(v)[None] for k, v in (extras or {}).items()}
+    lg, cache = api.prefill(params, t, cfg, max_len=max_len, extras=ex)
+    out = [int(jnp.argmax(lg, -1)[0])]
+    tok = jnp.argmax(lg, -1).astype(jnp.int32)[:, None]
+    for _ in range(gen - 1):
+        lg2, cache = api.decode_step(params, cache, tok, cfg, extras=ex)
+        tok = jnp.argmax(lg2[:, -1], -1).astype(jnp.int32)[:, None]
+        out.append(int(tok[0, 0]))
+    return out
+
+
+# --- mixed lengths / arrivals / slot reuse ---------------------------------
+
+def test_mixed_prompt_lengths_match_solo_runs():
+    """Heterogeneous prompt lengths share one decode batch, each stream
+    identical to running that request alone."""
+    cfg, params = _cfg("tinyllama-1.1b"), _params("tinyllama-1.1b")
+    eng = Engine(cfg, params, capacity=3, max_len=64, seed=0)
+    lens = [5, 19, 33]
+    for i, n in enumerate(lens):
+        eng.submit(Request(f"r{i}", _prompt(n, i),
+                           SamplingParams(max_new_tokens=6)))
+    done = {c.request_id: c for c in eng.run_until_complete()}
+    assert len(done) == 3
+    for i, n in enumerate(lens):
+        ref = _solo_greedy(cfg, params, _prompt(n, i), 6, 64)
+        assert done[f"r{i}"].tokens == ref, (i, done[f"r{i}"].tokens, ref)
+
+
+def test_late_arrivals_join_mid_decode():
+    """A request arriving mid-decode joins a half-busy arena and still
+    reproduces its solo-run stream."""
+    cfg, params = _cfg("tinyllama-1.1b"), _params("tinyllama-1.1b")
+    eng = Engine(cfg, params, capacity=2, max_len=64, seed=0)
+    eng.submit(Request("early0", _prompt(12, 10),
+                       SamplingParams(max_new_tokens=10)))
+    eng.submit(Request("late", _prompt(20, 11),
+                       SamplingParams(max_new_tokens=5), arrival=3.0))
+    done = {c.request_id: c for c in eng.run_until_complete()}
+    # the late request was admitted after its arrival tick but before the
+    # early one finished -> it genuinely joined mid-decode
+    assert done["late"].admitted_tick >= 3
+    assert done["late"].admitted_tick < done["early0"].finished_tick
+    for rid, n, seed, gen in [("early0", 12, 10, 10), ("late", 20, 11, 5)]:
+        assert done[rid].tokens == _solo_greedy(cfg, params,
+                                                _prompt(n, seed), gen, 64)
+
+
+def test_slot_reuse_after_completion():
+    """5 requests through 2 slots: later admissions must wait for (and
+    then reuse) freed slots, with streams unchanged."""
+    cfg, params = _cfg("tinyllama-1.1b"), _params("tinyllama-1.1b")
+    eng = Engine(cfg, params, capacity=2, max_len=64, seed=0)
+    for i in range(5):
+        eng.submit(Request(f"r{i}", _prompt(8 + 3 * i, 20 + i),
+                           SamplingParams(max_new_tokens=4)))
+    done = {c.request_id: c for c in eng.run_until_complete()}
+    assert len(done) == 5
+    first_free = min(c.finished_tick for c in done.values())
+    assert done["r2"].admitted_tick > first_free  # waited for a freed slot
+    for i in range(5):
+        ref = _solo_greedy(cfg, params, _prompt(8 + 3 * i, 20 + i), 4, 64)
+        assert done[f"r{i}"].tokens == ref
+    # slots cycled: 5 admissions never exceeded 2 concurrent
+    assert eng.stats()["admitted"] == 5 and eng.capacity == 2
+
+
+# --- sampling ---------------------------------------------------------------
+
+def test_per_request_sampling_params():
+    """Greedy, top-k=1 (argmax regardless of temperature), and seeded
+    temperature sampling coexist in one decode batch."""
+    cfg, params = _cfg("tinyllama-1.1b"), _params("tinyllama-1.1b")
+
+    def run():
+        eng = Engine(cfg, params, capacity=3, max_len=48, seed=7)
+        prompt = _prompt(10, 42)
+        eng.submit(Request("greedy", prompt,
+                           SamplingParams(max_new_tokens=8)))
+        eng.submit(Request("topk1", prompt,
+                           SamplingParams(temperature=1.7, top_k=1,
+                                          max_new_tokens=8)))
+        eng.submit(Request("hot", prompt,
+                           SamplingParams(temperature=1.0, top_k=8,
+                                          max_new_tokens=8, seed=123)))
+        return {c.request_id: c.tokens for c in eng.run_until_complete()}
+
+    a = run()
+    # top_k=1 collapses sampling to argmax -> must equal greedy
+    assert a["topk1"] == a["greedy"]
+    assert all(0 <= t < cfg.vocab for t in a["hot"])
+    # seeded sampling is reproducible run-to-run
+    assert run()["hot"] == a["hot"]
+
+
+def test_sample_tokens_vectorized():
+    logits = jnp.asarray(np.random.default_rng(0).standard_normal((4, 64)),
+                         jnp.float32)
+    temps = jnp.asarray([0.0, 0.0, 1.0, 1.0], jnp.float32)
+    topks = jnp.asarray([0, 0, 1, 4], jnp.int32)
+    keys = jax.random.split(jax.random.key(0), 4)
+    toks = np.asarray(sample_tokens(logits, temps, topks, keys))
+    argmax = np.argmax(np.asarray(logits), -1)
+    assert toks[0] == argmax[0] and toks[1] == argmax[1]  # greedy rows
+    assert toks[2] == argmax[2]                           # top-k = 1
+    top4 = np.argsort(np.asarray(logits)[3])[-4:]         # top-k = 4
+    assert toks[3] in top4
+
+
+def test_eos_stops_early():
+    cfg, params = _cfg("tinyllama-1.1b"), _params("tinyllama-1.1b")
+    ref = _solo_greedy(cfg, params, _prompt(9, 5), 10, 64)
+    eos = ref[3]
+    stop = ref.index(eos)  # first emission of the eos token
+    eng = Engine(cfg, params, capacity=1, max_len=64, seed=0)
+    eng.submit(Request("e", _prompt(9, 5),
+                       SamplingParams(max_new_tokens=10, eos_id=eos)))
+    (done,) = eng.run_until_complete()
+    assert done.finish_reason == "eos"
+    assert done.tokens == ref[:stop + 1]
+
+
+# --- determinism vs the pre-refactor lock-step driver ----------------------
+
+def test_greedy_matches_lockstep_driver():
+    """The old serve driver ran one fixed-size batch of equal-length
+    prompts in lock-step greedy decode.  The engine must reproduce it
+    token-for-token on the lm family."""
+    cfg, params = _cfg("tinyllama-1.1b"), _params("tinyllama-1.1b")
+    b, s, gen, max_len = 4, 16, 8, 32
+    prompts = np.random.default_rng(3).integers(1, cfg.vocab, (b, s))
+
+    # pre-refactor driver semantics: batch prefill + lock-step argmax
+    lg, cache = api.prefill(params, jnp.asarray(prompts, jnp.int32), cfg,
+                            max_len=max_len)
+    tok = jnp.argmax(lg, -1).astype(jnp.int32)[:, None]
+    ref = [tok]
+    for _ in range(gen - 1):
+        lg2, cache = api.decode_step(params, cache, tok, cfg)
+        tok = jnp.argmax(lg2[:, -1], -1).astype(jnp.int32)[:, None]
+        ref.append(tok)
+    ref = np.concatenate([np.asarray(t) for t in ref], axis=1)
+
+    eng = Engine(cfg, params, capacity=b, max_len=max_len,
+                 prefill_buckets=(s,), seed=0)
+    for i in range(b):
+        eng.submit(Request(f"r{i}", prompts[i].tolist(),
+                           SamplingParams(max_new_tokens=gen)))
+    done = {c.request_id: c for c in eng.run_until_complete()}
+    for i in range(b):
+        assert done[f"r{i}"].tokens == ref[i].tolist(), i
+
+
+# --- cross-family smoke -----------------------------------------------------
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_families_serve_heterogeneous_trace(arch):
+    """All four families serve a trace of 8 requests with heterogeneous
+    prompt lengths, arrivals, and sampling params — with at most one jit
+    compilation per (config, phase)."""
+    cfg, params = _cfg(arch), _params(arch)
+    rng = np.random.default_rng(1)
+    eng = Engine(cfg, params, capacity=3, max_len=48, seed=0)
+    gens = []
+    for i in range(8):
+        n = int(rng.integers(4, 20))
+        gen = int(rng.integers(2, 5))
+        gens.append(gen)
+        sp = SamplingParams(max_new_tokens=gen) if i % 2 == 0 else \
+            SamplingParams(temperature=0.9, top_k=8, max_new_tokens=gen,
+                           seed=i)
+        extras = None
+        if cfg.family == "encdec":
+            extras = {"frames": rng.standard_normal(
+                (cfg.enc_seq, cfg.d_model)).astype(np.float32)}
+        eng.submit(Request(f"t{i}", rng.integers(1, cfg.vocab, (n,)).tolist(),
+                           sp, arrival=float(i) * 0.7, extras=extras))
+    done = {c.request_id: c for c in eng.run_until_complete()}
+    assert len(done) == 8
+    for i, gen in enumerate(gens):
+        c = done[f"t{i}"]
+        assert len(c.tokens) == gen
+        assert c.finish_reason == "length"
+        assert all(0 <= t < cfg.vocab for t in c.tokens)
+    stats = eng.stats()
+    if "decode_compiles" in stats:     # pjit cache introspection available
+        assert stats["decode_compiles"] == 1, stats
+        assert stats["prefill_compiles"] == 1, stats
+
+
+# --- scheduler unit ---------------------------------------------------------
+
+def test_scheduler_fifo_and_arrival_gating():
+    s = Scheduler()
+    s.submit(Request("b", [1], arrival=2.0))
+    s.submit(Request("a", [1], arrival=0.0))
+    s.submit(Request("c", [1], arrival=2.0))
+    assert s.pop_ready(0.0).request_id == "a"
+    assert s.pop_ready(0.0) is None        # b, c not yet arrived
+    assert s.next_arrival() == 2.0
+    assert s.pop_ready(2.0).request_id == "b"   # FIFO among same arrival
+    assert s.pop_ready(2.0).request_id == "c"
+    assert len(s) == 0
+
+
+def test_submit_validation():
+    cfg, params = _cfg("tinyllama-1.1b"), _params("tinyllama-1.1b")
+    eng = Engine(cfg, params, capacity=1, max_len=32, seed=0)
+    with pytest.raises(ValueError):
+        eng.submit(Request("x", []))                      # empty prompt
+    with pytest.raises(ValueError):
+        eng.submit(Request("y", [1] * 40))                # > bucket
+    with pytest.raises(ValueError):
+        eng.submit(Request("z", [1] * 30,
+                           SamplingParams(max_new_tokens=8)))  # > max_len
+    eng.submit(Request("ok", [1, 2], SamplingParams(max_new_tokens=2)))
+    with pytest.raises(ValueError):
+        eng.submit(Request("ok", [3, 4]))                 # duplicate id
