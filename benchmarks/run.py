@@ -19,7 +19,7 @@ SUITES = [
     ("fig2_vgg16_tradeoff", fig2_vgg16_tradeoff.main),
     ("fig2_table_reduction", fig2_table_reduction.main),
     ("fig3_cross_models", fig3_cross_models.main),
-    ("bench_gemm", bench_gemm.main),
+    ("bench_gemm", bench_gemm.csv_main),
     ("bench_kernels", bench_kernels.main),
     ("bench_accuracy", bench_accuracy.main),
     ("beyond_lm_codesign", beyond_lm_codesign.main),

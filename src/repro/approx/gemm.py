@@ -132,9 +132,10 @@ def from_multiplier(m: Any, rank: int | None = None,
 def _trunc_mask(q: jax.Array, t: int) -> jax.Array:
     if t <= 0:
         return q
-    # two's-complement signed value of the uint8 mask 0xFF & ~((1<<t)-1)
-    signed = (((0xFF & ~((1 << t) - 1)) ^ 0x80) - 0x80)
-    return jnp.bitwise_and(q, jnp.int8(signed))
+    # single source of truth for the signed-uint8 mask bit-trick (shared
+    # with the in-kernel masks in approx_qgemm.py and quantize.py)
+    from repro.kernels.approx_qgemm import signed_trunc_mask
+    return jnp.bitwise_and(q, jnp.int8(signed_trunc_mask(t)))
 
 
 def _table_map(tbl: jax.Array, q: jax.Array) -> jax.Array:
@@ -148,6 +149,102 @@ def qgemm_int32(a_q: jax.Array, b_q: jax.Array) -> jax.Array:
     return jax.lax.dot_general(
         a_q, b_q, (((a_q.ndim - 1,), (0,)), ((), ())),
         preferred_element_type=jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Persistent weight-plane cache (serving-time)
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("w", "wq", "sw", "planes"),
+    meta_fields=("mode", "mult"),
+)
+@dataclasses.dataclass(frozen=True)
+class PreparedWeight:
+    """Per-(weight, MultSpec) serving-time cache (pytree).
+
+    Weights are static at inference, so quantization and — for the XLA
+    fallback path — the per-rank table maps are paid once here instead of
+    on every decode step:
+
+      wq      int8 (..., k, n)    per-output-channel quantized weight (the
+                                  fused Pallas kernel consumes this raw and
+                                  maps it in-register)
+      sw      f32  (..., 1, n)    dequant scales
+      planes  int8 (..., P', k, n) pre-mapped weight planes for the XLA
+                                  path: the R table-mapped corrections
+                                  (lowrank) or the LSB-masked weight
+                                  (trunc, P'=1)
+      w       original float weight, same buffer as the source params —
+              exact consumers (spec=None paths) and fallbacks use it, so a
+              prepared tree degrades losslessly
+
+    Leading stack dims (layer-scanned params) are preserved: lax.scan
+    slices the cache per layer exactly like the raw param leaves.
+    Training must NOT use prepared weights (weights change every step);
+    `approx_matmul_prepared` raises on differentiation.
+    """
+    w: jax.Array
+    wq: jax.Array
+    sw: jax.Array
+    planes: jax.Array
+    mode: str
+    mult: str
+
+
+def is_prepared(w) -> bool:
+    return isinstance(w, PreparedWeight)
+
+
+def prepare_weight(w: jax.Array, spec: MultSpec | None):
+    """Quantize (per-output-channel) and pre-map a static weight for the
+    spec.  Identity for exact/absent specs.  Accepts stacked (..., k, n)
+    leaves; scales reduce over the contraction dim only.
+
+    The pre-mapped planes serve the XLA fallback only (the fused Pallas
+    kernel maps `wq` in-register), so a policy pinned to "pallas" skips
+    them — R extra int8 weight copies of dead device memory otherwise.
+    `approx_qgemm_prepared` live-maps when planes are absent."""
+    if spec is None or spec.is_exact or is_prepared(w):
+        return w
+    from repro.kernels import dispatch
+    keep = tuple(i for i in range(w.ndim) if i != w.ndim - 2)
+    wq, sw = quant.quantize(w, axis=keep)
+    no_planes = jnp.zeros((*w.shape[:-2], 0, *w.shape[-2:]), jnp.int8)
+    if dispatch.resolve(spec.policy) == "pallas":
+        planes = no_planes
+    elif spec.mode == "trunc":
+        planes = _trunc_mask(wq, spec.trunc_b)[..., None, :, :]
+    elif spec.mode == "lowrank" and spec.rank:
+        planes = jnp.stack([_table_map(spec.fv_q[r], wq)
+                            for r in range(spec.rank)], axis=-3)
+    else:  # lowrank rank 0 degenerates to the raw plane
+        planes = no_planes
+    return PreparedWeight(w=w, wq=wq, sw=sw.astype(jnp.float32),
+                          planes=planes, mode=spec.mode, mult=spec.name)
+
+
+def approx_qgemm_prepared(a_q: jax.Array, pw: PreparedWeight,
+                          spec: MultSpec) -> jax.Array:
+    """XLA path against cached weight planes — bit-identical to
+    `approx_qgemm(a_q, wq, spec)` with wq freshly quantized, but the
+    weight-side table maps / masks are reads, not recomputation.
+
+    Planes may be absent (prepared under a pallas-pinned policy, then
+    re-dispatched to XLA): the weight side is then mapped live from the
+    cached `wq` — same values, just not cached."""
+    cached = pw.planes.shape[-3] > 0
+    if spec.mode == "trunc":
+        a_q = _trunc_mask(a_q, spec.trunc_a)
+        wb = pw.planes[0] if cached else _trunc_mask(pw.wq, spec.trunc_b)
+        return qgemm_int32(a_q, wb).astype(jnp.float32)
+    acc = qgemm_int32(a_q, pw.wq).astype(jnp.float32)
+    for r in range(spec.rank):
+        ua = _table_map(spec.fu_q[r], a_q)
+        vb = pw.planes[r] if cached else _table_map(spec.fv_q[r], pw.wq)
+        acc = acc - spec.s_r[r] * qgemm_int32(ua, vb).astype(jnp.float32)
+    return acc
 
 
 def approx_qgemm(a_q: jax.Array, b_q: jax.Array, spec: MultSpec
@@ -183,25 +280,44 @@ def approx_matmul(x: jax.Array, w: jax.Array, spec: MultSpec) -> jax.Array:
     return _approx_matmul_fwd(x, w, spec)[0]
 
 
+def _quantize_activations(x2: jax.Array, spec: MultSpec, use_pallas: bool
+                          ) -> tuple[jax.Array, jax.Array]:
+    """Per-row (per-token) activation scales: more accurate than per-tensor
+    AND shard-local — a per-tensor absmax over a model-sharded dim lowers
+    to an all-reduce per GEMM (measured +3x collective bytes on the
+    tinyllama train_4k approx cell; see EXPERIMENTS.md §Perf).
+
+    When the dispatch policy already picked Pallas for the GEMM, the fused
+    `quantize_rows` kernel runs as its prologue (single VMEM pass, with the
+    trunc mask folded in for trunc-mode specs).  f32 activations only: the
+    kernel computes in f32, so for bf16 inputs it would round differently
+    than the reference quantizer and the dispatch policy would become a
+    numerics knob — lower precisions keep the XLA quantizer on every
+    policy.  Where both run, (q, scale) are bit-identical."""
+    if use_pallas and x2.dtype == jnp.float32:
+        from repro.kernels import ops as kops
+        trunc = spec.trunc_a if spec.mode == "trunc" else 0
+        return kops.quantize_rows(x2, trunc=trunc)
+    return quant.quantize(x2, axis=0)         # (m, k) -> scales (m, 1)
+
+
 def _approx_matmul_fwd(x, w, spec: MultSpec):
     from repro.kernels import dispatch
     lead = x.shape[:-1]
     k = x.shape[-1]
+    n = w.shape[1]
     x2 = x.reshape(-1, k)
-    # Per-row (per-token) activation scales: more accurate than per-tensor
-    # AND shard-local — a per-tensor absmax over a model-sharded dim lowers
-    # to an all-reduce per GEMM (measured +3x collective bytes on the
-    # tinyllama train_4k approx cell; see EXPERIMENTS.md §Perf).
-    xq, sx = quant.quantize(x2, axis=0)       # (m, k) -> scales (m, 1)
+    use_pallas = dispatch.use_pallas_gemm(spec.policy, m=x2.shape[0], k=k,
+                                          n=n, n_planes=spec.n_planes)
+    xq, sx = _quantize_activations(x2, spec, use_pallas)
     wq, sw = quant.quantize(w, axis=1)        # (k, n) -> per-n scales (1, n)
-    if dispatch.use_pallas_gemm(spec.policy, m=x2.shape[0], k=k,
-                                n=w.shape[1], n_planes=spec.n_planes):
+    if use_pallas:
         from repro.kernels import ops as kops
         acc = kops.approx_qgemm(xq, wq, spec)
     else:
         acc = approx_qgemm(xq, wq, spec)
     out = acc * (sx * sw)                     # (m, n) * scalar * (1, n)
-    return out.reshape(*lead, w.shape[1]).astype(x.dtype), (x, w)
+    return out.reshape(*lead, n).astype(x.dtype), (x, w)
 
 
 def _approx_matmul_bwd(spec: MultSpec, res, g):
@@ -215,6 +331,60 @@ def _approx_matmul_bwd(spec: MultSpec, res, g):
 
 
 approx_matmul.defvjp(_approx_matmul_fwd, _approx_matmul_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def approx_matmul_prepared(x: jax.Array, pw: PreparedWeight,
+                           spec: MultSpec) -> jax.Array:
+    """x (..., k) @ cached weight through the approximate multiplier.
+
+    The inference twin of `approx_matmul`: activations quantize live, the
+    weight side comes entirely from the `PreparedWeight` cache (quantized
+    once per (weight, spec); XLA fallback reuses the pre-mapped planes,
+    the fused Pallas kernel maps the cached int8 weight in-register).
+    Outputs are bit-identical to the fresh-quantize path.
+
+    Serving only: differentiation raises — training weights change every
+    step, so the live re-quantize path (`approx_matmul`) must be used.
+    """
+    return _approx_matmul_prepared_fwd(x, pw, spec)[0]
+
+
+def _approx_matmul_prepared_fwd(x, pw: PreparedWeight, spec: MultSpec):
+    from repro.kernels import dispatch
+    if pw.mult != spec.name or pw.mode != spec.mode:
+        raise ValueError(
+            f"PreparedWeight was built for multiplier {pw.mult!r} "
+            f"(mode {pw.mode!r}) but is being used with {spec.name!r} "
+            f"(mode {spec.mode!r}); re-run prepare_weight for this spec")
+    assert pw.wq.ndim == 2, (
+        "prepared weights must be per-matrix at use time (scan slices "
+        f"stacked leaves); got wq shape {pw.wq.shape}")
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = pw.wq.shape[-1]
+    x2 = x.reshape(-1, k)
+    use_pallas = dispatch.use_pallas_gemm(spec.policy, m=x2.shape[0], k=k,
+                                          n=n, n_planes=spec.n_planes)
+    xq, sx = _quantize_activations(x2, spec, use_pallas)
+    if use_pallas:
+        from repro.kernels import ops as kops
+        acc = kops.approx_qgemm(xq, pw.wq, spec)
+    else:
+        acc = approx_qgemm_prepared(xq, pw, spec)
+    out = acc * (sx * pw.sw)
+    return out.reshape(*lead, n).astype(x.dtype), None
+
+
+def _approx_matmul_prepared_bwd(spec, res, g):
+    raise NotImplementedError(
+        "approx_matmul_prepared is a serving-time path: the weight-plane "
+        "cache is stale the moment weights update.  Training must use "
+        "approx_matmul on the raw float weight (live re-quantize).")
+
+
+approx_matmul_prepared.defvjp(_approx_matmul_prepared_fwd,
+                              _approx_matmul_prepared_bwd)
 
 
 def spec_from_name(name: str, rank: int | None = None) -> MultSpec:

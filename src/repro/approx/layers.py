@@ -16,8 +16,11 @@ from repro.approx import gemm as gemm_mod
 
 
 def _as_weight(w, dtype):
-    """Accepts a plain array or an int8-serving {"q","s"} dict leaf."""
+    """Accepts a plain array, an int8-serving {"q","s"} dict leaf, or a
+    serving `PreparedWeight` (degrades to its original float weight)."""
     from repro.approx import quant
+    if gemm_mod.is_prepared(w):
+        return w.w
     if quant.is_qweight(w):
         return quant.dequantize_weight(w, dtype)
     return w
@@ -28,15 +31,21 @@ def gemm(x: jax.Array, w,
          policy: str | None = None) -> jax.Array:
     """x (..., k) @ w (k, n), approximate if spec says so.
 
+    `w` may be a raw array, an int8-serving {"q","s"} dict leaf, or a
+    `PreparedWeight` (the serving weight-plane cache, api.prepare_params):
+    prepared weights skip the per-call weight quantize/table-map entirely
+    and are bit-identical to the fresh path.
+
     `policy` overrides the spec-carried kernel-dispatch policy for this
     call ("auto" | "pallas" | "xla"); None keeps `spec.policy`.
     """
-    w = _as_weight(w, x.dtype)
     if spec is None or spec.is_exact:
-        return jnp.einsum("...k,kn->...n", x, w)
+        return jnp.einsum("...k,kn->...n", x, _as_weight(w, x.dtype))
     if policy is not None:
         spec = spec.with_policy(policy)
-    return gemm_mod.approx_matmul(x, w, spec)
+    if gemm_mod.is_prepared(w):
+        return gemm_mod.approx_matmul_prepared(x, w, spec)
+    return gemm_mod.approx_matmul(x, _as_weight(w, x.dtype), spec)
 
 
 def dense(x: jax.Array, w: jax.Array, b: jax.Array | None = None,

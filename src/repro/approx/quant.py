@@ -51,16 +51,20 @@ def fake_quant(x: jax.Array, axis: int | None = None) -> jax.Array:
 _QSKIP = ("embed", "dec_pos", "conv_w")
 
 
+def leaf_name(path) -> str:
+    """Innermost dict key of a tree_map_with_path key path ("" if none) —
+    the param-leaf name used by the serving weight caches."""
+    for part in reversed(path):
+        k = getattr(part, "key", None)
+        if k is not None:
+            return str(k)
+    return ""
+
+
 def quantize_param_tree(params, min_size: int = 1 << 16):
     """Per-output-channel int8 quantization of every large >=2-D weight."""
     def q(path, leaf):
-        name = ""
-        for part in reversed(path):
-            k = getattr(part, "key", None)
-            if k is not None:
-                name = str(k)
-                break
-        if name in _QSKIP:
+        if leaf_name(path) in _QSKIP:
             return leaf
         if not hasattr(leaf, "ndim") or leaf.ndim < 2 or \
                 leaf.size < min_size or not jnp.issubdtype(

@@ -200,17 +200,15 @@ def exact_baseline(workload: str, node_nm: int, fps_min: float) -> Evaluated:
     """Smallest-carbon *exact* NVDLA-default config meeting the FPS bound
     (the paper's 'exact baseline meeting a 30 FPS threshold')."""
     best: Evaluated | None = None
-    gcfg = GAConfig()
     for pe_idx in range(len(accmod.VALID_PE_COUNTS)):
-        g = Genome(pe_idx, 0, 0, 2, 0)
-        e = evaluate(g, workload, node_nm, [mm.exact_multiplier()], fps_min,
-                     gcfg)
-        # NVDLA default buffers for this PE count:
+        # NVDLA default buffers for this PE count (the genome record is
+        # descriptive only — the config does not come from genome decode,
+        # so no GA evaluate() call belongs here):
         acfg = accmod.nvdla_default(accmod.VALID_PE_COUNTS[pe_idx], node_nm)
         perf = dfmod.workload_perf(workload, acfg)
         area = accmod.area_model(acfg)
         cb = carbonmod.embodied_carbon(area.total_mm2, node_nm)
-        e = Evaluated(g, acfg, perf.fps, cb.total_g,
+        e = Evaluated(Genome(pe_idx, 0, 0, 2, 0), acfg, perf.fps, cb.total_g,
                       carbonmod.cdp(cb.total_g, perf.fps),
                       carbonmod.cdp(cb.total_g, perf.fps), area.total_mm2)
         if perf.fps >= fps_min and (best is None or e.carbon_g < best.carbon_g):

@@ -1,23 +1,35 @@
-"""Pallas TPU kernel: approximate int8 GEMM as (R+1) MXU matmuls.
+"""Pallas TPU kernels: approximate int8 GEMM as (R+1) MXU matmuls.
 
 Computes  C[m,n] = sum_k m(a[m,k], b[k,n])  for an approximate multiplier m,
 in the low-rank formulation (DESIGN.md §3):
 
     C = A.B - sum_r s_r * U_r(A).V_r(B)
 
-ops.py pre-maps the operands through the per-rank 256-entry int8 tables,
-producing stacks  a_stack (R+1, M, K) int8  and  b_stack (R+1, K, N) int8
-(plane 0 = raw/truncated operands; planes 1..R = table-mapped).  The kernel
-is then pure MXU work: per (m,n,k) tile it accumulates
+Two kernels implement this:
 
-    acc += sum_r scales[r] * dot_int8(a_stack[r], b_stack[r])
+`approx_qgemm_fused` (the hot path): consumes the *raw* quantized operands.
+The (R, 256) int8 factor tables live in VMEM alongside the operand tiles;
+each (bm, bk) / (bk, bn) tile is table-mapped in-register per correction
+plane, and the truncation mask (precision-scaled multipliers) is applied
+in-kernel as a bitwise AND.  HBM reads both operands exactly once —
+`(R+1)x` less operand traffic than the stacked kernel, and no `(P, M, K)` /
+`(P, K, N)` intermediates ever materialize.
 
-with an f32 VMEM accumulator, K innermost ("arbitrary") so the accumulator
-lives across the K loop, and M/N parallel.
+`approx_qgemm_stacked` (reference / A-B twin): ops.py pre-maps the operands
+through the tables in XLA, producing stacks  a_stack (R+1, M, K) int8  and
+b_stack (R+1, K, N) int8, and the kernel is pure MXU work.  Kept for the
+fused-vs-stacked parity tests and the BENCH_gemm trajectory.
+
+Both kernels accumulate per-plane in int32 with the f32 plane scales applied
+once at flush, so they are bit-identical to each other and to the XLA
+reference semantics (no f32 partial-sum drift across the K loop).  K is
+innermost ("arbitrary") so the accumulator lives across the K loop; M/N are
+parallel.
 
 Block shapes default to (bm, bk, bn) = (256, 512, 256): MXU-aligned
-(multiples of 128 / int8 lane tiling) and, with R<=4 planes double-buffered,
-~3.8 MiB of VMEM — comfortably under a v5e core's ~16 MiB budget.
+(multiples of 128 / int8 lane tiling).  `fused_vmem_bytes` /
+`stacked_vmem_bytes` give the VMEM working set per grid step —
+kernels/dispatch.py checks the fused budget in its auto policy.
 """
 
 from __future__ import annotations
@@ -37,8 +49,53 @@ DEFAULT_BK = 512
 DEFAULT_BN = 256
 
 
-def _kernel(a_ref, b_ref, s_ref, out_ref, acc_ref, *, n_planes: int,
-            k_blocks: int):
+def choose_blocks(m: int, k: int, n: int, bm: int | None = None,
+                  bk: int | None = None, bn: int | None = None
+                  ) -> tuple[int, int, int]:
+    """Default block shape for an (m, k, n) GEMM: the standard blocks capped
+    below by one MXU tile and above by the defaults (small operands round up
+    to a single 128-multiple block instead of padding to 256/512)."""
+    bm = bm or min(DEFAULT_BM, max(128, 1 << max(m - 1, 0).bit_length()))
+    bk = bk or min(DEFAULT_BK, max(128, 1 << max(k - 1, 0).bit_length()))
+    bn = bn or min(DEFAULT_BN, max(128, 1 << max(n - 1, 0).bit_length()))
+    return bm, bk, bn
+
+
+def fused_vmem_bytes(bm: int, bk: int, bn: int, n_planes: int) -> int:
+    """VMEM working set of one fused-kernel grid step: double-buffered raw
+    int8 operand tiles (plane count does NOT multiply them — that is the
+    point), the factor tables, the per-plane int32 accumulator, and the
+    double-buffered f32 output tile."""
+    operands = 2 * (bm * bk + bk * bn)
+    tables = 2 * 2 * max(n_planes - 1, 0) * 256
+    acc = n_planes * bm * bn * 4
+    out = 2 * bm * bn * 4
+    return operands + tables + acc + out
+
+
+def stacked_vmem_bytes(bm: int, bk: int, bn: int, n_planes: int) -> int:
+    """Same for the stacked kernel: operand tiles scale with the plane
+    count (the pre-mapped stacks are streamed from HBM)."""
+    operands = 2 * n_planes * (bm * bk + bk * bn)
+    acc = n_planes * bm * bn * 4
+    out = 2 * bm * bn * 4
+    return operands + acc + out
+
+
+def signed_trunc_mask(t: int) -> int:
+    """Two's-complement signed value of the uint8 LSB-truncation mask
+    0xFF & ~((1<<t)-1); -1 (all bits set) when t <= 0 (no truncation)."""
+    if t <= 0:
+        return -1
+    return ((0xFF & ~((1 << t) - 1)) ^ 0x80) - 0x80
+
+
+# ---------------------------------------------------------------------------
+# stacked kernel (reference twin; operands pre-mapped in XLA by ops.py)
+# ---------------------------------------------------------------------------
+
+def _stacked_kernel(a_ref, b_ref, s_ref, out_ref, acc_ref, *, n_planes: int,
+                    k_blocks: int):
     """One (i, j, k) grid step.
 
     a_ref: (n_planes, bm, bk) int8 VMEM
@@ -46,10 +103,6 @@ def _kernel(a_ref, b_ref, s_ref, out_ref, acc_ref, *, n_planes: int,
     s_ref: (n_planes, 1) f32 VMEM   (plane scales; s[0]=1, s[r]=-s_r)
     out_ref: (bm, bn) f32 VMEM
     acc_ref: (n_planes, bm, bn) int32 VMEM scratch
-
-    Per-plane int32 accumulation with scales applied once at flush keeps the
-    kernel bit-identical to the XLA reference semantics (no f32 partial-sum
-    drift across the K loop).
     """
     k = pl.program_id(2)
 
@@ -85,7 +138,7 @@ def approx_qgemm_stacked(a_stack: jax.Array, b_stack: jax.Array,
     grid = (m // bm, n // bn, k // bk)
 
     return pl.pallas_call(
-        functools.partial(_kernel, n_planes=p, k_blocks=grid[2]),
+        functools.partial(_stacked_kernel, n_planes=p, k_blocks=grid[2]),
         grid=grid,
         in_specs=[
             pl.BlockSpec((p, bm, bk), lambda i, j, kk: (0, i, kk)),
@@ -99,3 +152,158 @@ def approx_qgemm_stacked(a_stack: jax.Array, b_stack: jax.Array,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a_stack, b_stack, scales)
+
+
+# ---------------------------------------------------------------------------
+# fused kernel: raw operands in, table map + trunc mask in-kernel
+# ---------------------------------------------------------------------------
+
+def _fused_kernel(a_ref, b_ref, fu_ref, fv_ref, s_ref, out_ref, acc_ref, *,
+                  n_planes: int, k_blocks: int, bk: int, k_valid: int,
+                  mask_a: int, mask_b: int):
+    """One (i, j, k) grid step over RAW operand tiles.
+
+    a_ref: (bm, bk) int8 VMEM      raw quantized activations
+    b_ref: (bk, bn) int8 VMEM      raw quantized weights
+    fu_ref/fv_ref: (R, 256) int8 VMEM   per-rank factor tables (whole table
+        resident; the index map is constant so it is fetched once)
+    s_ref: (n_planes, 1) f32 VMEM  plane scales (s[0]=1, s[r]=-s_r)
+    out_ref: (bm, bn) f32 VMEM
+    acc_ref: (n_planes, bm, bn) int32 VMEM scratch
+
+    `k_valid` is the un-padded contraction length: K-pad zeros are inert in
+    plane 0 (0*0 == 0) but map through the tables to tbl[0], which is in
+    general nonzero — mapped a-tiles are therefore masked past k_valid
+    (zeroing one side of the product suffices).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    a0 = a if mask_a == -1 else jnp.bitwise_and(a, jnp.int8(mask_a))
+    b0 = b if mask_b == -1 else jnp.bitwise_and(b, jnp.int8(mask_b))
+    acc_ref[0] += jnp.dot(a0, b0, preferred_element_type=jnp.int32)
+
+    if n_planes > 1:
+        idx_a = jnp.bitwise_and(a.astype(jnp.int32), 0xFF)
+        idx_b = jnp.bitwise_and(b.astype(jnp.int32), 0xFF)
+        padded_k = k_valid < k_blocks * bk  # static: any K padding at all
+        if padded_k:
+            kpos = k * bk + jax.lax.broadcasted_iota(jnp.int32, a.shape, 1)
+            in_k = kpos < k_valid  # all-true except past the K tail
+        for r in range(n_planes - 1):  # static unroll over correction planes
+            ua = jnp.take(fu_ref[r], idx_a, axis=0)
+            vb = jnp.take(fv_ref[r], idx_b, axis=0)
+            if padded_k:
+                ua = jnp.where(in_k, ua, jnp.int8(0))
+            acc_ref[r + 1] += jnp.dot(ua, vb,
+                                      preferred_element_type=jnp.int32)
+
+    @pl.when(k == k_blocks - 1)
+    def _flush():
+        acc = jnp.zeros(out_ref.shape, jnp.float32)
+        for r in range(n_planes):
+            acc = acc + s_ref[r, 0] * acc_ref[r].astype(jnp.float32)
+        out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "trunc_a", "trunc_b", "k_valid", "bm", "bk", "bn", "interpret"))
+def approx_qgemm_fused(a_q: jax.Array, b_q: jax.Array, fu_q: jax.Array,
+                       fv_q: jax.Array, scales: jax.Array, *,
+                       trunc_a: int = 0, trunc_b: int = 0, k_valid: int,
+                       bm: int = DEFAULT_BM, bk: int = DEFAULT_BK,
+                       bn: int = DEFAULT_BN,
+                       interpret: bool = False) -> jax.Array:
+    """Low-rank fused path: a_q (M, K) int8, b_q (K, N) int8, fu_q/fv_q
+    (R, 256) int8 tables, scales (R+1, 1) f32 -> (M, N) f32.
+
+    M, K, N must be block multiples (ops.py zero-pads the raw operands);
+    `k_valid` is the true contraction length before padding."""
+    m, k = a_q.shape
+    k2, n = b_q.shape
+    r = fu_q.shape[0]
+    assert k == k2 and fv_q.shape == fu_q.shape == (r, 256)
+    assert scales.shape == (r + 1, 1), scales.shape
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (m, k, n, bm, bk, bn)
+    assert 0 < k_valid <= k, (k_valid, k)
+    grid = (m // bm, n // bn, k // bk)
+    p = r + 1
+
+    return pl.pallas_call(
+        functools.partial(
+            _fused_kernel, n_planes=p, k_blocks=grid[2], bk=bk,
+            k_valid=k_valid, mask_a=signed_trunc_mask(trunc_a),
+            mask_b=signed_trunc_mask(trunc_b)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((r, 256), lambda i, j, kk: (0, 0)),
+            pl.BlockSpec((r, 256), lambda i, j, kk: (0, 0)),
+            pl.BlockSpec((p, 1), lambda i, j, kk: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((p, bm, bn), jnp.int32)],
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a_q, b_q, fu_q, fv_q, scales)
+
+
+def _plane0_kernel(a_ref, b_ref, out_ref, acc_ref, *, k_blocks: int,
+                   mask_a: int, mask_b: int):
+    """Single-plane (exact / trunc) grid step: trunc masks in-kernel."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    a0 = a if mask_a == -1 else jnp.bitwise_and(a, jnp.int8(mask_a))
+    b0 = b if mask_b == -1 else jnp.bitwise_and(b, jnp.int8(mask_b))
+    acc_ref[...] += jnp.dot(a0, b0, preferred_element_type=jnp.int32)
+
+    @pl.when(k == k_blocks - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...].astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "trunc_a", "trunc_b", "bm", "bk", "bn", "interpret"))
+def approx_qgemm_plane0(a_q: jax.Array, b_q: jax.Array, *, trunc_a: int = 0,
+                        trunc_b: int = 0, bm: int = DEFAULT_BM,
+                        bk: int = DEFAULT_BK, bn: int = DEFAULT_BN,
+                        interpret: bool = False) -> jax.Array:
+    """Exact / truncation-only fused path: a_q (M, K) x b_q (K, N) -> f32
+    (M, N) with the LSB masks applied in-kernel.  K-pad zeros are inert
+    (masked zero stays zero), so no k_valid is needed."""
+    m, k = a_q.shape
+    k2, n = b_q.shape
+    assert k == k2, (a_q.shape, b_q.shape)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (m, k, n, bm, bk, bn)
+    grid = (m // bm, n // bn, k // bk)
+
+    return pl.pallas_call(
+        functools.partial(_plane0_kernel, k_blocks=grid[2],
+                          mask_a=signed_trunc_mask(trunc_a),
+                          mask_b=signed_trunc_mask(trunc_b)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a_q, b_q)

@@ -7,9 +7,16 @@ named policy resolved per GEMM at trace time:
   "pallas" — always use them (interpret mode off-TPU, Mosaic on TPU);
   "auto"   — use them when they plausibly win: real TPU backend, operand
              dims at least one MXU tile (padding a tiny GEMM to 128-multiples
-             costs more than it saves), and few enough correction planes to
-             fit the VMEM accumulator budget.  Off-TPU, auto picks XLA —
-             interpret-mode Pallas is a correctness vehicle, not a fast path.
+             costs more than it saves), and the fused kernel's VMEM working
+             set within budget.  Off-TPU, auto picks XLA — interpret-mode
+             Pallas is a correctness vehicle, not a fast path.
+
+The fused GEMM data path changed the auto accounting: operand HBM traffic
+no longer scales with the plane count (raw operands are read once and
+table-mapped in-register), so plane count only costs VMEM accumulator
+space.  `fused_vmem_bytes` is checked against VMEM_BUDGET_BYTES directly —
+rank-8 multipliers (9 planes) now pass at the default block shape, where
+the old stacked-traffic cap (MAX_PLANES=8) rejected them.
 
 The policy rides on `MultSpec.policy` (a static/meta pytree field, so a
 policy change is a new jit cache key — no stale-trace footgun), is settable
@@ -28,10 +35,9 @@ POLICIES = ("auto", "pallas", "xla")
 
 #: Below one MXU tile on any operand dim, block padding dominates.
 MIN_DIM = 128
-#: (R+1) int8 operand planes; beyond this the (P, bm, bn) int32 accumulator
-#: plus double-buffered operands blow the ~16 MiB/core VMEM budget at the
-#: default block shape.
-MAX_PLANES = 8
+#: Per-grid-step VMEM working-set budget for the fused kernel: ~16 MiB/core
+#: minus compiler headroom.
+VMEM_BUDGET_BYTES = 14 << 20
 
 _ENV_VAR = "REPRO_KERNEL_POLICY"
 
@@ -74,9 +80,11 @@ def use_pallas_gemm(policy: str | None, *, m: int, k: int, n: int,
     # auto
     if not compat.is_tpu_backend():
         return False
-    if n_planes > MAX_PLANES:
+    if min(m, k, n) < MIN_DIM:
         return False
-    return min(m, k, n) >= MIN_DIM
+    from repro.kernels import approx_qgemm as qk
+    bm, bk, bn = qk.choose_blocks(m, k, n)
+    return qk.fused_vmem_bytes(bm, bk, bn, n_planes) <= VMEM_BUDGET_BYTES
 
 
 def use_pallas_attention(policy: str | None, *, seq: int,

@@ -1,10 +1,15 @@
 """jit'd public wrappers around the Pallas kernels.
 
-Handles: operand-stack construction (table mapping for the low-rank
-correction planes), padding to block multiples (inserted *after* table
-mapping so padded elements contribute exactly zero), reshaping, and the
-interpret-mode switch (CPU containers run kernels with interpret=True; on
-real TPU the same code compiles to Mosaic).
+Handles: padding to block multiples, reshaping, and the interpret-mode
+switch (CPU containers run kernels with interpret=True; on real TPU the
+same code compiles to Mosaic).
+
+The approximate GEMM runs FUSED by default: raw quantized operands go
+straight into the kernel, which applies the truncation mask and the
+per-rank table maps in-register (kernels/approx_qgemm.py).  The legacy
+stacked path — `build_stacks` pre-maps the operands in XLA into (P, M, K)
+/ (P, K, N) HBM intermediates — is kept behind `fused=False` as the
+reference twin for parity tests and the BENCH_gemm trajectory.
 """
 
 from __future__ import annotations
@@ -56,19 +61,40 @@ def build_stacks(a_q: jax.Array, b_q: jax.Array, spec: gemm_mod.MultSpec
 
 def approx_qgemm(a_q: jax.Array, b_q: jax.Array, spec: gemm_mod.MultSpec,
                  *, bm: int | None = None, bk: int | None = None,
-                 bn: int | None = None) -> jax.Array:
-    """int8 (m, k) x int8 (k, n) -> f32 (m, n) via the Pallas kernel."""
+                 bn: int | None = None, fused: bool = True) -> jax.Array:
+    """int8 (m, k) x int8 (k, n) -> f32 (m, n) via the Pallas kernels.
+
+    `fused=True` (default) streams the raw operands once and maps/masks
+    them in-kernel; `fused=False` runs the stacked reference twin (XLA
+    pre-maps `(R+1)x` operand copies through HBM)."""
     m, k = a_q.shape
     k2, n = b_q.shape
     assert k == k2
-    bm = bm or min(qk.DEFAULT_BM, max(128, 1 << (m - 1).bit_length()))
-    bn = bn or min(qk.DEFAULT_BN, max(128, 1 << (n - 1).bit_length()))
-    bk = bk or min(qk.DEFAULT_BK, max(128, 1 << (k - 1).bit_length()))
-    a_s, b_s, s = build_stacks(a_q, b_q, spec)
-    a_s = _pad_to(_pad_to(a_s, 1, bm), 2, bk)
-    b_s = _pad_to(_pad_to(b_s, 1, bk), 2, bn)
-    out = qk.approx_qgemm_stacked(a_s, b_s, s, bm=bm, bk=bk, bn=bn,
-                                  interpret=dispatch.interpret_mode())
+    bm, bk, bn = qk.choose_blocks(m, k, n, bm, bk, bn)
+    interpret = dispatch.interpret_mode()
+    if not fused:
+        a_s, b_s, s = build_stacks(a_q, b_q, spec)
+        a_s = _pad_to(_pad_to(a_s, 1, bm), 2, bk)
+        b_s = _pad_to(_pad_to(b_s, 1, bk), 2, bn)
+        out = qk.approx_qgemm_stacked(a_s, b_s, s, bm=bm, bk=bk, bn=bn,
+                                      interpret=interpret)
+        return out[:m, :n]
+    ap = _pad_to(_pad_to(a_q, 0, bm), 1, bk)
+    bp = _pad_to(_pad_to(b_q, 0, bk), 1, bn)
+    trunc_a = spec.trunc_a if spec.mode == "trunc" else 0
+    trunc_b = spec.trunc_b if spec.mode == "trunc" else 0
+    rank = spec.rank if spec.mode == "lowrank" else 0
+    if rank:
+        scales = jnp.concatenate(
+            [jnp.ones((1,), jnp.float32), -spec.s_r])[:, None]
+        out = qk.approx_qgemm_fused(
+            ap, bp, spec.fu_q, spec.fv_q, scales, trunc_a=trunc_a,
+            trunc_b=trunc_b, k_valid=k, bm=bm, bk=bk, bn=bn,
+            interpret=interpret)
+    else:
+        out = qk.approx_qgemm_plane0(ap, bp, trunc_a=trunc_a,
+                                     trunc_b=trunc_b, bm=bm, bk=bk, bn=bn,
+                                     interpret=interpret)
     return out[:m, :n]
 
 
@@ -86,11 +112,16 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                               interpret=dispatch.interpret_mode())
 
 
-def quantize_rows(x: jax.Array, *, bm: int | None = None
+def quantize_rows(x: jax.Array, *, bm: int | None = None, trunc: int = 0
                   ) -> tuple[jax.Array, jax.Array]:
-    """(M, K) float -> int8 rows + scales via the fused kernel."""
+    """(M, K) float -> int8 rows + scales via the fused kernel.
+
+    `trunc` > 0 additionally masks the bottom LSBs of the quantized rows
+    in the same VMEM pass — the prologue fusion for trunc-mode GEMMs
+    (saves the separate XLA mask pass on the activation side)."""
     m, k = x.shape
     bm = bm or min(qz.DEFAULT_BM, max(8, 1 << (m - 1).bit_length()))
     xp = _pad_to(x, 0, bm)
-    q, s = qz.quantize_rows(xp, bm=bm, interpret=dispatch.interpret_mode())
+    q, s = qz.quantize_rows(xp, bm=bm, trunc=trunc,
+                            interpret=dispatch.interpret_mode())
     return q[:m], s[:m]

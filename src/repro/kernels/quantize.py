@@ -3,7 +3,14 @@
 Row-blocked: each grid step loads a (bm, K) f32 tile, computes per-row
 absmax, scales, rounds, and emits the int8 tile plus (bm, 1) f32 scales in a
 single VMEM pass (one read of x instead of XLA's reduce + broadcast-divide
-two-pass).  Feeds approx_qgemm's activation quantization on the hot path.
+two-pass).  Feeds approx_qgemm's activation quantization on the hot path
+(routed via kernels/dispatch.py).
+
+An optional LSB-truncation mask fuses into the same pass as an epilogue
+(`trunc` static arg): trunc-mode approximate GEMMs get their masked
+activations straight out of the quantizer, with no extra elementwise pass.
+The mask is applied after rounding, so the result is bit-identical to
+`_trunc_mask(quantize(x))`.
 """
 
 from __future__ import annotations
@@ -15,29 +22,33 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro import compat
+from repro.kernels import approx_qgemm as qk
 
 INT8_MAX = 127.0
 DEFAULT_BM = 256
 
 
-def _kernel(x_ref, q_ref, s_ref):
+def _kernel(x_ref, q_ref, s_ref, *, trunc: int):
     x = x_ref[...].astype(jnp.float32)
     absmax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
     scale = jnp.maximum(absmax, 1e-8) / INT8_MAX
     q = jnp.clip(jnp.round(x / scale), -INT8_MAX - 1, INT8_MAX)
-    q_ref[...] = q.astype(jnp.int8)
+    qi = q.astype(jnp.int8)
+    if trunc > 0:
+        qi = jnp.bitwise_and(qi, jnp.int8(qk.signed_trunc_mask(trunc)))
+    q_ref[...] = qi
     s_ref[...] = scale
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
-def quantize_rows(x: jax.Array, *, bm: int = DEFAULT_BM,
+@functools.partial(jax.jit, static_argnames=("bm", "trunc", "interpret"))
+def quantize_rows(x: jax.Array, *, bm: int = DEFAULT_BM, trunc: int = 0,
                   interpret: bool = False) -> tuple[jax.Array, jax.Array]:
     """x (M, K) float -> (q (M, K) int8, scale (M, 1) f32); M % bm == 0."""
     m, k = x.shape
     assert m % bm == 0, (m, bm)
     grid = (m // bm,)
     q, s = pl.pallas_call(
-        _kernel,
+        functools.partial(_kernel, trunc=trunc),
         grid=grid,
         in_specs=[pl.BlockSpec((bm, k), lambda i: (i, 0))],
         out_specs=[

@@ -48,6 +48,46 @@ def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
     return family_module(cfg).init_params(cfg, key)
 
 
+def prepare_params(params: Params, cfg: ModelConfig,
+                   spec: gemm_mod.MultSpec | None = None) -> Params:
+    """Build the serving-time weight-plane cache over a param tree.
+
+    Every leaf named in the family's PREPARED_GEMM_WEIGHTS allowlist (the
+    weights consumed exclusively through the approximate GEMM layer) is
+    replaced by a `PreparedWeight`: per-output-channel int8 quantization
+    plus — for the XLA fallback — the per-rank table-mapped weight planes,
+    computed ONCE per (weight, spec) instead of on every decode step.
+    Forward/decode/prefill through the prepared tree are bit-identical to
+    the raw tree.
+
+    `spec=None` resolves via `make_spec(cfg)`.  Identity for exact specs.
+    Serving only — training re-quantizes live (weights change each step)
+    and differentiation through prepared leaves raises.
+    """
+    if spec is None:
+        spec = make_spec(cfg)
+    if spec is None or spec.is_exact:
+        return params
+    from repro.approx import quant
+    names = getattr(family_module(cfg), "PREPARED_GEMM_WEIGHTS", frozenset())
+
+    def prep(path, leaf):
+        if gemm_mod.is_prepared(leaf):
+            return leaf  # idempotent: re-preparing a prepared tree is a no-op
+        if quant.leaf_name(path) not in names:
+            return leaf
+        if not hasattr(leaf, "ndim") or leaf.ndim < 2 or \
+                not jnp.issubdtype(leaf.dtype, jnp.floating):
+            return leaf
+        return gemm_mod.prepare_weight(leaf, spec)
+
+    # is_leaf keeps tree_map from descending INTO PreparedWeight pytree
+    # nodes (whose w/sw fields would otherwise be re-wrapped under the
+    # enclosing leaf name)
+    return jax.tree_util.tree_map_with_path(prep, params,
+                                            is_leaf=gemm_mod.is_prepared)
+
+
 def forward(params: Params, batch: dict, cfg: ModelConfig, spec=None
             ) -> tuple[jax.Array, jax.Array]:
     """batch: {"tokens": (b, s)} (+ "frames" for encdec, "img" for vlm).

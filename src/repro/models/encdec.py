@@ -24,6 +24,14 @@ from repro.sharding.ctx import hint
 Params = dict[str, Any]
 MAX_DEC_POS = 32768  # learned decoder positions table
 
+#: Serving weight-plane cache eligibility (api.prepare_params): attention
+#: and MLP projections of both stacks (self- and cross-attention share
+#: the "x"-prefixed names).  The tied head reuses the embedding transpose
+#: and stays on the live path.
+PREPARED_GEMM_WEIGHTS = frozenset({
+    "wq", "wk", "wv", "wo", "xwq", "xwk", "xwv", "xwo", "m_up", "m_down",
+})
+
 
 def _attn_shapes(cfg: ModelConfig) -> dict[str, tuple]:
     d, hd = cfg.d_model, cfg.hd

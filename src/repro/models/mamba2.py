@@ -21,6 +21,12 @@ from repro.sharding.ctx import hint
 Params = dict[str, Any]
 NGROUPS = 1
 
+#: Serving weight-plane cache eligibility (api.prepare_params): only the
+#: in/out projections and the head run through the approximate GEMM; conv
+#: taps, SSD parameters (A_log/D/dt_bias), and norms are consumed directly
+#: by vector-unit math and must stay raw arrays.
+PREPARED_GEMM_WEIGHTS = frozenset({"in_proj", "out_proj", "lm_head"})
+
 
 def _dims(cfg: ModelConfig):
     d_in = cfg.ssm_expand * cfg.d_model

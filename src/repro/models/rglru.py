@@ -24,6 +24,16 @@ from repro.sharding.ctx import hint
 Params = dict[str, Any]
 C_EXPONENT = 8.0  # RG-LRU exponent scale
 
+#: Serving weight-plane cache eligibility (api.prepare_params).  The
+#: RG-LRU gate projections w_rg/w_in are NOT listed: they run exact
+#: (error-sensitive recurrence control, spec-less AL.gemm), so caching a
+#: quantized copy would change their math.  Conv taps and lam are direct
+#: vector-unit consumers.
+PREPARED_GEMM_WEIGHTS = frozenset({
+    "w_x", "w_gate_br", "w_out", "m_gate", "m_up", "m_down",
+    "wq", "wk", "wv", "wo", "lm_head",
+})
+
 
 def _pattern(cfg: ModelConfig) -> tuple[int, int]:
     """(n_super, n_tail_recurrent): layers = n_super*(2 rec + 1 attn) + tail

@@ -26,6 +26,17 @@ from repro.sharding.ctx import hint
 
 Params = dict[str, Any]
 
+#: Param leaves consumed exclusively through AL.gemm/AL.dense with the
+#: model's MultSpec — eligible for the serving weight-plane cache
+#: (api.prepare_params).  Excluded: the embedding (lookup / tied head
+#: transpose), the MoE router (exact f32 control logic), and the expert
+#: stacks (re-gathered per token slot through _as_weight).
+PREPARED_GEMM_WEIGHTS = frozenset({
+    "wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down",
+    "ws_gate", "ws_up", "ws_down", "lm_head",
+    "xwq", "xwk", "xwv", "xwo",
+})
+
 
 # --------------------------------------------------------------------------
 # init

@@ -13,6 +13,10 @@ never on the traffic, so there are no per-step recompiles.
 Approximate-multiplier serving composes transparently: the engine
 resolves `cfg.mult` / `cfg.kernel_policy` through `api.make_spec` exactly
 like training, so exact and approximate serving share this code path.
+Under an approximate spec the engine serves from a persistent weight-plane
+cache (`api.prepare_params`): each GEMM weight is quantized — and, for the
+XLA path, table-mapped — once at engine construction instead of on every
+decode step.
 """
 
 from __future__ import annotations
@@ -81,6 +85,13 @@ class Engine:
         self._spec = api.make_spec(cfg)
         self.params = params if params is not None else api.init_params(
             cfg, jax.random.key(seed))
+        # Serving-time weight-plane cache: weights are static across the
+        # engine's life, so quantize (and pre-map, for the XLA path) each
+        # GEMM weight once per (weight, spec) instead of on every decode
+        # step.  `exec_params` feeds prefill AND decode; `self.params`
+        # stays raw (bit-identical outputs either way — the cache is a
+        # recomputation saving, not an approximation).
+        self.exec_params = api.prepare_params(self.params, cfg, self._spec)
 
         self._arena = SlotArena(cfg, capacity, max_len)
         self._state = {
@@ -193,7 +204,7 @@ class Engine:
         extras = self._prefill_extras(request)
         t0 = time.perf_counter()
         logits, req_cache = self._prefill(
-            self.params, jnp.asarray(padded), extras,
+            self.exec_params, jnp.asarray(padded), extras,
             true_len=jnp.asarray([n], jnp.int32))
         jax.block_until_ready(logits)
         self._prefill_s += time.perf_counter() - t0
@@ -280,7 +291,7 @@ class Engine:
             self._admit(request, self._sched.ready_wall(request.request_id))
         if self.n_active:
             t0 = time.perf_counter()
-            self._state, tok = self._decode(self.params, self._state)
+            self._state, tok = self._decode(self.exec_params, self._state)
             self._decode_steps += 1
             tok_host = np.asarray(tok)          # syncs the step
             self._decode_s += time.perf_counter() - t0

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 from repro.approx import gemm as G
 from repro.core import multipliers as mm
 from repro.core import netlist as nl
+from repro.kernels import approx_qgemm as qk
 from repro.kernels import ops, ref
 
 RNG = np.random.default_rng(42)
@@ -106,6 +107,98 @@ def test_quantize_rows_kernel(m, k):
     q2, s2 = ref.ref_quantize_rows(x)
     np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
     np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-7)
+
+
+FUSED_PARITY_SHAPES = [(64, 96, 80), (128, 128, 128), (100, 130, 50),
+                       (1, 256, 257), (33, 257, 65)]
+
+
+@pytest.mark.parametrize("rank", [1, 2, 4, 8])
+@pytest.mark.parametrize("shape", FUSED_PARITY_SHAPES)
+def test_fused_matches_stacked_bitexact_lowrank(rank, shape):
+    """The in-kernel table map must reproduce the pre-mapped stacked path
+    bit-for-bit at every rank and at non-block-multiple shapes (K-tail
+    masking of the mapped planes)."""
+    m, k, n = shape
+    a, b = _rand_q((m, k)), _rand_q((k, n))
+    _, spec = _lowrank_spec(rank=rank, seed=rank)
+    fused = np.asarray(ops.approx_qgemm(jnp.asarray(a), jnp.asarray(b),
+                                        spec))
+    stacked = np.asarray(ops.approx_qgemm(jnp.asarray(a), jnp.asarray(b),
+                                          spec, fused=False))
+    np.testing.assert_array_equal(fused, stacked)
+
+
+@pytest.mark.parametrize("mult", ["exact", "trunc2x2", "trunc3x1"])
+@pytest.mark.parametrize("shape", [(64, 96, 80), (100, 130, 50),
+                                   (1, 256, 257)])
+def test_fused_matches_stacked_and_xla_bitexact_int_paths(mult, shape):
+    """Exact/trunc: fused == stacked == XLA reference, bit-for-bit (the
+    trunc mask moves into the kernel)."""
+    m, k, n = shape
+    a, b = _rand_q((m, k)), _rand_q((k, n))
+    spec = G.from_multiplier(mm.get_multiplier(mult))
+    fused = np.asarray(ops.approx_qgemm(jnp.asarray(a), jnp.asarray(b),
+                                        spec))
+    stacked = np.asarray(ops.approx_qgemm(jnp.asarray(a), jnp.asarray(b),
+                                          spec, fused=False))
+    xla = np.asarray(ref.ref_approx_qgemm(jnp.asarray(a), jnp.asarray(b),
+                                          spec))
+    np.testing.assert_array_equal(fused, stacked)
+    np.testing.assert_array_equal(fused, xla)
+
+
+@pytest.mark.parametrize("rank", [1, 2, 4, 8])
+def test_fused_lowrank_tracks_lut_oracle_within_residual(rank):
+    """Fused path approximates the LUT semantic within the residual NMED
+    recorded on the spec, at every rank (same bound as the stacked test)."""
+    mobj, spec = _lowrank_spec(rank=rank, seed=3)
+    k = 130  # non-block-multiple: exercises the in-kernel K-tail mask
+    a, b = _rand_q((64, k)), _rand_q((k, 64))
+    oracle = np.asarray(ref.lut_matmul(jnp.asarray(a), jnp.asarray(b),
+                                       jnp.asarray(mobj.lut))
+                        ).astype(np.float64)
+    got = np.asarray(ops.approx_qgemm(jnp.asarray(a), jnp.asarray(b),
+                                      spec)).astype(np.float64)
+    mean_err = np.abs(got - oracle).mean() / k
+    assert mean_err <= 16384 * (spec.residual_nmed * 8 + 1e-6), (
+        mean_err, spec.residual_nmed)
+
+
+def test_fused_kernel_masks_fully_padded_k_block():
+    """k_valid < K with k_valid % bk == 0 (an entire padded K block) must
+    still be masked in the mapped planes — pad zeros map to tbl[0] != 0."""
+    _, spec = _lowrank_spec(rank=2, seed=9)
+    m = n = k_valid = 128
+    a, b = _rand_q((m, k_valid)), _rand_q((k_valid, n))
+    ap = np.zeros((m, 256), np.int8)
+    ap[:, :k_valid] = a
+    bp = np.zeros((256, n), np.int8)
+    bp[:k_valid] = b
+    scales = jnp.concatenate([jnp.ones((1,), jnp.float32),
+                              -spec.s_r])[:, None]
+    got = qk.approx_qgemm_fused(
+        jnp.asarray(ap), jnp.asarray(bp), spec.fu_q, spec.fv_q, scales,
+        k_valid=k_valid, bm=128, bk=128, bn=128, interpret=True)
+    want = ops.approx_qgemm(jnp.asarray(a), jnp.asarray(b), spec,
+                            fused=False)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("trunc", [0, 2, 4])
+def test_quantize_rows_trunc_prologue(trunc):
+    """Fused quantize+mask == mask-after-quantize bit-for-bit (same kernel
+    both sides, so the comparison is exact and order-independent); scales
+    are untouched by the mask and track the reference quantizer."""
+    x = jnp.asarray(RNG.standard_normal((24, 96)), jnp.float32)
+    q1, s1 = ops.quantize_rows(x, trunc=trunc)
+    q0, s0 = ops.quantize_rows(x)
+    np.testing.assert_array_equal(np.asarray(q1),
+                                  np.asarray(G._trunc_mask(q0, trunc)))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s0))
+    _, s_ref = ref.ref_quantize_rows(x)
+    # kernel vs XLA max-reduction order: within 1 f32 ULP (~1.2e-7 rel)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s_ref), rtol=2e-7)
 
 
 def test_padding_is_inert():

@@ -1,0 +1,229 @@
+"""Serving weight-plane cache (PreparedWeight / api.prepare_params):
+
+* prepared forward is bit-identical to the fresh-quantize forward (per
+  mode, Pallas and XLA dispatch);
+* the cache plumbs through the model families and the engine (decode /
+  prefill outputs unchanged bit-for-bit);
+* the cache is serving-only: training-style differentiation raises, and
+  mismatched (weight, spec) pairs are rejected.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.approx import gemm as G
+from repro.approx import layers as L
+from repro.core import multipliers as mm
+from repro.core import netlist as nl
+from repro.models import api
+
+RNG = np.random.default_rng(7)
+
+
+def _lowrank_spec(rank=4, seed=1):
+    mask = np.random.default_rng(seed).random(
+        len(nl.bw8().prunable_gates())) < 0.03
+    return G.from_multiplier(mm.pruned(mask, name=f"wc_test_{seed}"),
+                             rank=rank)
+
+
+SPECS = [
+    ("trunc", G.from_multiplier(mm.truncated(2, 2))),
+    ("lowrank_r2", _lowrank_spec(rank=2)),
+    ("lowrank_r4", _lowrank_spec(rank=4)),
+]
+
+
+@pytest.mark.parametrize("name,spec", SPECS, ids=[s[0] for s in SPECS])
+@pytest.mark.parametrize("policy", ["xla", "pallas"])
+def test_prepared_matches_fresh_bitexact(name, spec, policy):
+    spec = spec.with_policy(policy)
+    x = jnp.asarray(RNG.standard_normal((37, 64)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((64, 48)), jnp.float32)
+    fresh = np.asarray(G.approx_matmul(x, w, spec))
+    pw = G.prepare_weight(w, spec)
+    prepared = np.asarray(G.approx_matmul_prepared(x, pw, spec))
+    np.testing.assert_array_equal(fresh, prepared)
+
+
+def test_prepared_stacked_leaf_slices_like_raw():
+    """Layer-stacked (L, k, n) leaves prepare once; per-layer slices must
+    equal per-layer fresh preparation (what lax.scan sees)."""
+    spec = _lowrank_spec(rank=2)
+    w = jnp.asarray(RNG.standard_normal((3, 32, 16)), jnp.float32)
+    pw = G.prepare_weight(w, spec)
+    for i in range(3):
+        pw_i = G.prepare_weight(w[i], spec)
+        np.testing.assert_array_equal(np.asarray(pw.wq[i]),
+                                      np.asarray(pw_i.wq))
+        np.testing.assert_array_equal(np.asarray(pw.sw[i]),
+                                      np.asarray(pw_i.sw))
+        np.testing.assert_array_equal(np.asarray(pw.planes[i]),
+                                      np.asarray(pw_i.planes))
+
+
+def test_layers_gemm_routes_prepared_and_exact_fallback():
+    spec = G.from_multiplier(mm.truncated(2, 2))
+    x = jnp.asarray(RNG.standard_normal((5, 32)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((32, 24)), jnp.float32)
+    pw = G.prepare_weight(w, spec)
+    np.testing.assert_array_equal(np.asarray(L.gemm(x, pw, spec)),
+                                  np.asarray(L.gemm(x, w, spec)))
+    # exact/spec-less consumers fall back to the original float weight
+    np.testing.assert_array_equal(np.asarray(L.gemm(x, pw, None)),
+                                  np.asarray(L.gemm(x, w, None)))
+
+
+def test_prepared_rejects_mismatched_spec():
+    spec_a = G.from_multiplier(mm.truncated(2, 2))
+    spec_b = _lowrank_spec(rank=2)
+    w = jnp.asarray(RNG.standard_normal((32, 16)), jnp.float32)
+    pw = G.prepare_weight(w, spec_a)
+    x = jnp.asarray(RNG.standard_normal((4, 32)), jnp.float32)
+    with pytest.raises(ValueError, match="PreparedWeight"):
+        G.approx_matmul_prepared(x, pw, spec_b)
+
+
+def test_prepared_bypassed_under_training():
+    """The cache must not silently feed training: differentiating through
+    the prepared path raises, while the live path keeps its STE vjp."""
+    spec = G.from_multiplier(mm.truncated(2, 2))
+    x = jnp.asarray(RNG.standard_normal((8, 32)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((32, 16)), jnp.float32)
+    pw = G.prepare_weight(w, spec)
+    with pytest.raises(NotImplementedError, match="serving-time"):
+        jax.grad(lambda xx: G.approx_matmul_prepared(xx, pw, spec).sum())(x)
+    # live path still differentiates (straight-through)
+    g = jax.grad(lambda xx: G.approx_matmul(xx, w, spec).sum())(x)
+    assert g.shape == x.shape
+
+
+# --- model / engine plumbing -------------------------------------------------
+
+def _cfg(arch, mult="trunc2x2"):
+    cfg = configs.reduced(configs.get_config(arch))
+    return configs.apply_overrides(cfg, mult=mult)
+
+
+def _n_prepared(tree) -> int:
+    return sum(1 for leaf in jax.tree_util.tree_leaves(
+        tree, is_leaf=G.is_prepared) if G.is_prepared(leaf))
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "mamba2-370m",
+                                  "recurrentgemma-9b", "whisper-medium"])
+def test_decode_step_prepared_matches_fresh_all_families(arch):
+    cfg = _cfg(arch)
+    spec = api.make_spec(cfg)
+    params = api.init_params(cfg, jax.random.key(0))
+    prepared = api.prepare_params(params, cfg, spec)
+    assert _n_prepared(prepared) > 0
+    assert _n_prepared(params) == 0  # source tree untouched
+    cache = api.init_cache(cfg, 2, 16)
+    tok = jnp.asarray([[3], [7]], jnp.int32)
+    # Every GEMM in the prepared graph reproduces the fresh-quantize GEMM
+    # bit-for-bit (asserted at approx_matmul level above); the two decode
+    # graphs are nonetheless different XLA programs, so fusion may
+    # reassociate the surrounding f32 vector math (rope / recurrence /
+    # attention epilogues) at ULP scale.  Full-graph criterion: logits and
+    # cache state within f32-ULP noise, greedy tokens identical — chained
+    # over two steps so cached state is exercised, not just produced.
+    c1, c2 = cache, cache
+    for _ in range(2):
+        l1, c1 = api.decode_step(params, c1, tok, cfg, spec=spec)
+        l2, c2 = api.decode_step(prepared, c2, tok, cfg, spec=spec)
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                                   rtol=0, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(jnp.argmax(l1, -1)),
+                                      np.asarray(jnp.argmax(l2, -1)))
+        for a, b in zip(jax.tree_util.tree_leaves(c1),
+                        jax.tree_util.tree_leaves(c2)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=0, atol=1e-5)
+
+
+def test_prepare_params_lowrank_spec_object():
+    """prepare_params accepts an explicit (non-config) lowrank spec."""
+    cfg = _cfg("tinyllama-1.1b", mult="")
+    spec = _lowrank_spec(rank=2)
+    params = api.init_params(cfg, jax.random.key(0))
+    prepared = api.prepare_params(params, cfg, spec)
+    assert _n_prepared(prepared) > 0
+    tokens = jnp.asarray(RNG.integers(1, cfg.vocab, (2, 8)), jnp.int32)
+    l1, _ = api.prefill(params, tokens, cfg, spec=spec, max_len=16)
+    l2, _ = api.prefill(prepared, tokens, cfg, spec=spec, max_len=16)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+def test_prepare_params_idempotent():
+    """Re-preparing a prepared tree is a no-op (tree_map must not descend
+    into PreparedWeight nodes and re-wrap their fields)."""
+    cfg = _cfg("tinyllama-1.1b")
+    spec = api.make_spec(cfg)
+    params = api.init_params(cfg, jax.random.key(0))
+    prepared = api.prepare_params(params, cfg, spec)
+    again = api.prepare_params(prepared, cfg, spec)
+    assert _n_prepared(again) == _n_prepared(prepared)
+    for leaf in jax.tree_util.tree_leaves(again, is_leaf=G.is_prepared):
+        if G.is_prepared(leaf):
+            assert not G.is_prepared(leaf.w) and not G.is_prepared(leaf.sw)
+    cache = api.init_cache(cfg, 1, 8)
+    tok = jnp.asarray([[3]], jnp.int32)
+    l1, _ = api.decode_step(prepared, cache, tok, cfg, spec=spec)
+    l2, _ = api.decode_step(again, cache, tok, cfg, spec=spec)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+def test_prepare_weight_pallas_policy_skips_planes():
+    """Pallas-pinned specs skip the XLA planes (dead memory on that path);
+    a later XLA re-dispatch live-maps from the cached wq, bit-identically."""
+    spec_p = _lowrank_spec(rank=2).with_policy("pallas")
+    w = jnp.asarray(RNG.standard_normal((64, 48)), jnp.float32)
+    x = jnp.asarray(RNG.standard_normal((8, 64)), jnp.float32)
+    pw = G.prepare_weight(w, spec_p)
+    assert pw.planes.shape[-3] == 0
+    spec_x = spec_p.with_policy("xla")
+    fresh = np.asarray(G.approx_matmul(x, w, spec_x))
+    prepared = np.asarray(G.approx_matmul_prepared(x, pw, spec_x))
+    np.testing.assert_array_equal(fresh, prepared)
+    # non-pinned policies keep the planes cached
+    pw_x = G.prepare_weight(w, spec_x)
+    assert pw_x.planes.shape[-3] == spec_x.rank
+
+
+def test_prepare_params_identity_for_exact():
+    cfg = _cfg("tinyllama-1.1b", mult="")
+    params = api.init_params(cfg, jax.random.key(0))
+    assert api.prepare_params(params, cfg) is params
+
+
+def test_engine_serves_from_cache_bitexact():
+    """Engine with an approx multiplier prepares its exec_params and emits
+    exactly the tokens of a raw-params solo greedy run."""
+    from repro.serving import Engine, Request, SamplingParams
+    cfg = _cfg("tinyllama-1.1b")
+    params = api.init_params(cfg, jax.random.key(0))
+    eng = Engine(cfg, params, capacity=2, max_len=32, seed=0)
+    assert _n_prepared(eng.exec_params) > 0
+    assert _n_prepared(eng.params) == 0
+
+    prompt = RNG.integers(1, cfg.vocab, (9,)).tolist()
+    gen = 5
+    eng.submit(Request("r0", prompt, SamplingParams(max_new_tokens=gen)))
+    (done,) = eng.run_until_complete()
+
+    # raw-params reference: exact-length prefill + greedy decode loop
+    spec = api.make_spec(cfg)
+    t = jnp.asarray([prompt], jnp.int32)
+    lg, cache = api.prefill(params, t, cfg, spec=spec, max_len=32)
+    want = [int(jnp.argmax(lg, -1)[0])]
+    tok = jnp.argmax(lg, -1).astype(jnp.int32)[:, None]
+    for _ in range(gen - 1):
+        lg2, cache = api.decode_step(params, cache, tok, cfg, spec=spec)
+        tok = jnp.argmax(lg2[:, -1], -1).astype(jnp.int32)[:, None]
+        want.append(int(tok[0, 0]))
+    assert done.tokens == want
