@@ -11,15 +11,17 @@ import sys
 import time
 import traceback
 
-from benchmarks import (bench_accuracy, bench_gemm, bench_kernels,
-                        beyond_lm_codesign, fig2_table_reduction,
-                        fig2_vgg16_tradeoff, fig3_cross_models)
+from benchmarks import (bench_accuracy, bench_codesign, bench_gemm,
+                        bench_kernels, beyond_lm_codesign,
+                        fig2_table_reduction, fig2_vgg16_tradeoff,
+                        fig3_cross_models)
 
 SUITES = [
     ("fig2_vgg16_tradeoff", fig2_vgg16_tradeoff.main),
     ("fig2_table_reduction", fig2_table_reduction.main),
     ("fig3_cross_models", fig3_cross_models.main),
     ("bench_gemm", bench_gemm.csv_main),
+    ("bench_codesign", bench_codesign.csv_main),
     ("bench_kernels", bench_kernels.main),
     ("bench_accuracy", bench_accuracy.main),
     ("beyond_lm_codesign", beyond_lm_codesign.main),

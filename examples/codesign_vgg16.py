@@ -1,9 +1,13 @@
 """Full paper reproduction for one workload: VGG16 across 7/14/28 nm with
-measured (not proxy) accuracy drops.
+measured (not proxy) accuracy drops, searched by the population-parallel
+GA engine.
 
 Trains a small CNN on the synthetic classification task, measures real
-top-1 drop per Pareto multiplier, feeds the measured accuracy function into
-the GA, and prints the Fig.2/Fig.3-style comparison.
+top-1 drop per Pareto multiplier, feeds the measured accuracy function
+into the batched GA (`core/ga_batched.py`), and prints the
+Fig.2/Fig.3-style comparison.  It also refits the proxy accuracy-drop
+coefficients (`ga.ACC_DROP_NMED_COEF` / `ga.ACC_DROP_MRED_COEF`) from the
+measured drops — the calibration procedure documented in EXPERIMENTS.md.
 
   PYTHONPATH=src python examples/codesign_vgg16.py
 """
@@ -15,12 +19,26 @@ import sys
 sys.path.insert(0, os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))))  # for the benchmarks package
 
-import jax
-import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.bench_accuracy import accuracy, train_small_cnn
 from repro.approx import gemm as G
-from repro.core import codesign, ga, multipliers as mm, pareto
+from repro.core import codesign, ga, ga_batched, multipliers as mm, pareto
+
+
+def fit_proxy_coefficients(mults, drop_fn) -> tuple[float, float]:
+    """Least-squares refit of `drop ~ a*NMED + b*MRED` on the measured
+    drops — how ACC_DROP_NMED_COEF / ACC_DROP_MRED_COEF were calibrated
+    (see EXPERIMENTS.md)."""
+    feats, targets = [], []
+    for m in mults:
+        if m.is_exact:
+            continue
+        feats.append([m.stats.nmed, m.stats.mred])
+        targets.append(drop_fn(m))
+    coef, *_ = np.linalg.lstsq(np.asarray(feats), np.asarray(targets),
+                               rcond=None)
+    return float(max(coef[0], 0.0)), float(max(coef[1], 0.0))
 
 
 def main() -> int:
@@ -44,13 +62,20 @@ def main() -> int:
         rep = codesign.run_codesign(
             "vgg16", node, fps_min=30.0, max_accuracy_drop=2.0,
             mults=mults, accuracy_fn=measured_drop,
-            ga_cfg=ga.GAConfig(pop_size=16, generations=8, seed=0))
+            engine="batched",
+            batched_cfg=ga_batched.BatchedGAConfig(
+                pop_size=2048, generations=8, seed=0))
         drop = measured_drop(
             mm.get_multiplier(rep.ga_cdp.config.multiplier)) \
             if rep.ga_cdp.config.multiplier != "exact" else 0.0
         print(f"\n--- {node} nm ---")
         print(rep.summary())
         print(f"  measured top-1 drop of chosen multiplier: {drop:.2f}%")
+
+    a, b = fit_proxy_coefficients(mults, measured_drop)
+    print(f"\nproxy refit from measured drops: "
+          f"ACC_DROP_NMED_COEF≈{a:.1f} (current {ga.ACC_DROP_NMED_COEF}), "
+          f"ACC_DROP_MRED_COEF≈{b:.1f} (current {ga.ACC_DROP_MRED_COEF})")
     return 0
 
 

@@ -19,6 +19,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax.numpy as jnp
+
 from . import multipliers as mm
 from . import netlist as nlmod
 
@@ -109,3 +111,20 @@ def area_model(cfg: AcceleratorConfig) -> AreaBreakdown:
         overhead_mm2=overhead_um2 * to_mm2,
         total_mm2=(core + overhead_um2) * to_mm2,
     )
+
+
+def area_total_mm2_arr(num_pes: jnp.ndarray, rf_bytes_per_pe: jnp.ndarray,
+                       glb_kib: jnp.ndarray, mult_area_nand2eq: jnp.ndarray,
+                       node_nm: int) -> jnp.ndarray:
+    """`area_model(...).total_mm2` as a pure elementwise array function —
+    the population-parallel form used inside the jitted GA step.  Inputs
+    are same-shaped arrays of physical quantities (the batched GA gathers
+    them from its genome index tables)."""
+    nand2_um2 = nlmod.NAND2_UM2[node_nm]
+    sram_um2_bit = SRAM_UM2_PER_BIT[node_nm]
+    mult_um2 = mult_area_nand2eq * nand2_um2 * num_pes
+    mac_other_um2 = MAC_OVERHEAD_NAND2EQ * nand2_um2 * num_pes
+    rf_um2 = rf_bytes_per_pe * 8.0 * sram_um2_bit * num_pes
+    glb_um2 = glb_kib * 1024.0 * 8.0 * sram_um2_bit
+    core = mult_um2 + mac_other_um2 + rf_um2 + glb_um2
+    return core * (1.0 + OVERHEAD_FRACTION) * 1e-6

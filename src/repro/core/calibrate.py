@@ -1,0 +1,187 @@
+"""Measured (not analytical) delay for the CDP objective.
+
+The analytical dataflow model (`core/dataflow.py`) predicts *relative*
+performance across accelerator configs well — that is what the paper's
+claims rest on — but its absolute time scale is a stack of optimistic
+assumptions (perfect double buffering, no host overhead).  This module
+anchors that scale to a real measurement: it runs the repo's own fast
+path — the `repro.serving` continuous-batching engine, or the fused
+approximate-GEMM kernel that `benchmarks/bench_gemm.py` times — in smoke
+mode, and returns a `DelayCalibration` whose `scale` maps analytical
+throughput onto measured throughput.
+
+Scenario sweeps (`core/codesign.py`) then report CDP twice: the paper's
+analytical figure, and the serving-calibrated figure
+`carbon / (fps * scale)` in which a design's delay is what the measured
+software stack would actually deliver.  Everything downstream stays a
+pure array program: a calibration is one scalar multiplier on the FPS
+lattice, so the population-parallel GA consumes it for free.
+
+All imports of the serving/kernel stack are lazy: `core` stays light for
+consumers that only want the carbon/GA models.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from . import accelerator as accmod
+from . import carbon as carbonmod
+from . import dataflow as dfmod
+from . import workloads as wl
+
+
+@dataclasses.dataclass(frozen=True)
+class DelayCalibration:
+    """`measured / analytical` throughput for the same work.
+
+    `analytical` is the dataflow model's prediction for the anchor
+    accelerator running a layer-level mirror of the measured workload, so
+    `scale` carries exactly one piece of information: how the modeled
+    absolute time scale relates to a real end-to-end measurement."""
+    measured: float           # measured throughput [unit]
+    analytical: float         # model-predicted throughput [unit]
+    unit: str                 # "tokens/s" | "macs/s"
+    source: str               # "serving" | "gemm" | "identity"
+    anchor: str               # anchor accelerator description
+    meta: dict
+
+    @property
+    def scale(self) -> float:
+        return self.measured / max(self.analytical, 1e-12)
+
+    def calibrated_fps(self, fps: float) -> float:
+        return fps * self.scale
+
+    def calibrated_cdp(self, carbon_g: float, fps: float) -> float:
+        return carbonmod.cdp(carbon_g, self.calibrated_fps(fps))
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["scale"] = self.scale
+        return d
+
+
+def identity() -> DelayCalibration:
+    """No-op calibration (scale 1): calibrated CDP == analytical CDP."""
+    return DelayCalibration(1.0, 1.0, "", "identity", "", {})
+
+
+def _anchor_config(node_nm: int) -> accmod.AcceleratorConfig:
+    """The calibration anchor: the full-size exact NVDLA default."""
+    return accmod.nvdla_default(2048, node_nm)
+
+
+def calibrate_serving(arch: str = "tinyllama-1.1b", *, requests: int = 3,
+                      capacity: int = 2, max_len: int = 48, prompt: int = 8,
+                      gen: int = 4, node_nm: int = 7, mult: str = "",
+                      kernel_policy: str = "", seed: int = 0
+                      ) -> DelayCalibration:
+    """Measure the decode-step rate by serving a tiny deterministic trace
+    through `repro.serving.Engine` (reduced config), and anchor it against
+    the dataflow model's decode-step prediction built from the SAME model
+    dimensions (`workloads.decode_block_gemms`).
+
+    Measured throughput is steps/s, i.e. SINGLE-STREAM tokens/s: one
+    engine step advances every occupied slot, so dividing emitted tokens
+    by wall time would fold the arena's batch concurrency into the scale
+    (capacity would silently 'improve' calibrated CDP).  The per-step
+    rate is the quantity the analytical single decode step predicts; the
+    batched-throughput figure is recorded in `meta` for reference."""
+    from repro import configs
+    from repro.serving import Engine, Request, SamplingParams
+
+    cfg = configs.apply_overrides(configs.get_config(arch), reduced=True,
+                                  mult=mult, kernel_policy=kernel_policy)
+    eng = Engine(cfg, capacity=capacity, max_len=max_len, seed=seed)
+    # warm the jitted phases so the measurement is steady-state decode
+    eng.submit(Request("_warmup", [1] * prompt,
+                       SamplingParams(max_new_tokens=2)))
+    eng.run_until_complete()
+    base = eng.stats()
+    for i in range(requests):
+        eng.submit(Request(f"cal{i}", [(7 * i + j) % (cfg.vocab - 1) + 1
+                                       for j in range(prompt)],
+                           SamplingParams(max_new_tokens=gen)))
+    done = [c for c in eng.run_until_complete() if c.request_id != "_warmup"]
+    stats = eng.stats()
+    decode_s = stats["decode_s"] - base["decode_s"]
+    decode_steps = stats["decode_steps"] - base["decode_steps"]
+    decode_toks = sum(max(len(c.tokens) - 1, 0) for c in done)
+    measured = decode_steps / max(decode_s, 1e-9)
+
+    # analytical mirror: one decode step of this model at mid-trace cache
+    # length, on the anchor accelerator
+    head_dim = cfg.head_dim or cfg.d_model // cfg.n_heads
+    kv_len = prompt + max(gen // 2, 1)
+    layers: list[wl.Layer] = []
+    for i in range(cfg.n_layers):
+        layers += wl.decode_block_gemms(
+            f"cal.l{i}", cfg.n_heads * head_dim, cfg.d_ff, cfg.n_heads,
+            max(cfg.n_kv_heads, 1), kv_len)
+    anchor = _anchor_config(node_nm)
+    analytical = dfmod.layers_perf(layers, anchor).fps
+
+    return DelayCalibration(
+        measured=measured, analytical=analytical, unit="tokens/s",
+        source="serving",
+        anchor=f"nvdla_default(2048, {node_nm}nm)",
+        meta={"arch": cfg.name, "family": cfg.family, "requests": requests,
+              "prompt": prompt, "gen": gen, "kv_len": kv_len,
+              "decode_s": decode_s, "decode_steps": decode_steps,
+              "decode_tokens": decode_toks,
+              "batched_tokens_per_s": decode_toks / max(decode_s, 1e-9),
+              "engine": {k: v for k, v in stats.items()
+                         if isinstance(v, (int, float))}})
+
+
+def calibrate_gemm(m: int = 128, k: int = 160, n: int = 128, *,
+                   mult_name: str = "trunc2x2", reps: int = 3,
+                   node_nm: int = 7, seed: int = 0) -> DelayCalibration:
+    """Measure effective MAC/s of the fused approximate-GEMM data path
+    (the kernel `benchmarks/bench_gemm.py` times, same smoke shape) and
+    anchor it against the dataflow model's prediction for a single GEMM
+    layer of the same shape."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.approx import gemm as G
+    from repro.core import multipliers as mm
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.integers(-128, 128, (m, k)), jnp.int8)
+    b = jnp.asarray(rng.integers(-128, 128, (k, n)), jnp.int8)
+    spec = G.from_multiplier(mm.get_multiplier(mult_name))
+    fn = jax.jit(lambda x, y: ops.approx_qgemm(x, y, spec))
+    jax.block_until_ready(fn(a, b))  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(a, b))
+    sec = (time.perf_counter() - t0) / reps
+    measured = m * k * n / max(sec, 1e-12)
+
+    anchor = _anchor_config(node_nm)
+    layer = wl.GemmLayer("cal.gemm", m, n, k)
+    analytical = dfmod.layers_perf([layer], anchor).fps * layer.macs
+
+    return DelayCalibration(
+        measured=measured, analytical=analytical, unit="macs/s",
+        source="gemm", anchor=f"nvdla_default(2048, {node_nm}nm)",
+        meta={"shape": {"m": m, "k": k, "n": n}, "mult": mult_name,
+              "reps": reps, "us_per_call": sec * 1e6,
+              "backend": jax.default_backend()})
+
+
+def get_calibration(source: str, node_nm: int = 7,
+                    **kwargs) -> DelayCalibration:
+    """Dispatch by name — the CLI surface used by bench_codesign."""
+    if source in ("", "none", "identity"):
+        return identity()
+    if source == "serving":
+        return calibrate_serving(node_nm=node_nm, **kwargs)
+    if source == "gemm":
+        return calibrate_gemm(node_nm=node_nm, **kwargs)
+    raise ValueError(f"unknown calibration source {source!r}")

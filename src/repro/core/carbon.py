@@ -8,8 +8,21 @@ with Murphy yield Y(A) = ((1 - e^{-A*D0}) / (A*D0))^2, 300 mm wafers and the
 standard dies-per-wafer edge-loss formula.  Constants are public-ballpark
 values (ACT's fab model); the paper's claims are *relative* (percent carbon
 reduction), which depend on area ratios, not on the absolute CFPA scale.
+See README "Carbon model & co-design" for the per-constant sources.
 
 CDP (Carbon-Delay-Product) = C_embodied * delay, delay = 1/FPS.
+
+Two call surfaces share the same constants:
+
+  * scalar Python functions (`murphy_yield`, `cfpa`, `embodied_carbon`,
+    `cdp`) — the numpy GA reference twin and the report printers;
+  * batched jnp array functions (`murphy_yield_arr`, `cfpa_arr`,
+    `embodied_carbon_g_arr`, `cdp_arr`) — pure elementwise maps over whole
+    GA populations, traced inside the jitted GA step (`core/ga_batched.py`).
+
+Every function takes an optional `ci_fab` override (fab grid carbon
+intensity, g CO2/kWh) so scenario sweeps can model hydro-backed vs
+coal-backed fabs without mutating module state.
 """
 
 from __future__ import annotations
@@ -17,20 +30,37 @@ from __future__ import annotations
 import dataclasses
 import math
 
+import jax.numpy as jnp
+
 # --- per-technology-node fab parameters -------------------------------------
-# EPA:   manufacturing energy per unit area [kWh / cm^2]
+# EPA:   manufacturing energy per unit area [kWh / cm^2].  ACT [Gupta+
+#        ISCA'22] Fig. 4 fab-energy trend (older nodes: imec/TSMC
+#        sustainability-report ballpark); rises toward advanced nodes with
+#        the EUV layer count.
 # C_gas: direct greenhouse-gas emissions from processing [g CO2 / cm^2]
-# D0:    defect density [defects / cm^2]
-# freq:  nominal accelerator clock at that node [Hz]
+#        (PFC/NF3 etch+clean chemistry; ACT's "gas" term, scaled per cm^2).
+# D0:    defect density [defects / cm^2]; public foundry-ballpark maturity
+#        figures, feeding the Murphy yield model (ECO-CHIP uses the same
+#        yield treatment for chiplet vs monolithic carbon).
+# freq:  nominal accelerator clock at that node [Hz] (DVFS-free edge-SoC
+#        operating point; sets the dataflow model's cycle time).
 NODE_PARAMS: dict[int, dict[str, float]] = {
     7:  {"EPA": 2.15, "C_gas": 280.0, "D0": 0.20, "freq": 1.4e9},
     14: {"EPA": 1.20, "C_gas": 200.0, "D0": 0.10, "freq": 1.0e9},
     28: {"EPA": 0.85, "C_gas": 150.0, "D0": 0.05, "freq": 0.7e9},
 }
 
-CI_FAB_G_PER_KWH = 620.0      # fab electricity carbon intensity [g CO2/kWh]
-C_MATERIAL_G_PER_CM2 = 500.0  # raw material procurement [g CO2 / cm^2]
-CFPA_SI_G_PER_CM2 = 130.0     # raw silicon wafer processing [g CO2 / cm^2]
+# Fab electricity carbon intensity [g CO2/kWh].  ACT's default fab mix
+# (Taiwan/Korea grid-dominated, ~0.6 kg/kWh); scenario sweeps override this
+# via the `ci_fab` argument (e.g. ~50 hydro/nuclear-backed, ~820 coal grid).
+CI_FAB_G_PER_KWH = 620.0
+# Raw material procurement [g CO2 / cm^2]: ACT's per-area materials term
+# (wafer + chemicals + gases procurement upstream of the fab).
+C_MATERIAL_G_PER_CM2 = 500.0
+# Raw silicon wafer processing [g CO2 / cm^2], charged to *wasted* wafer
+# area in Eq. 1 (edge dies + sawing loss carry silicon cost but no
+# patterning cost) — the ECO-CHIP A_wasted treatment.
+CFPA_SI_G_PER_CM2 = 130.0
 WAFER_DIAMETER_MM = 300.0
 
 
@@ -66,17 +96,20 @@ class CarbonBreakdown:
         return self.total_g / 1000.0
 
 
-def cfpa(node_nm: int, area_mm2: float) -> tuple[float, float]:
+def cfpa(node_nm: int, area_mm2: float,
+         ci_fab: float | None = None) -> tuple[float, float]:
     """Eq. 2: carbon footprint per cm^2 of *die* area; returns (CFPA, Y)."""
     p = NODE_PARAMS[node_nm]
+    ci = CI_FAB_G_PER_KWH if ci_fab is None else ci_fab
     y = murphy_yield(area_mm2, node_nm)
-    val = (CI_FAB_G_PER_KWH * p["EPA"] + p["C_gas"] + C_MATERIAL_G_PER_CM2) / y
+    val = (ci * p["EPA"] + p["C_gas"] + C_MATERIAL_G_PER_CM2) / y
     return val, y
 
 
-def embodied_carbon(area_mm2: float, node_nm: int) -> CarbonBreakdown:
+def embodied_carbon(area_mm2: float, node_nm: int,
+                    ci_fab: float | None = None) -> CarbonBreakdown:
     """Eq. 1 for a monolithic accelerator die."""
-    cfpa_val, y = cfpa(node_nm, area_mm2)
+    cfpa_val, y = cfpa(node_nm, area_mm2, ci_fab)
     area_cm2 = area_mm2 / 100.0
     dpw = dies_per_wafer(area_mm2)
     wafer_area_cm2 = math.pi * (WAFER_DIAMETER_MM / 20.0) ** 2
@@ -95,3 +128,51 @@ def cdp(carbon_g: float, fps: float) -> float:
 
 def node_frequency(node_nm: int) -> float:
     return NODE_PARAMS[node_nm]["freq"]
+
+
+# ---------------------------------------------------------------------------
+# Batched array forms — same equations over whole populations.
+# ---------------------------------------------------------------------------
+
+def murphy_yield_arr(area_mm2: jnp.ndarray, d0: float) -> jnp.ndarray:
+    ad = (area_mm2 / 100.0) * d0
+    safe = jnp.maximum(ad, 1e-9)
+    # -expm1(-x) == 1 - e^{-x} without the f32 cancellation at small x
+    y = (-jnp.expm1(-safe) / safe) ** 2
+    return jnp.where(ad < 1e-9, 1.0, y)
+
+
+def cfpa_arr(area_mm2: jnp.ndarray, node_nm: int,
+             ci_fab: float | jnp.ndarray | None = None) -> jnp.ndarray:
+    p = NODE_PARAMS[node_nm]
+    ci = CI_FAB_G_PER_KWH if ci_fab is None else ci_fab
+    y = murphy_yield_arr(area_mm2, p["D0"])
+    return (ci * p["EPA"] + p["C_gas"] + C_MATERIAL_G_PER_CM2) / y
+
+
+def embodied_carbon_g_arr(area_mm2: jnp.ndarray, node_nm: int,
+                          ci_fab: float | jnp.ndarray | None = None
+                          ) -> jnp.ndarray:
+    """Eq. 1 total grams for an array of die areas (population-parallel).
+
+    The wasted-area term is algebraically restructured: with
+    dpw = wafer/area - edge (unclamped), `wafer/dpw - area` equals
+    `area * edge / dpw` exactly — the product form avoids the f32
+    catastrophic cancellation of subtracting two nearly equal quotients
+    for small dies."""
+    cfpa_val = cfpa_arr(area_mm2, node_nm, ci_fab)
+    area_cm2 = area_mm2 / 100.0
+    d = WAFER_DIAMETER_MM
+    wafer_area_cm2 = math.pi * (d / 20.0) ** 2
+    side = jnp.sqrt(jnp.maximum(area_mm2, 1e-9))
+    edge = math.pi * d / (math.sqrt(2.0) * side)
+    dpw_raw = math.pi * (d / 2.0) ** 2 / area_mm2 - edge
+    wasted = jnp.where(dpw_raw >= 1.0,
+                       area_cm2 * edge / jnp.maximum(dpw_raw, 1.0),
+                       wafer_area_cm2 - area_cm2)
+    wasted = jnp.maximum(0.0, wasted)
+    return cfpa_val * area_cm2 + CFPA_SI_G_PER_CM2 * wasted
+
+
+def cdp_arr(carbon_g: jnp.ndarray, fps: jnp.ndarray) -> jnp.ndarray:
+    return carbon_g / jnp.maximum(fps, 1e-9)

@@ -5,13 +5,23 @@
           fitness under FPS / accuracy-drop constraints,
   report: exact baseline, approx-only variant, GA-CDP design -- the three
           bars of the paper's Fig. 3 (and the points of Fig. 2).
+
+Beyond the single-point reproduction, `scenario_grid` / `run_scenarios`
+sweep the co-design over (technology node x fab grid carbon intensity x
+workload — CNN frames and LM serving traces alike) with the
+population-parallel engine (`core/ga_batched.py`), optionally reporting
+serving-calibrated CDP next to the analytical figure
+(`core/calibrate.py`).  `benchmarks/bench_codesign.py` drives the sweep
+and emits `BENCH_codesign.json`.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 
 from . import accelerator as accmod
+from . import calibrate as calmod
 from . import carbon as carbonmod
 from . import dataflow as dfmod
 from . import ga as gamod
@@ -54,7 +64,12 @@ def run_codesign(workload: str, node_nm: int, fps_min: float,
                  max_accuracy_drop: float,
                  mults: list[mm.ApproxMultiplier] | None = None,
                  accuracy_fn: gamod.AccuracyFn = gamod.proxy_accuracy_drop,
-                 ga_cfg: gamod.GAConfig | None = None) -> CodesignReport:
+                 ga_cfg: gamod.GAConfig | None = None,
+                 engine: str = "numpy",
+                 batched_cfg=None) -> CodesignReport:
+    """`engine="numpy"` runs the sequential reference GA; `"batched"` the
+    population-parallel engine (`core/ga_batched.py`, configured by
+    `batched_cfg`) — both report through the same reference evaluator."""
     if mults is None:
         mults = paretomod.default_front() + list(mm.static_library().values())
 
@@ -69,8 +84,17 @@ def run_codesign(workload: str, node_nm: int, fps_min: float,
     else:
         approx_only = exact
 
-    result = gamod.run_ga(workload, node_nm, fps_min, max_accuracy_drop,
-                          mults=mults, accuracy_fn=accuracy_fn, cfg=ga_cfg)
+    if engine == "batched":
+        from . import ga_batched as gbmod
+        result = gbmod.run_ga_batched(
+            workload, node_nm, fps_min, max_accuracy_drop, mults=mults,
+            accuracy_fn=accuracy_fn, cfg=batched_cfg)
+    elif engine == "numpy":
+        result = gamod.run_ga(workload, node_nm, fps_min, max_accuracy_drop,
+                              mults=mults, accuracy_fn=accuracy_fn,
+                              cfg=ga_cfg)
+    else:
+        raise ValueError(f"unknown engine {engine!r}")
     ga_best = result.best
 
     return CodesignReport(
@@ -112,4 +136,110 @@ def approx_only_sweep(workload: str, node_nm: int, max_drop: float,
     out = []
     for e in sweep_exact_configs(workload, node_nm):
         out.append(gamod.approx_variant(e.config, best_mult))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Scenario sweeps over (node x fab carbon intensity x workload) with the
+# population-parallel engine.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    workload: str
+    node_nm: int
+    ci_fab: float = carbonmod.CI_FAB_G_PER_KWH  # fab grid [g CO2/kWh]
+    fps_min: float = 30.0
+    max_accuracy_drop: float = 2.0
+
+    @property
+    def name(self) -> str:
+        return (f"{self.workload}@{self.node_nm}nm"
+                f"/ci{self.ci_fab:.0f}/fps{self.fps_min:.0f}")
+
+
+def scenario_grid(workloads: tuple[str, ...] = ("vgg16", "resnet50",
+                                                "tiny_lm", "lm_serving"),
+                  nodes: tuple[int, ...] = (7, 14, 28),
+                  ci_fabs: tuple[float, ...] = (
+                      50.0,                          # hydro/nuclear fab
+                      carbonmod.CI_FAB_G_PER_KWH,    # ACT default mix
+                      820.0),                        # coal-heavy grid
+                  fps_min: float = 30.0,
+                  max_accuracy_drop: float = 2.0) -> list[Scenario]:
+    return [Scenario(w, n, ci, fps_min, max_accuracy_drop)
+            for w in workloads for n in nodes for ci in ci_fabs]
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioResult:
+    scenario: Scenario
+    best: gamod.Evaluated
+    exact: gamod.Evaluated
+    ga_reduction: float            # carbon vs exact baseline
+    cdp_calibrated: float | None   # CDP under measured (not modeled) delay
+    wall_s: float
+
+    def to_dict(self) -> dict:
+        sc, b = self.scenario, self.best
+        return {
+            "scenario": {"workload": sc.workload, "node_nm": sc.node_nm,
+                         "ci_fab_g_per_kwh": sc.ci_fab,
+                         "fps_min": sc.fps_min,
+                         "max_accuracy_drop": sc.max_accuracy_drop},
+            "best": {"num_pes": b.config.num_pes,
+                     "pe_rows": b.config.pe_rows,
+                     "pe_cols": b.config.pe_cols,
+                     "rf_bytes_per_pe": b.config.rf_bytes_per_pe,
+                     "glb_kib": b.config.glb_kib,
+                     "multiplier": b.config.multiplier,
+                     "area_mm2": b.area_mm2, "fps": b.fps,
+                     "carbon_g": b.carbon_g, "cdp": b.cdp},
+            "exact_baseline": {"num_pes": self.exact.config.num_pes,
+                               "carbon_g": self.exact.carbon_g,
+                               "fps": self.exact.fps,
+                               "cdp": self.exact.cdp},
+            "ga_reduction": self.ga_reduction,
+            "cdp_calibrated": self.cdp_calibrated,
+            "wall_s": self.wall_s,
+        }
+
+
+def run_scenarios(scenarios: list[Scenario],
+                  mults: list[mm.ApproxMultiplier] | None = None,
+                  accuracy_fn: gamod.AccuracyFn = gamod.proxy_accuracy_drop,
+                  cfg=None,
+                  calibration: "calmod.DelayCalibration | None" = None
+                  ) -> list[ScenarioResult]:
+    """Population-parallel co-design across the scenario grid.  One
+    batched GA per scenario; the DesignSpace (FPS lattice + accuracy_fn
+    evaluations — the expensive parts, and independent of ci_fab) is
+    built once per (workload, node, constraints) and reused across the
+    carbon-intensity axis."""
+    from . import ga_batched as gbmod
+    if mults is None:
+        mults = paretomod.default_front() + list(mm.static_library().values())
+    spaces: dict[tuple, "gbmod.DesignSpace"] = {}
+    out = []
+    for sc in scenarios:
+        t0 = time.perf_counter()
+        key = (sc.workload, sc.node_nm, sc.fps_min, sc.max_accuracy_drop)
+        if key not in spaces:
+            spaces[key] = gbmod.build_space(
+                sc.workload, sc.node_nm, sc.fps_min, sc.max_accuracy_drop,
+                mults=mults, accuracy_fn=accuracy_fn)
+        space = dataclasses.replace(spaces[key], ci_fab=sc.ci_fab)
+        res = gbmod.run_ga_batched(
+            sc.workload, sc.node_nm, sc.fps_min, sc.max_accuracy_drop,
+            cfg=cfg, space=space)
+        exact = gamod.exact_baseline(sc.workload, sc.node_nm, sc.fps_min,
+                                     ci_fab=sc.ci_fab)
+        cdp_cal = None
+        if calibration is not None and calibration.source != "identity":
+            cdp_cal = calibration.calibrated_cdp(res.best.carbon_g,
+                                                 res.best.fps)
+        out.append(ScenarioResult(
+            scenario=sc, best=res.best, exact=exact,
+            ga_reduction=1.0 - res.best.carbon_g / exact.carbon_g,
+            cdp_calibrated=cdp_cal, wall_s=time.perf_counter() - t0))
     return out

@@ -20,6 +20,10 @@ import dataclasses
 import functools
 import math
 
+import jax
+import jax.numpy as jnp
+import numpy as np
+
 from . import accelerator as accmod
 from . import carbon as carbonmod
 from . import workloads as wl
@@ -102,10 +106,11 @@ def _layer_perf(layer: wl.Layer, cfg: accmod.AcceleratorConfig,
                      float(best), float(util))
 
 
-@functools.lru_cache(maxsize=4096)
-def _workload_perf_cached(workload: str, cfg_key: tuple) -> WorkloadPerf:
-    cfg = accmod.AcceleratorConfig(*cfg_key)
-    layers = wl.WORKLOADS[workload]()
+def layers_perf(layers: list[wl.Layer], cfg: accmod.AcceleratorConfig
+                ) -> WorkloadPerf:
+    """Perf of an explicit layer list (uncached): the calibration bridge
+    uses this to evaluate ad-hoc workloads built from a served model's
+    actual dimensions rather than a registered workload name."""
     freq = carbonmod.node_frequency(cfg.node_nm)
     bytes_per_cycle = cfg.dram_gbps * 1e9 / freq
     perfs = tuple(_layer_perf(l, cfg, bytes_per_cycle) for l in layers)
@@ -117,6 +122,12 @@ def _workload_perf_cached(workload: str, cfg_key: tuple) -> WorkloadPerf:
                         sum(p.dram_bytes for p in perfs))
 
 
+@functools.lru_cache(maxsize=4096)
+def _workload_perf_cached(workload: str, cfg_key: tuple) -> WorkloadPerf:
+    cfg = accmod.AcceleratorConfig(*cfg_key)
+    return layers_perf(wl.WORKLOADS[workload](), cfg)
+
+
 def workload_perf(workload: str, cfg: accmod.AcceleratorConfig) -> WorkloadPerf:
     key = (cfg.pe_rows, cfg.pe_cols, cfg.rf_bytes_per_pe, cfg.glb_kib,
            cfg.multiplier, cfg.node_nm, cfg.dram_gbps)
@@ -125,3 +136,91 @@ def workload_perf(workload: str, cfg: accmod.AcceleratorConfig) -> WorkloadPerf:
 
 def fps(workload: str, cfg: accmod.AcceleratorConfig) -> float:
     return workload_perf(workload, cfg).fps
+
+
+# ---------------------------------------------------------------------------
+# Batched array form: the same loop-nest model as `_layer_perf`, expressed
+# as pure jnp over (batch of configs) x (layer table) x (tile-candidate
+# grid) — the population-parallel evaluator behind `core/ga_batched.py`.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerTable:
+    """Struct-of-arrays layer description, one row per layer."""
+    c: np.ndarray        # input channels (GEMM: K)
+    k: np.ndarray        # output channels (GEMM: N)
+    hw: np.ndarray       # output spatial positions (GEMM: M)
+    rs: np.ndarray       # filter taps r*s (GEMM: 1)
+    i_per_c: np.ndarray  # per-channel ifmap slice bytes, max(1, ifm//c)
+    ifm: np.ndarray      # ifmap bytes
+    wgt: np.ndarray      # weight bytes
+    ofm: np.ndarray      # ofmap bytes
+
+
+def layer_table(layers: list[wl.Layer]) -> LayerTable:
+    rows = []
+    for l in layers:
+        if isinstance(l, wl.GemmLayer):
+            c, k, hw, rs = l.k, l.n, l.m, 1
+        else:
+            c, k, hw, rs = l.c_in, l.c_out, l.h_out * l.w_out, l.r * l.s
+        rows.append((c, k, hw, rs, max(1, l.ifmap_bytes // max(c, 1)),
+                     l.ifmap_bytes, l.weight_bytes, l.ofmap_bytes))
+    arr = np.asarray(rows, dtype=np.float32).T
+    return LayerTable(*arr)
+
+
+@functools.lru_cache(maxsize=32)
+def workload_table(workload: str) -> LayerTable:
+    return layer_table(wl.WORKLOADS[workload]())
+
+
+# Tile candidates are {par * 2^j clamped at the full extent}; 15 levels
+# cover every extent in WORKLOADS from the smallest parallel dim (4).
+_TILE_LEVELS = 15
+
+
+def _one_config_cycles(rows, cols, glb_bytes, bpc, t: LayerTable):
+    """Total cycles for ONE config over every layer of the table; scalars
+    `rows/cols/glb_bytes` are traced (vmapped over the population)."""
+    compute = t.hw * t.rs * jnp.ceil(t.c / rows) * jnp.ceil(t.k / cols)
+
+    lvl = 2.0 ** jnp.arange(_TILE_LEVELS, dtype=jnp.float32)
+    tk = jnp.minimum(cols * lvl[None, :], t.k[:, None])       # (L, J)
+    tc = jnp.minimum(rows * lvl[None, :], t.c[:, None])       # (L, J)
+    w_tile = tc[:, :, None] * tk[:, None, :] * t.rs[:, None, None]
+    i_tile = (tc * t.i_per_c[:, None])[:, :, None]            # (L, Jc, 1)
+    n_k = jnp.ceil(t.k[:, None] / tk)[:, None, :]             # (L, 1, Jk)
+    n_c = jnp.ceil(t.c[:, None] / tc)[:, :, None]             # (L, Jc, 1)
+    ws = (t.wgt[:, None, None] + t.ifm[:, None, None] * n_k
+          + t.ofm[:, None, None] * n_c)
+    is_ = (t.ifm[:, None, None] + t.wgt[:, None, None]
+           + t.ofm[:, None, None] * n_c)
+    feasible = 2.0 * (w_tile + i_tile) <= glb_bytes
+    is_valid = 2.0 * w_tile + i_tile <= glb_bytes
+    cand = jnp.where(feasible,
+                     jnp.where(is_valid, jnp.minimum(ws, is_), ws),
+                     jnp.inf)
+    best = jnp.min(cand, axis=(1, 2))                         # (L,)
+    fallback = (t.wgt * jnp.ceil(t.hw / 64.0)
+                + t.ifm * jnp.ceil(t.k / cols) + t.ofm * 2.0)
+    best = jnp.where(jnp.isinf(best), fallback, best)
+    return jnp.sum(jnp.maximum(compute, best / bpc))
+
+
+@functools.partial(jax.jit, static_argnames=("workload", "node_nm",
+                                             "dram_gbps"))
+def batched_fps(workload: str, rows: jnp.ndarray, cols: jnp.ndarray,
+                glb_kib: jnp.ndarray, node_nm: int,
+                dram_gbps: float = 19.2) -> jnp.ndarray:
+    """FPS for a whole batch of (pe_rows, pe_cols, glb_kib) configs at
+    once.  Matches `workload_perf(...).fps` to f32 rounding (the numpy
+    reference computes the identical candidate set in f64)."""
+    t = workload_table(workload)
+    freq = carbonmod.node_frequency(node_nm)
+    bpc = dram_gbps * 1e9 / freq
+    total = jax.vmap(
+        lambda r, c, g: _one_config_cycles(r, c, g * 1024.0, bpc, t)
+    )(jnp.asarray(rows, jnp.float32), jnp.asarray(cols, jnp.float32),
+      jnp.asarray(glb_kib, jnp.float32))
+    return freq / total

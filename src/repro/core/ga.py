@@ -115,11 +115,11 @@ def _register(mults: Sequence[mm.ApproxMultiplier]) -> None:
 
 def evaluate(genome: Genome, workload: str, node_nm: int,
              mults: Sequence[mm.ApproxMultiplier], fps_min: float,
-             cfg: GAConfig) -> Evaluated:
+             cfg: GAConfig, ci_fab: float | None = None) -> Evaluated:
     acfg = genome.to_config(mults, node_nm)
     perf = dfmod.workload_perf(workload, acfg)
     area = accmod.area_model(acfg)
-    cb = carbonmod.embodied_carbon(area.total_mm2, node_nm)
+    cb = carbonmod.embodied_carbon(area.total_mm2, node_nm, ci_fab)
     cdp = carbonmod.cdp(cb.total_g, perf.fps)
     # Fitness uses fps CAPPED at the threshold: the paper's premise is that
     # edge applications need fps_min and nothing more ("accelerators are
@@ -139,9 +139,16 @@ def run_ga(workload: str, node_nm: int, fps_min: float,
            max_accuracy_drop: float,
            mults: Sequence[mm.ApproxMultiplier] | None = None,
            accuracy_fn: AccuracyFn = proxy_accuracy_drop,
-           cfg: GAConfig | None = None) -> GAResult:
+           cfg: GAConfig | None = None,
+           ci_fab: float | None = None) -> GAResult:
     """CDP-minimizing GA.  Multipliers violating the accuracy constraint are
-    excluded up front (constraint satisfaction by construction)."""
+    excluded up front (constraint satisfaction by construction).
+
+    This sequential numpy loop is the PARITY REFERENCE TWIN of the
+    population-parallel engine in `core/ga_batched.py`: both must select
+    the same best-CDP design at a fixed seed (tests/test_ga_batched.py;
+    `benchmarks/bench_codesign.py` records the check in
+    BENCH_codesign.json)."""
     cfg = cfg or GAConfig()
     rng = np.random.default_rng(cfg.seed)
     if mults is None:
@@ -162,7 +169,7 @@ def run_ga(workload: str, node_nm: int, fps_min: float,
             int(rng.integers(0, len(allowed))))
 
     def ev(g: Genome) -> Evaluated:
-        return evaluate(g, workload, node_nm, allowed, fps_min, cfg)
+        return evaluate(g, workload, node_nm, allowed, fps_min, cfg, ci_fab)
 
     pop = [ev(random_genome()) for _ in range(cfg.pop_size)]
     history: list[float] = []
@@ -196,7 +203,8 @@ def run_ga(workload: str, node_nm: int, fps_min: float,
                     mults=list(allowed))
 
 
-def exact_baseline(workload: str, node_nm: int, fps_min: float) -> Evaluated:
+def exact_baseline(workload: str, node_nm: int, fps_min: float,
+                   ci_fab: float | None = None) -> Evaluated:
     """Smallest-carbon *exact* NVDLA-default config meeting the FPS bound
     (the paper's 'exact baseline meeting a 30 FPS threshold')."""
     best: Evaluated | None = None
@@ -207,7 +215,7 @@ def exact_baseline(workload: str, node_nm: int, fps_min: float) -> Evaluated:
         acfg = accmod.nvdla_default(accmod.VALID_PE_COUNTS[pe_idx], node_nm)
         perf = dfmod.workload_perf(workload, acfg)
         area = accmod.area_model(acfg)
-        cb = carbonmod.embodied_carbon(area.total_mm2, node_nm)
+        cb = carbonmod.embodied_carbon(area.total_mm2, node_nm, ci_fab)
         e = Evaluated(Genome(pe_idx, 0, 0, 2, 0), acfg, perf.fps, cb.total_g,
                       carbonmod.cdp(cb.total_g, perf.fps),
                       carbonmod.cdp(cb.total_g, perf.fps), area.total_mm2)
@@ -217,7 +225,7 @@ def exact_baseline(workload: str, node_nm: int, fps_min: float) -> Evaluated:
         acfg = accmod.nvdla_default(accmod.VALID_PE_COUNTS[-1], node_nm)
         perf = dfmod.workload_perf(workload, acfg)
         area = accmod.area_model(acfg)
-        cb = carbonmod.embodied_carbon(area.total_mm2, node_nm)
+        cb = carbonmod.embodied_carbon(area.total_mm2, node_nm, ci_fab)
         best = Evaluated(Genome(len(accmod.VALID_PE_COUNTS) - 1, 0, 0, 2, 0),
                          acfg, perf.fps, cb.total_g,
                          carbonmod.cdp(cb.total_g, perf.fps),

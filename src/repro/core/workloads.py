@@ -125,20 +125,29 @@ def resnet152() -> list[Layer]:
     return _resnet([3, 8, 36, 3], "resnet152")
 
 
+def attn_block_gemms(name: str, d_model: int, d_ff: int, n_heads: int,
+                     n_kv_heads: int, q_len: int, kv_len: int) -> list[Layer]:
+    """One decoder block as GEMMs: `q_len` query tokens attending over
+    `kv_len` cached positions.  `q_len == kv_len == seq` is a prefill /
+    per-token-batch block; `q_len == 1` is a serving decode step."""
+    head_dim = d_model // n_heads
+    return [
+        GemmLayer(f"{name}.q", q_len, n_heads * head_dim, d_model),
+        GemmLayer(f"{name}.kv", q_len, 2 * n_kv_heads * head_dim, d_model),
+        GemmLayer(f"{name}.scores", q_len * n_heads, kv_len, head_dim),
+        GemmLayer(f"{name}.ctx", q_len * n_heads, head_dim, kv_len),
+        GemmLayer(f"{name}.o", q_len, d_model, n_heads * head_dim),
+        GemmLayer(f"{name}.up", q_len, 2 * d_ff, d_model),
+        GemmLayer(f"{name}.down", q_len, d_model, d_ff),
+    ]
+
+
 def transformer_block_gemms(name: str, d_model: int, d_ff: int, n_heads: int,
                             n_kv_heads: int, seq: int) -> list[Layer]:
     """One decoder block as GEMMs (per-token batch = seq), for sizing edge
     accelerators on LM workloads (beyond-paper extension)."""
-    head_dim = d_model // n_heads
-    return [
-        GemmLayer(f"{name}.q", seq, n_heads * head_dim, d_model),
-        GemmLayer(f"{name}.kv", seq, 2 * n_kv_heads * head_dim, d_model),
-        GemmLayer(f"{name}.scores", seq * n_heads, seq, head_dim),
-        GemmLayer(f"{name}.ctx", seq * n_heads, head_dim, seq),
-        GemmLayer(f"{name}.o", seq, d_model, n_heads * head_dim),
-        GemmLayer(f"{name}.up", seq, 2 * d_ff, d_model),
-        GemmLayer(f"{name}.down", seq, d_model, d_ff),
-    ]
+    return attn_block_gemms(name, d_model, d_ff, n_heads, n_kv_heads,
+                            seq, seq)
 
 
 def tiny_lm(seq: int = 128, layers: int = 4, d_model: int = 256) -> list[Layer]:
@@ -149,12 +158,52 @@ def tiny_lm(seq: int = 128, layers: int = 4, d_model: int = 256) -> list[Layer]:
     return out
 
 
+def decode_block_gemms(name: str, d_model: int, d_ff: int, n_heads: int,
+                       n_kv_heads: int, kv_len: int) -> list[Layer]:
+    """One decoder block for a SINGLE new token against a KV cache of
+    `kv_len` entries — the serving engine's decode-step shape."""
+    return attn_block_gemms(name, d_model, d_ff, n_heads, n_kv_heads,
+                            1, kv_len)
+
+
+def lm_decode(kv_len: int = 128, layers: int = 2, d_model: int = 256
+              ) -> list[Layer]:
+    """One decode step of the tiny LM (all blocks, fixed cache length):
+    1/fps of this workload = per-token decode latency, the quantity the
+    serving calibration bridge (`core/calibrate.py`) measures for real."""
+    out: list[Layer] = []
+    for i in range(layers):
+        out += decode_block_gemms(f"lmdec.l{i}", d_model, 4 * d_model,
+                                  8, 8, kv_len)
+    return out
+
+
+def lm_serving(prompt: int = 48, gen: int = 8, layers: int = 2,
+               d_model: int = 256) -> list[Layer]:
+    """One serving request end to end: a `prompt`-token prefill followed by
+    `gen` decode steps against the growing KV cache — the layer-level
+    mirror of one `repro.serving` request, so scenario sweeps can size
+    accelerators for LM serving traces, not just CNN frames.  1/fps =
+    request latency."""
+    out: list[Layer] = []
+    for i in range(layers):
+        out += transformer_block_gemms(f"lmsrv.pre.l{i}", d_model,
+                                       4 * d_model, 8, 8, prompt)
+    for t in range(gen):
+        for i in range(layers):
+            out += decode_block_gemms(f"lmsrv.d{t}.l{i}", d_model,
+                                      4 * d_model, 8, 8, prompt + t + 1)
+    return out
+
+
 WORKLOADS = {
     "vgg16": vgg16,
     "vgg19": vgg19,
     "resnet50": resnet50,
     "resnet152": resnet152,
     "tiny_lm": tiny_lm,
+    "lm_decode": lm_decode,
+    "lm_serving": lm_serving,
 }
 
 

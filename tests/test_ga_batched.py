@@ -1,0 +1,214 @@
+"""Population-parallel GA engine: parity with the numpy reference twin,
+batched-model equivalence, constraint masking, calibration, scenarios."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import accelerator as acc
+from repro.core import calibrate as cal
+from repro.core import carbon as cb
+from repro.core import codesign
+from repro.core import dataflow as df
+from repro.core import ga
+from repro.core import ga_batched as gb
+from repro.core import multipliers as mm
+from repro.core import workloads as wl
+
+
+def _fast_mults():
+    return [mm.exact_multiplier(), mm.truncated(1, 1), mm.truncated(2, 2),
+            mm.truncated(3, 3)]
+
+
+# --- batched model parity ----------------------------------------------------
+
+@pytest.mark.parametrize("workload", ["vgg16", "resnet50", "lm_serving"])
+def test_batched_fps_matches_reference(workload):
+    rows, cols, glbs, ref = [], [], [], []
+    for pes in (64, 512, 2048):
+        for aspect in ga.ASPECTS:
+            r, c = ga._pe_split(pes, aspect)
+            for g in (64, 512):
+                cfg = acc.AcceleratorConfig(r, c, 32, g, "exact", 7)
+                rows.append(r), cols.append(c), glbs.append(g)
+                ref.append(df.workload_perf(workload, cfg).fps)
+    got = np.asarray(df.batched_fps(workload, np.array(rows),
+                                    np.array(cols), np.array(glbs), 7))
+    np.testing.assert_allclose(got, np.array(ref), rtol=1e-5)
+
+
+def test_batched_carbon_matches_reference():
+    areas = np.geomspace(0.05, 500, 25)
+    for node in (7, 14, 28):
+        ref = [cb.embodied_carbon(a, node).total_g for a in areas]
+        got = np.asarray(cb.embodied_carbon_g_arr(
+            jnp.asarray(areas, jnp.float32), node))
+        np.testing.assert_allclose(got, ref, rtol=1e-5)
+        # ci_fab override moves carbon the right way
+        lo = np.asarray(cb.embodied_carbon_g_arr(
+            jnp.asarray(areas, jnp.float32), node, ci_fab=50.0))
+        assert (lo < got).all()
+
+
+def test_batched_area_matches_reference():
+    for pes in (64, 256, 2048):
+        for mult in ("exact", "trunc2x2"):
+            cfg = acc.nvdla_default(pes, 7, mult)
+            ref = acc.area_model(cfg).total_mm2
+            got = float(acc.area_total_mm2_arr(
+                jnp.asarray([float(pes)]), jnp.asarray([32.0]),
+                jnp.asarray([float(cfg.glb_kib)]),
+                jnp.asarray([mm.get_multiplier(mult).area_nand2eq]), 7)[0])
+            assert got == pytest.approx(ref, rel=1e-5)
+
+
+def test_population_fitness_matches_sequential_evaluate():
+    """Every genome of a random population scores identically (to f32)
+    under the batched evaluator and the sequential reference."""
+    mults = _fast_mults()
+    space = gb.build_space("vgg16", 7, 30.0, 2.0, mults=mults)
+    rng = np.random.default_rng(0)
+    pop = np.stack([rng.integers(0, n, 64) for n in space.gene_sizes],
+                   axis=1).astype(np.int32)
+    allowed = np.flatnonzero(space.mult_allowed)
+    pop[:, -1] = allowed[pop[:, -1] % len(allowed)]
+    met = gb.evaluate_population(jnp.asarray(pop), space.tables(), 7)
+    gcfg = ga.GAConfig()
+    for row, fit, fps, carbon in zip(pop, np.asarray(met["fitness"]),
+                                     np.asarray(met["fps"]),
+                                     np.asarray(met["carbon_g"])):
+        e = ga.evaluate(space.decode(row), "vgg16", 7, list(space.mults),
+                        30.0, gcfg)
+        assert fps == pytest.approx(e.fps, rel=1e-5)
+        assert carbon == pytest.approx(e.carbon_g, rel=1e-5)
+        assert fit == pytest.approx(e.fitness, rel=1e-5)
+
+
+# --- GA parity ---------------------------------------------------------------
+
+@pytest.mark.parametrize("workload", ["vgg16", "resnet50"])
+def test_ga_parity_with_numpy_reference(workload):
+    """Fixed seed, two engines, one selected design (the acceptance
+    criterion), and the exhaustive optimum confirms both found it."""
+    mults = _fast_mults()
+    rb = gb.run_ga_batched(
+        workload, 7, 30.0, 2.0, mults=mults,
+        cfg=gb.BatchedGAConfig(pop_size=2048, generations=8, seed=0))
+    rn = ga.run_ga(workload, 7, 30.0, 2.0, mults=mults,
+                   cfg=ga.GAConfig(pop_size=32, generations=16, seed=0))
+    assert rb.best.config == rn.best.config
+    assert rb.best.cdp == pytest.approx(rn.best.cdp, rel=1e-6)
+    # exhaustive ground truth: nothing in the space beats the GA designs
+    g_ex, met_ex = gb.exhaustive_best(rb.space)
+    assert rb.best.fitness <= float(met_ex["fitness"]) * (1 + 1e-4)
+
+
+def test_ga_batched_improves_and_deterministic():
+    kw = dict(mults=_fast_mults(),
+              cfg=gb.BatchedGAConfig(pop_size=256, generations=5, seed=11))
+    r1 = gb.run_ga_batched("vgg16", 7, 30.0, 2.0, **kw)
+    r2 = gb.run_ga_batched("vgg16", 7, 30.0, 2.0, **kw)
+    assert r1.best.config == r2.best.config
+    assert r1.history == r2.history
+    assert r1.history[-1] <= r1.history[0]
+
+
+# --- constraint masking ------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+def test_masking_never_admits_infeasible_genomes(seed):
+    """Property: across generations, every surviving genome is in-range
+    and its multiplier respects the accuracy-drop ceiling."""
+    mults = _fast_mults()
+    max_drop = 0.5  # excludes trunc2x2 / trunc3x3 under the proxy model
+    res = gb.run_ga_batched(
+        "vgg16", 7, 30.0, max_drop, mults=mults,
+        cfg=gb.BatchedGAConfig(pop_size=128, generations=4, seed=seed))
+    space = res.space
+    pop = res.population
+    for g, n in zip(pop.T, space.gene_sizes):
+        assert (g >= 0).all() and (g < n).all()
+    assert space.mult_allowed[pop[:, -1]].all()
+    assert res.metrics["feasible"].all()
+    drop = ga.proxy_accuracy_drop(space.mults[res.best_genome.mult_idx])
+    assert drop <= max_drop
+
+
+@pytest.mark.parametrize("seed", [7, 8])
+def test_masking_repairs_seeded_infeasible_population(seed):
+    """Even a population seeded ENTIRELY with infeasible multiplier genes
+    is repaired by the step's constraint mask (and scores +inf fitness
+    before repair, so selection can never prefer it)."""
+    import jax
+    mults = _fast_mults()
+    space = gb.build_space("vgg16", 7, 30.0, 0.5, mults=mults)
+    bad_idx = int(np.flatnonzero(~space.mult_allowed)[0])
+    rng = np.random.default_rng(seed)
+    pop = np.stack([rng.integers(0, n, 64) for n in space.gene_sizes],
+                   axis=1).astype(np.int32)
+    pop[:, -1] = bad_idx
+    met = gb.evaluate_population(jnp.asarray(pop), space.tables(), 7)
+    assert np.isinf(np.asarray(met["fitness"])).all()
+    # elitism=2: even the verbatim-surviving elites must be repaired
+    new_pop, _, _ = gb._ga_step(
+        jax.random.PRNGKey(seed), jnp.asarray(pop), space.tables(), 7,
+        space.gene_sizes, 3, 2, 0.7, 0.25, 50.0)
+    assert space.mult_allowed[np.asarray(new_pop)[:, -1]].all()
+
+
+def test_prebuilt_space_must_match_problem():
+    space = gb.build_space("vgg16", 7, 30.0, 2.0, mults=_fast_mults())
+    with pytest.raises(ValueError, match="requested problem"):
+        gb.run_ga_batched("resnet50", 7, 30.0, 2.0, space=space,
+                          cfg=gb.BatchedGAConfig(pop_size=32, generations=1))
+
+
+# --- workloads ---------------------------------------------------------------
+
+def test_lm_serving_workloads_registered():
+    for name in ("lm_decode", "lm_serving"):
+        layers = wl.WORKLOADS[name]()
+        assert wl.total_macs(layers) > 0
+        p = df.workload_perf(name, acc.nvdla_default(256, 7))
+        assert p.fps > 0
+    # a serving trace costs more than a single decode step
+    assert wl.total_macs(wl.lm_serving()) > wl.total_macs(wl.lm_decode())
+
+
+# --- calibration -------------------------------------------------------------
+
+def test_gemm_calibration_scales_cdp():
+    c = cal.calibrate_gemm(m=32, k=48, n=32, reps=1)
+    assert c.source == "gemm" and c.measured > 0 and c.analytical > 0
+    assert c.scale > 0
+    assert c.calibrated_cdp(100.0, 50.0) == pytest.approx(
+        2.0 / c.scale, rel=1e-9)
+    ident = cal.identity()
+    assert ident.calibrated_cdp(100.0, 50.0) == pytest.approx(2.0)
+
+
+def test_scenario_sweep_with_calibration():
+    scen = [codesign.Scenario("vgg16", 7, ci_fab=50.0),
+            codesign.Scenario("vgg16", 7)]
+    c = cal.calibrate_gemm(m=32, k=48, n=32, reps=1)
+    res = codesign.run_scenarios(
+        scen, mults=_fast_mults(),
+        cfg=gb.BatchedGAConfig(pop_size=256, generations=4, seed=0),
+        calibration=c)
+    assert len(res) == 2
+    for r in res:
+        assert r.ga_reduction > 0
+        assert r.cdp_calibrated == pytest.approx(
+            r.best.cdp / c.scale, rel=1e-6)
+        d = r.to_dict()
+        assert d["best"]["multiplier"] != ""
+    # greener fab grid => less embodied carbon => smaller CDP
+    assert res[0].best.carbon_g < res[1].best.carbon_g
+
+
+def test_scenario_grid_shape():
+    grid = codesign.scenario_grid(workloads=("vgg16",), nodes=(7, 14),
+                                  ci_fabs=(620.0,))
+    assert len(grid) == 2
+    assert {s.node_nm for s in grid} == {7, 14}
