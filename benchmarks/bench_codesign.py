@@ -59,10 +59,16 @@ def parity_check(workloads: list[str], node_nm: int, seed: int) -> list[dict]:
                                        seed=seed))
         out.append({
             "workload": wk, "node_nm": node_nm, "seed": seed,
-            "match": rb.best.config == rn.best.config,
-            "batched": {"config": str(rb.best.config), "cdp": rb.best.cdp,
+            # the config dataclass does not carry the die gene — compare
+            # it explicitly or a (X, 4-die) vs (X, 1-die) split would
+            # still read as a MATCH
+            "match": (rb.best.config == rn.best.config
+                      and rb.best.n_dies == rn.best.n_dies),
+            "batched": {"config": str(rb.best.config),
+                        "n_dies": rb.best.n_dies, "cdp": rb.best.cdp,
                         "fitness": rb.best.fitness},
-            "numpy": {"config": str(rn.best.config), "cdp": rn.best.cdp,
+            "numpy": {"config": str(rn.best.config),
+                      "n_dies": rn.best.n_dies, "cdp": rn.best.cdp,
                       "fitness": rn.best.fitness},
         })
     return out
@@ -76,9 +82,14 @@ def population_eval_timing(workload: str, node_nm: int, pop_size: int,
     rng = np.random.default_rng(seed)
     pop = np.stack([rng.integers(0, n, pop_size)
                     for n in space.gene_sizes], axis=1).astype(np.int32)
-    # mask the mult gene to the feasible set (what the GA guarantees)
+    # mask the mult and die genes to the feasible set (what the GA
+    # guarantees): infeasible genomes score +inf on both engines, which
+    # would turn the relative-error check into inf - inf
     allowed_idx = np.flatnonzero(space.mult_allowed)
-    pop[:, -1] = allowed_idx[pop[:, -1] % len(allowed_idx)]
+    pop[:, gb.MULT_GENE] = allowed_idx[pop[:, gb.MULT_GENE]
+                                       % len(allowed_idx)]
+    die_ok = space.die_ok[pop[:, 0], pop[:, 1], pop[:, gb.DIE_GENE]]
+    pop[:, gb.DIE_GENE] = np.where(die_ok, pop[:, gb.DIE_GENE], 0)
 
     # numpy reference: warm the workload_perf lru cache, then time
     gcfg = ga.GAConfig()
@@ -140,6 +151,10 @@ def main(argv=None) -> dict:
     ap.add_argument("--calibration", default="",
                     choices=["", "none", "serving", "gemm"],
                     help="delay anchor (default: serving; smoke: serving)")
+    ap.add_argument("--calibration-mesh", default="",
+                    help="serve the calibration trace tensor-parallel, "
+                         "e.g. 'model=4' (serving source only; needs that "
+                         "many devices)")
     ap.add_argument("--out", default="BENCH_codesign.json")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced scenario grid + small GA (CI); the "
@@ -155,20 +170,41 @@ def main(argv=None) -> dict:
     else:
         scen = codesign.scenario_grid()
         ga_gens = args.generations
+    # multi-die pressure points: FPS floors above monolithic (one DRAM
+    # channel) reach — where the GA must trade die partitioning against
+    # packaging carbon and D2D delay
+    scen += codesign.multi_die_scenarios()
 
     parity = parity_check(parity_workloads, args.node, args.seed)
     pop_eval = population_eval_timing("vgg16", args.node, args.pop,
                                       args.seed, args.reps)
     ga_wall = ga_timing("vgg16", args.node, args.pop, ga_gens, args.seed)
 
+    cal_kwargs = {}
+    if args.calibration_mesh and (args.calibration or "serving") == \
+            "serving":
+        cal_kwargs["mesh_spec"] = args.calibration_mesh
     calib = calmod.get_calibration(args.calibration or "serving",
-                                   node_nm=args.node)
+                                   node_nm=args.node, **cal_kwargs)
     results = codesign.run_scenarios(
         scen, mults=_parity_mults(),
         cfg=gb.BatchedGAConfig(pop_size=512 if args.smoke else args.pop,
                                generations=ga_gens, seed=args.seed),
         calibration=calib)
 
+    scenario_dicts = [r.to_dict() for r in results]
+    # multi-die wins: scenarios where the GA selected >1 die AND beat the
+    # best monolithic design on the constrained-CDP fitness
+    multi_wins = [
+        {"scenario": s["scenario"], "n_dies": s["best"]["n_dies"],
+         "cdp_constrained": s["best"]["cdp_constrained"],
+         "mono_cdp_constrained": s["best_monolithic"]["cdp_constrained"],
+         "die_yield": s["best"]["die_yield"],
+         "packaging_g": s["best"]["packaging_g"]}
+        for s in scenario_dicts
+        if s["best"]["n_dies"] > 1 and s["best_monolithic"] is not None
+        and s["best"]["cdp_constrained"] <
+        s["best_monolithic"]["cdp_constrained"]]
     report = {
         "bench": "codesign",
         "smoke": args.smoke,
@@ -178,7 +214,8 @@ def main(argv=None) -> dict:
         "population_eval": pop_eval,
         "ga": ga_wall,
         "calibration": calib.to_dict(),
-        "scenarios": [r.to_dict() for r in results],
+        "scenarios": scenario_dicts,
+        "multi_die_wins": multi_wins,
     }
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
@@ -197,10 +234,20 @@ def main(argv=None) -> dict:
     for r in results:
         cal = (f" cdp_cal {r.cdp_calibrated:.3g}"
                if r.cdp_calibrated is not None else "")
+        dies = f" x{r.best.n_dies}die" if r.best.n_dies > 1 else ""
         print(f"[bench_codesign] {r.scenario.name}: "
-              f"{r.best.config.num_pes} PEs mult={r.best.config.multiplier} "
-              f"carbon -{100 * r.ga_reduction:.1f}% "
+              f"{r.best.config.num_pes} PEs{dies} "
+              f"mult={r.best.config.multiplier} "
+              f"carbon {-100 * r.ga_reduction:+.1f}% "
               f"cdp {r.best.cdp:.3g}{cal} ({r.wall_s:.1f}s)")
+    for w in multi_wins:
+        sc = w["scenario"]
+        print(f"[bench_codesign] multi-die win: {sc['workload']}@"
+              f"{sc['node_nm']}nm fps>={sc['fps_min']:.0f}: "
+              f"{w['n_dies']} dies (yield {w['die_yield']:.3f}, "
+              f"pkg {w['packaging_g']:.1f} g) cdp* "
+              f"{w['cdp_constrained']:.3g} vs mono "
+              f"{w['mono_cdp_constrained']:.3g}")
     print(f"[bench_codesign] -> {args.out}")
     return report
 

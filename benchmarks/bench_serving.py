@@ -59,6 +59,9 @@ def main(argv=None) -> int:
     ap.add_argument("--mult", default="")
     ap.add_argument("--kernel-policy", default="",
                     choices=["", "auto", "pallas", "xla"])
+    ap.add_argument("--mesh", default="",
+                    help="device mesh spec, e.g. 'model=4,data=2' "
+                         "(default: $REPRO_MESH, then the host mesh)")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--rate", type=float, default=0.5,
                     help="mean arrivals per engine tick")
@@ -91,8 +94,9 @@ def main(argv=None) -> int:
                        args.prompt_max, args.gen_min, args.gen_max,
                        args.seed, not args.uniform_sampling)
 
+    from repro.launch.mesh import make_mesh_from_spec
     eng = Engine(cfg, capacity=args.capacity, max_len=args.max_len,
-                 seed=args.seed)
+                 seed=args.seed, mesh=make_mesh_from_spec(args.mesh))
     # warm the jitted prefill/insert/decode once so the trace's latency
     # percentiles measure steady-state serving, not compile time
     eng.submit(Request("_warmup", [1] * args.prompt_min,
@@ -114,6 +118,11 @@ def main(argv=None) -> int:
     stats["prefill_s"] -= base["prefill_s"]
     stats["decode_s"] -= base["decode_s"]
     stats["completed"] -= base["completed"]
+    stats["queue_wait_ticks_total"] -= base["queue_wait_ticks_total"]
+    stats["queue_wait_ticks_mean"] = (
+        stats["queue_wait_ticks_total"] / max(stats["completed"], 1))
+    stats["evictions"] = {k: v - base["evictions"].get(k, 0)
+                          for k, v in stats["evictions"].items()}
     lat = np.asarray([c.latency_s for c in done])
     ttft = np.asarray([c.ttft_s for c in done])
     total_toks = sum(len(c.tokens) for c in done)
@@ -132,6 +141,7 @@ def main(argv=None) -> int:
             "mixed_sampling": not args.uniform_sampling,
             "seed": args.seed,
         },
+        "mesh": stats["mesh"],
         "metrics": {
             "wall_s": wall_s,
             "total_tokens": total_toks,
@@ -142,6 +152,7 @@ def main(argv=None) -> int:
             "latency_p95_s": float(np.percentile(lat, 95)),
             "ttft_p50_s": float(np.percentile(ttft, 50)),
             "ttft_p95_s": float(np.percentile(ttft, 95)),
+            "ttft_mean_s": float(np.mean(ttft)),
             "mean_queue_ticks": float(np.mean(
                 [c.admitted_tick - c.arrival for c in done])),
         },
@@ -150,12 +161,15 @@ def main(argv=None) -> int:
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
     m = report["metrics"]
-    print(f"[bench_serving] {cfg.name} ({cfg.mult or 'exact'}): "
-          f"{args.requests} reqs in {wall_s:.2f}s, "
+    mesh_str = ",".join(f"{k}={v}" for k, v in report["mesh"].items())
+    print(f"[bench_serving] {cfg.name} ({cfg.mult or 'exact'}, "
+          f"mesh {mesh_str}): {args.requests} reqs in {wall_s:.2f}s, "
           f"{m['tokens_per_s']:.1f} tok/s "
           f"(decode {m['decode_tokens_per_s']:.1f}), "
           f"latency p50 {m['latency_p50_s'] * 1e3:.0f}ms "
-          f"p95 {m['latency_p95_s'] * 1e3:.0f}ms -> {args.out}")
+          f"p95 {m['latency_p95_s'] * 1e3:.0f}ms, "
+          f"ttft p50 {m['ttft_p50_s'] * 1e3:.0f}ms "
+          f"p95 {m['ttft_p95_s'] * 1e3:.0f}ms -> {args.out}")
     return 0
 
 

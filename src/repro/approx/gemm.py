@@ -280,8 +280,8 @@ def approx_matmul(x: jax.Array, w: jax.Array, spec: MultSpec) -> jax.Array:
     return _approx_matmul_fwd(x, w, spec)[0]
 
 
-def _quantize_activations(x2: jax.Array, spec: MultSpec, use_pallas: bool
-                          ) -> tuple[jax.Array, jax.Array]:
+def _quantize_activations(x2: jax.Array, spec: MultSpec, use_pallas: bool,
+                          mesh=None) -> tuple[jax.Array, jax.Array]:
     """Per-row (per-token) activation scales: more accurate than per-tensor
     AND shard-local — a per-tensor absmax over a model-sharded dim lowers
     to an all-reduce per GEMM (measured +3x collective bytes on the
@@ -293,12 +293,43 @@ def _quantize_activations(x2: jax.Array, spec: MultSpec, use_pallas: bool
     kernel computes in f32, so for bf16 inputs it would round differently
     than the reference quantizer and the dispatch policy would become a
     numerics knob — lower precisions keep the XLA quantizer on every
-    policy.  Where both run, (q, scale) are bit-identical."""
-    if use_pallas and x2.dtype == jnp.float32:
+    policy.  Where both run, (q, scale) are bit-identical.
+
+    Multi-device meshes keep the XLA quantizer too: a bare pallas_call is
+    opaque to the SPMD partitioner (the reason the GEMM itself routes
+    through shard_map), and wrapping this small per-row pass in shard_map
+    is not worth the extra manual-partitioning surface."""
+    single_dev = mesh is None or mesh.size == 1
+    if use_pallas and single_dev and x2.dtype == jnp.float32:
         from repro.kernels import ops as kops
         trunc = spec.trunc_a if spec.mode == "trunc" else 0
         return kops.quantize_rows(x2, trunc=trunc)
     return quant.quantize(x2, axis=0)         # (m, k) -> scales (m, 1)
+
+
+def _tp_mesh(n: int):
+    """(mesh, tp) for the active sharding context: tp > 1 only when a
+    multi-device model axis exists AND the output dim splits evenly
+    (column parallelism; uneven dims stay whole, mirroring the
+    divisibility-drop rule in sharding/rules.py)."""
+    from repro.kernels import dispatch
+    from repro.sharding import ctx as shctx
+    active = shctx.active()
+    mesh = active[0] if active is not None else None
+    tp = dispatch.tp_degree(mesh)
+    return mesh, (tp if tp > 1 and n % tp == 0 else 1)
+
+
+def _dispatch_pallas_qgemm(xq, wq, spec: MultSpec, mesh, tp: int):
+    """Route a Pallas-bound GEMM by mesh context: shard_map column-
+    parallel under TP, shard_map-replicated on any other multi-device
+    mesh (pallas_call is opaque to GSPMD), plain call otherwise."""
+    from repro.kernels import ops as kops
+    if tp > 1:
+        return kops.approx_qgemm_tp(xq, wq, spec, mesh)
+    if mesh is not None and mesh.size > 1:
+        return kops.approx_qgemm_replicated(xq, wq, spec, mesh)
+    return kops.approx_qgemm(xq, wq, spec)
 
 
 def _approx_matmul_fwd(x, w, spec: MultSpec):
@@ -307,13 +338,14 @@ def _approx_matmul_fwd(x, w, spec: MultSpec):
     k = x.shape[-1]
     n = w.shape[1]
     x2 = x.reshape(-1, k)
+    mesh, tp = _tp_mesh(n)
     use_pallas = dispatch.use_pallas_gemm(spec.policy, m=x2.shape[0], k=k,
-                                          n=n, n_planes=spec.n_planes)
-    xq, sx = _quantize_activations(x2, spec, use_pallas)
+                                          n=n, n_planes=spec.n_planes,
+                                          tp=tp)
+    xq, sx = _quantize_activations(x2, spec, use_pallas, mesh)
     wq, sw = quant.quantize(w, axis=1)        # (k, n) -> per-n scales (1, n)
     if use_pallas:
-        from repro.kernels import ops as kops
-        acc = kops.approx_qgemm(xq, wq, spec)
+        acc = _dispatch_pallas_qgemm(xq, wq, spec, mesh, tp)
     else:
         acc = approx_qgemm(xq, wq, spec)
     out = acc * (sx * sw)                     # (m, n) * scalar * (1, n)
@@ -364,12 +396,13 @@ def _approx_matmul_prepared_fwd(x, pw: PreparedWeight, spec: MultSpec):
     k = x.shape[-1]
     n = pw.wq.shape[-1]
     x2 = x.reshape(-1, k)
+    mesh, tp = _tp_mesh(n)
     use_pallas = dispatch.use_pallas_gemm(spec.policy, m=x2.shape[0], k=k,
-                                          n=n, n_planes=spec.n_planes)
-    xq, sx = _quantize_activations(x2, spec, use_pallas)
+                                          n=n, n_planes=spec.n_planes,
+                                          tp=tp)
+    xq, sx = _quantize_activations(x2, spec, use_pallas, mesh)
     if use_pallas:
-        from repro.kernels import ops as kops
-        acc = kops.approx_qgemm(xq, pw.wq, spec)
+        acc = _dispatch_pallas_qgemm(xq, pw.wq, spec, mesh, tp)
     else:
         acc = approx_qgemm_prepared(xq, pw, spec)
     out = acc * (sx * pw.sw)

@@ -13,7 +13,7 @@ functions.  Rules of the road:
 * Importing this package never initializes JAX device state.
 """
 
-from repro.compat.mesh import make_abstract_mesh, make_mesh
+from repro.compat.mesh import make_abstract_mesh, make_mesh, shard_map_fn
 from repro.compat.pallas import (compiler_params_cls,
                                  normalize_dimension_semantics,
                                  tpu_compiler_params)
@@ -30,5 +30,6 @@ __all__ = [
     "make_abstract_mesh",
     "make_mesh",
     "normalize_dimension_semantics",
+    "shard_map_fn",
     "tpu_compiler_params",
 ]

@@ -57,6 +57,33 @@ def make_abstract_mesh(axis_shapes: Sequence[int],
     return _AbstractMesh(tuple(zip(names, sizes)))
 
 
+def shard_map_fn():
+    """`jax.shard_map` (0.6+) or `jax.experimental.shard_map.shard_map`
+    (0.4.x) — the per-device programming surface the mesh-aware kernel
+    dispatch uses.  Callers use the 0.4.x `check_rep` keyword; newer JAX
+    renamed it to `check_vma`, so the shim translates when the native
+    signature lacks `check_rep`."""
+    import inspect
+
+    if hasattr(jax, "shard_map"):
+        native = jax.shard_map
+    else:
+        from jax.experimental.shard_map import shard_map as native
+    try:
+        has_check_rep = "check_rep" in inspect.signature(native).parameters
+    except (TypeError, ValueError):  # C-level / wrapped signature
+        has_check_rep = True
+    if has_check_rep:
+        return native
+
+    def shard_map_compat(f, **kwargs):
+        if "check_rep" in kwargs:
+            kwargs["check_vma"] = kwargs.pop("check_rep")
+        return native(f, **kwargs)
+
+    return shard_map_compat
+
+
 def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
               devices: Sequence | None = None) -> Mesh:
     """`jax.make_mesh` where available, manual Mesh construction otherwise.

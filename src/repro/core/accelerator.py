@@ -90,16 +90,25 @@ class AreaBreakdown:
         return self.mult_mm2 / self.total_mm2
 
 
+def _area_components_um2(num_pes: float, rf_bytes_per_pe: float,
+                         glb_kib: float, mult_area_nand2eq: float,
+                         node_nm: int) -> tuple[float, float, float, float]:
+    """(mult, mac_other, rf, glb) [um^2] — the ONE scalar source of the
+    area formula (area_total_mm2_arr is its jnp twin)."""
+    nand2_um2 = nlmod.NAND2_UM2[node_nm]
+    sram_um2_bit = SRAM_UM2_PER_BIT[node_nm]
+    return (mult_area_nand2eq * nand2_um2 * num_pes,
+            MAC_OVERHEAD_NAND2EQ * nand2_um2 * num_pes,
+            rf_bytes_per_pe * 8 * sram_um2_bit * num_pes,
+            glb_kib * 1024 * 8 * sram_um2_bit)
+
+
 def area_model(cfg: AcceleratorConfig) -> AreaBreakdown:
     cfg.validate()
     mult = mm.get_multiplier(cfg.multiplier)
-    nand2_um2 = nlmod.NAND2_UM2[cfg.node_nm]
-    sram_um2_bit = SRAM_UM2_PER_BIT[cfg.node_nm]
-
-    mult_um2 = mult.area_nand2eq * nand2_um2 * cfg.num_pes
-    mac_other_um2 = MAC_OVERHEAD_NAND2EQ * nand2_um2 * cfg.num_pes
-    rf_um2 = cfg.rf_bytes_per_pe * 8 * sram_um2_bit * cfg.num_pes
-    glb_um2 = cfg.glb_kib * 1024 * 8 * sram_um2_bit
+    mult_um2, mac_other_um2, rf_um2, glb_um2 = _area_components_um2(
+        cfg.num_pes, cfg.rf_bytes_per_pe, cfg.glb_kib, mult.area_nand2eq,
+        cfg.node_nm)
     core = mult_um2 + mac_other_um2 + rf_um2 + glb_um2
     overhead_um2 = OVERHEAD_FRACTION * core
     to_mm2 = 1e-6
@@ -111,6 +120,19 @@ def area_model(cfg: AcceleratorConfig) -> AreaBreakdown:
         overhead_mm2=overhead_um2 * to_mm2,
         total_mm2=(core + overhead_um2) * to_mm2,
     )
+
+
+def die_area_mm2(cfg: AcceleratorConfig, n_dies: int = 1) -> float:
+    """Area of ONE die of an `n_dies`-way split of `cfg`: num_pes/n MACs
+    plus the per-die buffers (`cfg.rf_bytes_per_pe` per PE, `cfg.glb_kib`
+    per die).  `n_dies == 1` equals `area_model(cfg).total_mm2` exactly.
+    Unvalidated on purpose — the GA scores infeasible die splits (to mask
+    them) where num_pes/n falls outside VALID_PE_COUNTS."""
+    mult = mm.get_multiplier(cfg.multiplier)
+    core = sum(_area_components_um2(
+        cfg.num_pes / n_dies, cfg.rf_bytes_per_pe, cfg.glb_kib,
+        mult.area_nand2eq, cfg.node_nm))
+    return core * (1.0 + OVERHEAD_FRACTION) * 1e-6
 
 
 def area_total_mm2_arr(num_pes: jnp.ndarray, rf_bytes_per_pe: jnp.ndarray,

@@ -76,8 +76,9 @@ def _anchor_config(node_nm: int) -> accmod.AcceleratorConfig:
 def calibrate_serving(arch: str = "tinyllama-1.1b", *, requests: int = 3,
                       capacity: int = 2, max_len: int = 48, prompt: int = 8,
                       gen: int = 4, node_nm: int = 7, mult: str = "",
-                      kernel_policy: str = "", seed: int = 0
-                      ) -> DelayCalibration:
+                      kernel_policy: str = "", seed: int = 0,
+                      mesh_spec: str = "", n_dies: int | None = None,
+                      target=None) -> DelayCalibration:
     """Measure the decode-step rate by serving a tiny deterministic trace
     through `repro.serving.Engine` (reduced config), and anchor it against
     the dataflow model's decode-step prediction built from the SAME model
@@ -88,13 +89,37 @@ def calibrate_serving(arch: str = "tinyllama-1.1b", *, requests: int = 3,
     by wall time would fold the arena's batch concurrency into the scale
     (capacity would silently 'improve' calibrated CDP).  The per-step
     rate is the quantity the analytical single decode step predicts; the
-    batched-throughput figure is recorded in `meta` for reference."""
+    batched-throughput figure is recorded in `meta` for reference.
+
+    `mesh_spec` (e.g. ``"model=4"``) serves the trace tensor-parallel:
+    the measured side runs the engine on that device mesh, and the
+    analytical mirror runs the SAME partitioning — `n_dies` = the mesh's
+    model-axis size — through the multi-die dataflow model (per-die
+    K-split + D2D all-gather), so a multi-die target's calibrated delay
+    is anchored by a measurement that actually communicates.  Passing a
+    `core.target.HardwareTarget` instead derives both (one die == one TP
+    shard, by construction)."""
     from repro import configs
     from repro.serving import Engine, Request, SamplingParams
 
     cfg = configs.apply_overrides(configs.get_config(arch), reduced=True,
                                   mult=mult, kernel_policy=kernel_policy)
-    eng = Engine(cfg, capacity=capacity, max_len=max_len, seed=seed)
+    mesh = None
+    if target is not None:
+        if mesh_spec or n_dies is not None:
+            raise ValueError("pass either target= or mesh_spec/n_dies, "
+                             "not both")
+        mesh = target.make_mesh()
+        mesh_spec = target.mesh_spec()
+        n_dies = target.n_dies
+    elif mesh_spec:
+        from repro.launch import mesh as meshmod
+        mesh = meshmod.make_mesh_from_spec(mesh_spec)
+        if n_dies is None:
+            n_dies = int(mesh.shape.get("model", 1))
+    n_dies = n_dies or 1
+    eng = Engine(cfg, capacity=capacity, max_len=max_len, seed=seed,
+                 mesh=mesh)
     # warm the jitted phases so the measurement is steady-state decode
     eng.submit(Request("_warmup", [1] * prompt,
                        SamplingParams(max_new_tokens=2)))
@@ -112,7 +137,7 @@ def calibrate_serving(arch: str = "tinyllama-1.1b", *, requests: int = 3,
     measured = decode_steps / max(decode_s, 1e-9)
 
     # analytical mirror: one decode step of this model at mid-trace cache
-    # length, on the anchor accelerator
+    # length, on the anchor accelerator under the SAME die partitioning
     head_dim = cfg.head_dim or cfg.d_model // cfg.n_heads
     kv_len = prompt + max(gen // 2, 1)
     layers: list[wl.Layer] = []
@@ -121,14 +146,15 @@ def calibrate_serving(arch: str = "tinyllama-1.1b", *, requests: int = 3,
             f"cal.l{i}", cfg.n_heads * head_dim, cfg.d_ff, cfg.n_heads,
             max(cfg.n_kv_heads, 1), kv_len)
     anchor = _anchor_config(node_nm)
-    analytical = dfmod.layers_perf(layers, anchor).fps
+    analytical = dfmod.layers_perf(layers, anchor, n_dies).fps
 
     return DelayCalibration(
         measured=measured, analytical=analytical, unit="tokens/s",
         source="serving",
-        anchor=f"nvdla_default(2048, {node_nm}nm)",
+        anchor=f"nvdla_default(2048, {node_nm}nm) x {n_dies} dies",
         meta={"arch": cfg.name, "family": cfg.family, "requests": requests,
               "prompt": prompt, "gen": gen, "kv_len": kv_len,
+              "mesh_spec": mesh_spec, "n_dies": n_dies,
               "decode_s": decode_s, "decode_steps": decode_steps,
               "decode_tokens": decode_toks,
               "batched_tokens_per_s": decode_toks / max(decode_s, 1e-9),

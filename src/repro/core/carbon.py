@@ -63,6 +63,15 @@ C_MATERIAL_G_PER_CM2 = 500.0
 CFPA_SI_G_PER_CM2 = 130.0
 WAFER_DIAMETER_MM = 300.0
 
+# --- multi-die packaging (ECO-CHIP-style chiplet integration) ----------------
+# Splitting one accelerator across N dies buys per-die Murphy yield (small
+# dies) and an extra DRAM channel per die, but pays a packaging term:
+# an interposer/RDL substrate sized to the summed die area plus spacing,
+# charged at the raw-silicon rate (it is patterned coarsely, not at the
+# logic node), and a per-die bonding/assembly energy share.
+PACKAGING_AREA_OVERHEAD = 0.10      # interposer area beyond summed die area
+C_BONDING_G_PER_DIE = 8.0           # die-attach / D2D bonding per die [g]
+
 
 def murphy_yield(area_mm2: float, node_nm: int) -> float:
     """Murphy's yield model; area in mm^2, D0 in defects/cm^2."""
@@ -126,6 +135,58 @@ def cdp(carbon_g: float, fps: float) -> float:
     return carbon_g / max(fps, 1e-9)
 
 
+# ---------------------------------------------------------------------------
+# Multi-die packages: per-die Murphy yield + packaging overhead.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MultiDieBreakdown:
+    """Embodied carbon of an `n_dies`-die package (Eq. 1 per die + the
+    ECO-CHIP packaging term).  `n_dies == 1` collapses exactly to the
+    monolithic `embodied_carbon` (zero packaging)."""
+    per_die: CarbonBreakdown   # one die at `die_area_mm2`
+    n_dies: int
+    packaging_g: float
+    total_g: float
+
+    @property
+    def die_area_mm2(self) -> float:
+        return self.per_die.area_mm2
+
+    @property
+    def die_yield(self) -> float:
+        return self.per_die.yield_
+
+    @property
+    def total_area_mm2(self) -> float:
+        """Total patterned silicon (excl. interposer)."""
+        return self.n_dies * self.per_die.area_mm2
+
+
+def packaging_carbon(die_area_mm2: float, n_dies: int) -> float:
+    """Packaging/bonding carbon [g] for an `n_dies` package; 0 for a
+    monolithic die (no interposer, no D2D bonding)."""
+    if n_dies <= 1:
+        return 0.0
+    interposer_cm2 = n_dies * (die_area_mm2 / 100.0) * \
+        (1.0 + PACKAGING_AREA_OVERHEAD)
+    return CFPA_SI_G_PER_CM2 * interposer_cm2 + C_BONDING_G_PER_DIE * n_dies
+
+
+def multi_die_carbon(die_area_mm2: float, n_dies: int, node_nm: int,
+                     ci_fab: float | None = None) -> MultiDieBreakdown:
+    """Embodied carbon of `n_dies` identical dies of `die_area_mm2` each,
+    plus packaging.  The per-die Murphy yield is evaluated at the DIE area,
+    which is the whole point: N small dies out-yield one N-times-larger
+    die superlinearly (the chiplet lever of ECO-CHIP / the paper's Eq. 2
+    denominator)."""
+    per_die = embodied_carbon(die_area_mm2, node_nm, ci_fab)
+    pkg = packaging_carbon(die_area_mm2, n_dies)
+    return MultiDieBreakdown(
+        per_die=per_die, n_dies=n_dies, packaging_g=pkg,
+        total_g=n_dies * per_die.total_g + pkg)
+
+
 def node_frequency(node_nm: int) -> float:
     return NODE_PARAMS[node_nm]["freq"]
 
@@ -176,3 +237,22 @@ def embodied_carbon_g_arr(area_mm2: jnp.ndarray, node_nm: int,
 
 def cdp_arr(carbon_g: jnp.ndarray, fps: jnp.ndarray) -> jnp.ndarray:
     return carbon_g / jnp.maximum(fps, 1e-9)
+
+
+def packaging_carbon_arr(die_area_mm2: jnp.ndarray, n_dies: jnp.ndarray
+                         ) -> jnp.ndarray:
+    """`packaging_carbon` over arrays (n_dies may be float-valued)."""
+    interposer_cm2 = n_dies * (die_area_mm2 / 100.0) * \
+        (1.0 + PACKAGING_AREA_OVERHEAD)
+    pkg = CFPA_SI_G_PER_CM2 * interposer_cm2 + C_BONDING_G_PER_DIE * n_dies
+    return jnp.where(n_dies > 1, pkg, 0.0)
+
+
+def multi_die_carbon_g_arr(die_area_mm2: jnp.ndarray, n_dies: jnp.ndarray,
+                           node_nm: int,
+                           ci_fab: float | jnp.ndarray | None = None
+                           ) -> jnp.ndarray:
+    """`multi_die_carbon(...).total_g` as a pure array function (the
+    population-parallel form used inside the jitted GA step)."""
+    per_die = embodied_carbon_g_arr(die_area_mm2, node_nm, ci_fab)
+    return n_dies * per_die + packaging_carbon_arr(die_area_mm2, n_dies)

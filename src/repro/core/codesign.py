@@ -171,6 +171,19 @@ def scenario_grid(workloads: tuple[str, ...] = ("vgg16", "resnet50",
             for w in workloads for n in nodes for ci in ci_fabs]
 
 
+def multi_die_scenarios(ci_fab: float = carbonmod.CI_FAB_G_PER_KWH,
+                        max_accuracy_drop: float = 2.0) -> list[Scenario]:
+    """Scenarios whose FPS floor sits ABOVE the monolithic design space's
+    reach (one DRAM channel saturates) but within multi-die reach (one
+    channel per die + inter-die all-gather): the partitioning gene has to
+    fire for the GA to satisfy the application at all.  These are the
+    points where `run_scenarios` records a >1-die winner next to the best
+    monolithic design."""
+    return [Scenario("vgg16", 7, ci_fab, 120.0, max_accuracy_drop),
+            Scenario("vgg16", 14, ci_fab, 100.0, max_accuracy_drop),
+            Scenario("resnet50", 7, ci_fab, 400.0, max_accuracy_drop)]
+
+
 @dataclasses.dataclass(frozen=True)
 class ScenarioResult:
     scenario: Scenario
@@ -179,22 +192,36 @@ class ScenarioResult:
     ga_reduction: float            # carbon vs exact baseline
     cdp_calibrated: float | None   # CDP under measured (not modeled) delay
     wall_s: float
+    mono: gamod.Evaluated | None = None   # best monolithic (die gene = 1)
+
+    @staticmethod
+    def _design_dict(e: gamod.Evaluated) -> dict:
+        return {"num_pes": e.config.num_pes,
+                "pe_rows": e.config.pe_rows,
+                "pe_cols": e.config.pe_cols,
+                "rf_bytes_per_pe": e.config.rf_bytes_per_pe,
+                "glb_kib": e.config.glb_kib,
+                "multiplier": e.config.multiplier,
+                "area_mm2": e.area_mm2, "fps": e.fps,
+                "carbon_g": e.carbon_g, "cdp": e.cdp,
+                # the paper's fitness: CDP with fps capped at the floor
+                # (+ superlinear penalty under it)
+                "cdp_constrained": e.fitness,
+                "n_dies": e.n_dies,
+                "die_area_mm2": e.die_area_mm2,
+                "die_yield": e.die_yield,
+                "packaging_g": e.packaging_g}
 
     def to_dict(self) -> dict:
-        sc, b = self.scenario, self.best
+        sc = self.scenario
         return {
             "scenario": {"workload": sc.workload, "node_nm": sc.node_nm,
                          "ci_fab_g_per_kwh": sc.ci_fab,
                          "fps_min": sc.fps_min,
                          "max_accuracy_drop": sc.max_accuracy_drop},
-            "best": {"num_pes": b.config.num_pes,
-                     "pe_rows": b.config.pe_rows,
-                     "pe_cols": b.config.pe_cols,
-                     "rf_bytes_per_pe": b.config.rf_bytes_per_pe,
-                     "glb_kib": b.config.glb_kib,
-                     "multiplier": b.config.multiplier,
-                     "area_mm2": b.area_mm2, "fps": b.fps,
-                     "carbon_g": b.carbon_g, "cdp": b.cdp},
+            "best": self._design_dict(self.best),
+            "best_monolithic": (self._design_dict(self.mono)
+                                if self.mono is not None else None),
             "exact_baseline": {"num_pes": self.exact.config.num_pes,
                                "carbon_g": self.exact.carbon_g,
                                "fps": self.exact.fps,
@@ -234,6 +261,15 @@ def run_scenarios(scenarios: list[Scenario],
             cfg=cfg, space=space)
         exact = gamod.exact_baseline(sc.workload, sc.node_nm, sc.fps_min,
                                      ci_fab=sc.ci_fab)
+        # best monolithic design (die gene pinned to 1) via exhaustive
+        # search — the baseline that shows when partitioning is the win
+        fps_pen = (cfg.fps_penalty if cfg is not None
+                   else gbmod.BatchedGAConfig().fps_penalty)
+        mono_genome, _ = gbmod.exhaustive_best(space, fps_pen, max_dies=1)
+        mono = gamod.evaluate(mono_genome, sc.workload, sc.node_nm,
+                              list(space.mults), sc.fps_min,
+                              gamod.GAConfig(fps_penalty=fps_pen),
+                              ci_fab=sc.ci_fab)
         cdp_cal = None
         if calibration is not None and calibration.source != "identity":
             cdp_cal = calibration.calibrated_cdp(res.best.carbon_g,
@@ -241,5 +277,6 @@ def run_scenarios(scenarios: list[Scenario],
         out.append(ScenarioResult(
             scenario=sc, best=res.best, exact=exact,
             ga_reduction=1.0 - res.best.carbon_g / exact.carbon_g,
-            cdp_calibrated=cdp_cal, wall_s=time.perf_counter() - t0))
+            cdp_calibrated=cdp_cal, wall_s=time.perf_counter() - t0,
+            mono=mono))
     return out

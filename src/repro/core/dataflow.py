@@ -12,6 +12,16 @@ Estimates per-layer cycles for an NVDLA-style accelerator:
     overlap — an optimistic but standard assumption).
 
 FPS = freq / sum(layer cycles).  All operands int8, psums int32.
+
+Multi-die targets (`n_dies > 1`) partition the output channels (NVDLA
+Atomic-K / the TP "model" axis) across identical dies: each die runs the
+layer with K/n output channels on a (rows x cols/n) array, streams its
+own weight/ofmap slice through its own DRAM channel (aggregate bandwidth
+scales with the die count — the chiplet bandwidth lever), and replicates
+the ifmap.  Between layers the channel-partitioned activations all-gather
+over the D2D links (UCIe-class `D2D_GBPS`), modeled like the DRAM term
+(overlapped: the layer runs at max(compute, memory, d2d)) plus a fixed
+per-layer hop latency.  `n_dies == 1` is bit-for-bit the monolithic model.
 """
 
 from __future__ import annotations
@@ -29,6 +39,12 @@ from . import carbon as carbonmod
 from . import workloads as wl
 
 
+#: Die-to-die link bandwidth [GB/s] (UCIe-class, per neighbor link) and the
+#: fixed per-layer synchronization latency paid once per all-gather.
+D2D_GBPS = 32.0
+D2D_HOP_CYCLES = 2000.0
+
+
 @dataclasses.dataclass(frozen=True)
 class LayerPerf:
     name: str
@@ -36,10 +52,13 @@ class LayerPerf:
     memory_cycles: float
     dram_bytes: float
     utilization: float
+    d2d_cycles: float = 0.0     # inter-die all-gather (overlapped)
+    hop_cycles: float = 0.0     # fixed per-layer D2D sync latency (serial)
 
     @property
     def cycles(self) -> float:
-        return max(self.compute_cycles, self.memory_cycles)
+        return max(self.compute_cycles, self.memory_cycles,
+                   self.d2d_cycles) + self.hop_cycles
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,7 +70,7 @@ class WorkloadPerf:
     dram_bytes: float
 
 
-def _tile_candidates(total: int, par: int) -> list[int]:
+def _tile_candidates(total: float, par: float) -> list[float]:
     """Tile sizes: multiples of the parallel dim, plus the full extent."""
     cands = set()
     t = par
@@ -63,7 +82,12 @@ def _tile_candidates(total: int, par: int) -> list[int]:
 
 
 def _layer_perf(layer: wl.Layer, cfg: accmod.AcceleratorConfig,
-                bytes_per_cycle: float) -> LayerPerf:
+                bytes_per_cycle: float, n_dies: int = 1) -> LayerPerf:
+    """One layer on `n_dies` identical dies.  `cfg` describes the FULL
+    (rows x cols) array; each die owns cols/n_dies output-channel columns,
+    `cfg.glb_kib` of buffer, and one DRAM channel of `cfg.dram_gbps`.  The
+    K dimension, weight bytes, and ofmap bytes scale by 1/n_dies per die;
+    the ifmap is replicated (and all-gathered over D2D between layers)."""
     rows, cols = cfg.pe_rows, cfg.pe_cols
     glb = cfg.glb_kib * 1024
     if isinstance(layer, wl.GemmLayer):
@@ -75,23 +99,28 @@ def _layer_perf(layer: wl.Layer, cfg: accmod.AcceleratorConfig,
         r, s = layer.r, layer.s
         ifm, wgt, ofm = layer.ifmap_bytes, layer.weight_bytes, layer.ofmap_bytes
 
-    compute = hw * r * s * math.ceil(c / rows) * math.ceil(k / cols)
-    util = layer.macs / (compute * rows * cols)
+    # per-die view: K-partitioned output channels on a cols/n sub-array
+    cols_d = cols / n_dies
+    k_d = k / n_dies
+    wgt_d = wgt / n_dies
+    ofm_d = ofm / n_dies
+    compute = hw * r * s * math.ceil(c / rows) * math.ceil(k_d / cols_d)
+    util = (layer.macs / n_dies) / (compute * rows * cols_d)
 
     # --- DRAM traffic: best (loop order x tiling) under GLB capacity -------
     best = float("inf")
-    for tk in _tile_candidates(k, cols):
+    for tk in _tile_candidates(k_d, cols_d):
         for tc in _tile_candidates(c, rows):
             w_tile = tk * tc * r * s
             i_tile = tc * max(1, ifm // max(c, 1))  # per-channel ifmap slice
             if 2 * (w_tile + i_tile) > glb:
                 continue
-            n_k = math.ceil(k / tk)
+            n_k = math.ceil(k_d / tk)
             n_c = math.ceil(c / tc)
             # weight-stationary: weights once; ifmap streamed per K tile
-            ws = wgt + ifm * n_k + ofm * max(1, n_c)
+            ws = wgt_d + ifm * n_k + ofm_d * max(1, n_c)
             # ifmap-stationary: ifmap once; weights streamed per C tile pass
-            is_ = ifm + wgt * 1 + ofm * max(1, n_c)  # weights fit pass-wise
+            is_ = ifm + wgt_d * 1 + ofm_d * max(1, n_c)  # weights fit pass-wise
             # ifmap-stationary only valid if a full K-slice of weights tiles
             # through GLB while the ifmap tile persists:
             if 2 * w_tile + i_tile <= glb:
@@ -100,20 +129,28 @@ def _layer_perf(layer: wl.Layer, cfg: accmod.AcceleratorConfig,
                 best = min(best, ws)
     if best == float("inf"):
         # degenerate: stream everything per smallest tile
-        best = wgt * math.ceil(hw / 64) + ifm * math.ceil(k / cols) + ofm * 2
+        best = wgt_d * math.ceil(hw / 64) + ifm * math.ceil(k_d / cols_d) \
+            + ofm_d * 2
     mem_cycles = best / bytes_per_cycle
+    d2d_cycles = hop = 0.0
+    if n_dies > 1:
+        # D2D bytes/cycle at the same clock as the DRAM bytes/cycle
+        d2d_bpc = bytes_per_cycle * (D2D_GBPS / cfg.dram_gbps)
+        d2d_cycles = ifm * (n_dies - 1) / n_dies / d2d_bpc
+        hop = D2D_HOP_CYCLES
     return LayerPerf(layer.name, float(compute), float(mem_cycles),
-                     float(best), float(util))
+                     float(best), float(util), float(d2d_cycles), float(hop))
 
 
-def layers_perf(layers: list[wl.Layer], cfg: accmod.AcceleratorConfig
-                ) -> WorkloadPerf:
+def layers_perf(layers: list[wl.Layer], cfg: accmod.AcceleratorConfig,
+                n_dies: int = 1) -> WorkloadPerf:
     """Perf of an explicit layer list (uncached): the calibration bridge
     uses this to evaluate ad-hoc workloads built from a served model's
     actual dimensions rather than a registered workload name."""
     freq = carbonmod.node_frequency(cfg.node_nm)
     bytes_per_cycle = cfg.dram_gbps * 1e9 / freq
-    perfs = tuple(_layer_perf(l, cfg, bytes_per_cycle) for l in layers)
+    perfs = tuple(_layer_perf(l, cfg, bytes_per_cycle, n_dies)
+                  for l in layers)
     total = sum(p.cycles for p in perfs)
     fps = freq / total
     avg_util = sum(p.utilization * p.compute_cycles for p in perfs) / \
@@ -123,19 +160,22 @@ def layers_perf(layers: list[wl.Layer], cfg: accmod.AcceleratorConfig
 
 
 @functools.lru_cache(maxsize=4096)
-def _workload_perf_cached(workload: str, cfg_key: tuple) -> WorkloadPerf:
+def _workload_perf_cached(workload: str, cfg_key: tuple,
+                          n_dies: int) -> WorkloadPerf:
     cfg = accmod.AcceleratorConfig(*cfg_key)
-    return layers_perf(wl.WORKLOADS[workload](), cfg)
+    return layers_perf(wl.WORKLOADS[workload](), cfg, n_dies)
 
 
-def workload_perf(workload: str, cfg: accmod.AcceleratorConfig) -> WorkloadPerf:
+def workload_perf(workload: str, cfg: accmod.AcceleratorConfig,
+                  n_dies: int = 1) -> WorkloadPerf:
     key = (cfg.pe_rows, cfg.pe_cols, cfg.rf_bytes_per_pe, cfg.glb_kib,
            cfg.multiplier, cfg.node_nm, cfg.dram_gbps)
-    return _workload_perf_cached(workload, key)
+    return _workload_perf_cached(workload, key, n_dies)
 
 
-def fps(workload: str, cfg: accmod.AcceleratorConfig) -> float:
-    return workload_perf(workload, cfg).fps
+def fps(workload: str, cfg: accmod.AcceleratorConfig,
+        n_dies: int = 1) -> float:
+    return workload_perf(workload, cfg, n_dies).fps
 
 
 # ---------------------------------------------------------------------------
@@ -180,47 +220,65 @@ def workload_table(workload: str) -> LayerTable:
 _TILE_LEVELS = 15
 
 
-def _one_config_cycles(rows, cols, glb_bytes, bpc, t: LayerTable):
+def _one_config_cycles(rows, cols, glb_bytes, dies, bpc, d2d_bpc,
+                       t: LayerTable):
     """Total cycles for ONE config over every layer of the table; scalars
-    `rows/cols/glb_bytes` are traced (vmapped over the population)."""
-    compute = t.hw * t.rs * jnp.ceil(t.c / rows) * jnp.ceil(t.k / cols)
+    `rows/cols/glb_bytes/dies` are traced (vmapped over the population).
+    Mirrors `_layer_perf` exactly, including the per-die K partition
+    (k/dies output channels on cols/dies columns per die, weight/ofmap
+    bytes scaled, ifmap replicated + all-gathered over D2D)."""
+    cols_d = cols / dies
+    k_d = t.k / dies
+    wgt_d = t.wgt / dies
+    ofm_d = t.ofm / dies
+    compute = t.hw * t.rs * jnp.ceil(t.c / rows) * jnp.ceil(k_d / cols_d)
 
     lvl = 2.0 ** jnp.arange(_TILE_LEVELS, dtype=jnp.float32)
-    tk = jnp.minimum(cols * lvl[None, :], t.k[:, None])       # (L, J)
+    tk = jnp.minimum(cols_d * lvl[None, :], k_d[:, None])     # (L, J)
     tc = jnp.minimum(rows * lvl[None, :], t.c[:, None])       # (L, J)
     w_tile = tc[:, :, None] * tk[:, None, :] * t.rs[:, None, None]
     i_tile = (tc * t.i_per_c[:, None])[:, :, None]            # (L, Jc, 1)
-    n_k = jnp.ceil(t.k[:, None] / tk)[:, None, :]             # (L, 1, Jk)
+    n_k = jnp.ceil(k_d[:, None] / tk)[:, None, :]             # (L, 1, Jk)
     n_c = jnp.ceil(t.c[:, None] / tc)[:, :, None]             # (L, Jc, 1)
-    ws = (t.wgt[:, None, None] + t.ifm[:, None, None] * n_k
-          + t.ofm[:, None, None] * n_c)
-    is_ = (t.ifm[:, None, None] + t.wgt[:, None, None]
-           + t.ofm[:, None, None] * n_c)
+    ws = (wgt_d[:, None, None] + t.ifm[:, None, None] * n_k
+          + ofm_d[:, None, None] * n_c)
+    is_ = (t.ifm[:, None, None] + wgt_d[:, None, None]
+           + ofm_d[:, None, None] * n_c)
     feasible = 2.0 * (w_tile + i_tile) <= glb_bytes
     is_valid = 2.0 * w_tile + i_tile <= glb_bytes
     cand = jnp.where(feasible,
                      jnp.where(is_valid, jnp.minimum(ws, is_), ws),
                      jnp.inf)
     best = jnp.min(cand, axis=(1, 2))                         # (L,)
-    fallback = (t.wgt * jnp.ceil(t.hw / 64.0)
-                + t.ifm * jnp.ceil(t.k / cols) + t.ofm * 2.0)
+    fallback = (wgt_d * jnp.ceil(t.hw / 64.0)
+                + t.ifm * jnp.ceil(k_d / cols_d) + ofm_d * 2.0)
     best = jnp.where(jnp.isinf(best), fallback, best)
-    return jnp.sum(jnp.maximum(compute, best / bpc))
+    multi = dies > 1
+    d2d = jnp.where(multi, t.ifm * (dies - 1.0) / dies / d2d_bpc, 0.0)
+    hop = jnp.where(multi, D2D_HOP_CYCLES, 0.0)
+    per_layer = jnp.maximum(jnp.maximum(compute, best / bpc), d2d) + hop
+    return jnp.sum(per_layer)
 
 
 @functools.partial(jax.jit, static_argnames=("workload", "node_nm",
                                              "dram_gbps"))
 def batched_fps(workload: str, rows: jnp.ndarray, cols: jnp.ndarray,
                 glb_kib: jnp.ndarray, node_nm: int,
-                dram_gbps: float = 19.2) -> jnp.ndarray:
-    """FPS for a whole batch of (pe_rows, pe_cols, glb_kib) configs at
-    once.  Matches `workload_perf(...).fps` to f32 rounding (the numpy
-    reference computes the identical candidate set in f64)."""
+                dram_gbps: float = 19.2,
+                dies: jnp.ndarray | None = None) -> jnp.ndarray:
+    """FPS for a whole batch of (pe_rows, pe_cols, glb_kib[, n_dies])
+    configs at once.  Matches `workload_perf(...).fps` to f32 rounding
+    (the numpy reference computes the identical candidate set in f64)."""
     t = workload_table(workload)
     freq = carbonmod.node_frequency(node_nm)
     bpc = dram_gbps * 1e9 / freq
+    d2d_bpc = bpc * (D2D_GBPS / dram_gbps)
+    rows = jnp.asarray(rows, jnp.float32)
+    if dies is None:
+        dies = jnp.ones_like(rows)
     total = jax.vmap(
-        lambda r, c, g: _one_config_cycles(r, c, g * 1024.0, bpc, t)
-    )(jnp.asarray(rows, jnp.float32), jnp.asarray(cols, jnp.float32),
-      jnp.asarray(glb_kib, jnp.float32))
+        lambda r, c, g, d: _one_config_cycles(r, c, g * 1024.0, d, bpc,
+                                              d2d_bpc, t)
+    )(rows, jnp.asarray(cols, jnp.float32),
+      jnp.asarray(glb_kib, jnp.float32), jnp.asarray(dies, jnp.float32))
     return freq / total

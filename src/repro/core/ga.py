@@ -42,6 +42,11 @@ AccuracyFn = Callable[[mm.ApproxMultiplier], float]
 RF_CHOICES = (32, 64, 128)
 GLB_KIB_CHOICES = (64, 128, 256, 512, 1024)
 ASPECTS = ("square", "wide", "tall")
+#: Dies per package: the genome's partitioning gene.  >1 splits the PE
+#: array's output-channel columns across identical dies (per-die Murphy
+#: yield + one DRAM channel per die, at a packaging-carbon and D2D-delay
+#: cost — core/carbon.py, core/dataflow.py).
+DIE_CHOICES = (1, 2, 4)
 
 
 def _pe_split(num_pes: int, aspect: str) -> tuple[int, int]:
@@ -56,6 +61,14 @@ def _pe_split(num_pes: int, aspect: str) -> tuple[int, int]:
     return rows, cols
 
 
+def die_feasible(pe_cols: int, num_pes: int, n_dies: int) -> bool:
+    """An n-die split must cut the output-channel columns evenly and leave
+    each die a full design-space array (>= smallest VALID_PE_COUNTS)."""
+    return (n_dies == 1 or
+            (pe_cols % n_dies == 0 and
+             num_pes // n_dies >= accmod.VALID_PE_COUNTS[0]))
+
+
 @dataclasses.dataclass(frozen=True)
 class Genome:
     pe_idx: int
@@ -63,9 +76,15 @@ class Genome:
     rf_idx: int
     glb_idx: int
     mult_idx: int
+    die_idx: int = 0
+
+    @property
+    def n_dies(self) -> int:
+        return DIE_CHOICES[self.die_idx]
 
     def to_config(self, mults: Sequence[mm.ApproxMultiplier], node_nm: int
                   ) -> accmod.AcceleratorConfig:
+        """FULL-array config (all dies cooperating); `glb_kib` is per-die."""
         pes = accmod.VALID_PE_COUNTS[self.pe_idx]
         rows, cols = _pe_split(pes, ASPECTS[self.aspect_idx])
         return accmod.AcceleratorConfig(
@@ -74,6 +93,18 @@ class Genome:
             glb_kib=GLB_KIB_CHOICES[self.glb_idx],
             multiplier=mults[self.mult_idx].name,
             node_nm=node_nm)
+
+    def to_target(self, mults: Sequence[mm.ApproxMultiplier], node_nm: int):
+        """Decode into a `HardwareTarget` (per-die config + serving mesh
+        with the model axis = die count)."""
+        from . import target as targetmod
+        full = self.to_config(mults, node_nm)
+        n = self.n_dies
+        if not die_feasible(full.pe_cols, full.num_pes, n):
+            raise ValueError(f"genome {self} is not an even die split")
+        die = dataclasses.replace(full, pe_cols=full.pe_cols // n)
+        return targetmod.HardwareTarget(
+            die=die, n_dies=n, mesh_axes=(("data", 1), ("model", n)))
 
 
 @dataclasses.dataclass
@@ -90,12 +121,16 @@ class GAConfig:
 @dataclasses.dataclass(frozen=True)
 class Evaluated:
     genome: Genome
-    config: accmod.AcceleratorConfig
+    config: accmod.AcceleratorConfig   # full array; glb_kib is per-die
     fps: float
-    carbon_g: float
+    carbon_g: float                    # package total (dies + packaging)
     cdp: float
     fitness: float
-    area_mm2: float
+    area_mm2: float                    # total patterned silicon, all dies
+    n_dies: int = 1
+    die_area_mm2: float = 0.0
+    die_yield: float = 1.0
+    packaging_g: float = 0.0
 
 
 @dataclasses.dataclass
@@ -117,9 +152,10 @@ def evaluate(genome: Genome, workload: str, node_nm: int,
              mults: Sequence[mm.ApproxMultiplier], fps_min: float,
              cfg: GAConfig, ci_fab: float | None = None) -> Evaluated:
     acfg = genome.to_config(mults, node_nm)
-    perf = dfmod.workload_perf(workload, acfg)
-    area = accmod.area_model(acfg)
-    cb = carbonmod.embodied_carbon(area.total_mm2, node_nm, ci_fab)
+    n_dies = genome.n_dies
+    perf = dfmod.workload_perf(workload, acfg, n_dies)
+    die_area = accmod.die_area_mm2(acfg, n_dies)
+    cb = carbonmod.multi_die_carbon(die_area, n_dies, node_nm, ci_fab)
     cdp = carbonmod.cdp(cb.total_g, perf.fps)
     # Fitness uses fps CAPPED at the threshold: the paper's premise is that
     # edge applications need fps_min and nothing more ("accelerators are
@@ -131,8 +167,14 @@ def evaluate(genome: Genome, workload: str, node_nm: int,
         deficit = (fps_min - perf.fps) / fps_min
         fitness = fitness * (1.0 + cfg.fps_penalty * deficit *
                              (1.0 + deficit))
+    # uneven die splits never score (mirrors the batched engine's
+    # die-feasibility mask); metrics stay reportable for parity checks
+    if not die_feasible(acfg.pe_cols, acfg.num_pes, n_dies):
+        fitness = float("inf")
     return Evaluated(genome, acfg, perf.fps, cb.total_g, cdp, fitness,
-                     area.total_mm2)
+                     n_dies * die_area, n_dies=n_dies,
+                     die_area_mm2=die_area, die_yield=cb.die_yield,
+                     packaging_g=cb.packaging_g)
 
 
 def run_ga(workload: str, node_nm: int, fps_min: float,
@@ -166,16 +208,18 @@ def run_ga(workload: str, node_nm: int, fps_min: float,
             int(rng.integers(0, n_pe)), int(rng.integers(0, len(ASPECTS))),
             int(rng.integers(0, len(RF_CHOICES))),
             int(rng.integers(0, len(GLB_KIB_CHOICES))),
-            int(rng.integers(0, len(allowed))))
+            int(rng.integers(0, len(allowed))),
+            int(rng.integers(0, len(DIE_CHOICES))))
 
     def ev(g: Genome) -> Evaluated:
         return evaluate(g, workload, node_nm, allowed, fps_min, cfg, ci_fab)
 
     pop = [ev(random_genome()) for _ in range(cfg.pop_size)]
     history: list[float] = []
-    genes = ("pe_idx", "aspect_idx", "rf_idx", "glb_idx", "mult_idx")
+    genes = ("pe_idx", "aspect_idx", "rf_idx", "glb_idx", "mult_idx",
+             "die_idx")
     ranges = (n_pe, len(ASPECTS), len(RF_CHOICES), len(GLB_KIB_CHOICES),
-              len(allowed))
+              len(allowed), len(DIE_CHOICES))
 
     for _gen in range(cfg.generations):
         pop.sort(key=lambda e: e.fitness)

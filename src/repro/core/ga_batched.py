@@ -5,10 +5,10 @@ whole population evaluated as one batched array program.
 at a time; this module keeps its design space, fitness definition, and
 constraint semantics but turns them into struct-of-arrays compute:
 
-  * genomes are an int32 (P, 5) array over
-    (pe_idx, aspect_idx, rf_idx, glb_idx, mult_idx);
-  * FPS comes from a (n_pe, n_aspect, n_glb) lattice precomputed ONCE per
-    (workload, node) by the batched dataflow model
+  * genomes are an int32 (P, 6) array over
+    (pe_idx, aspect_idx, rf_idx, glb_idx, mult_idx, die_idx);
+  * FPS comes from a (n_pe, n_aspect, n_glb, n_die) lattice precomputed
+    ONCE per (workload, node) by the batched dataflow model
     (`dataflow.batched_fps`) — the performance model itself runs as a
     jnp array program, then the GA gathers from the lattice;
   * area / embodied carbon / CDP fitness are the pure array functions in
@@ -41,8 +41,11 @@ from . import dataflow as dfmod
 from . import ga as gamod
 from . import multipliers as mm
 
-GENE_NAMES = ("pe_idx", "aspect_idx", "rf_idx", "glb_idx", "mult_idx")
+GENE_NAMES = ("pe_idx", "aspect_idx", "rf_idx", "glb_idx", "mult_idx",
+              "die_idx")
 N_GENES = len(GENE_NAMES)
+MULT_GENE = GENE_NAMES.index("mult_idx")
+DIE_GENE = GENE_NAMES.index("die_idx")
 
 
 @dataclasses.dataclass
@@ -75,13 +78,15 @@ class DesignSpace:
     glb_kib: np.ndarray       # (n_glb,)
     mult_area: np.ndarray     # (n_mults,) NAND2-equivalents
     mult_allowed: np.ndarray  # (n_mults,) bool — accuracy-drop ceiling
-    fps_table: np.ndarray     # (n_pe, n_aspect, n_glb)
+    fps_table: np.ndarray     # (n_pe, n_aspect, n_glb, n_die)
     exact_idx: int            # fallback gene for constraint masking
+    dies: np.ndarray          # (n_die,) die counts (gamod.DIE_CHOICES)
+    die_ok: np.ndarray        # (n_pe, n_aspect, n_die) bool — even splits
 
     @property
     def gene_sizes(self) -> tuple[int, ...]:
         return (len(self.num_pes), self.rows.shape[1], len(self.rf_bytes),
-                len(self.glb_kib), len(self.mults))
+                len(self.glb_kib), len(self.mults), len(self.dies))
 
     @property
     def size(self) -> int:
@@ -98,6 +103,8 @@ class DesignSpace:
             "glb": f32(self.glb_kib), "mult_area": f32(self.mult_area),
             "allowed": jnp.asarray(self.mult_allowed),
             "fps": f32(self.fps_table),
+            "dies": f32(self.dies),
+            "die_ok": jnp.asarray(self.die_ok),
             "exact_idx": jnp.int32(self.exact_idx),
             "ci_fab": jnp.float32(
                 carbonmod.CI_FAB_G_PER_KWH if self.ci_fab is None
@@ -139,13 +146,23 @@ def build_space(workload: str, node_nm: int, fps_min: float,
             rows[i, j], cols[i, j] = gamod._pe_split(pes, aspect)
 
     glb = np.asarray(gamod.GLB_KIB_CHOICES, np.int64)
-    # FPS lattice: every (pe, aspect, glb) combo in one batched call
-    ri, rj, rk = np.meshgrid(np.arange(n_pe), np.arange(n_aspect),
-                             np.arange(len(glb)), indexing="ij")
+    dies = np.asarray(gamod.DIE_CHOICES, np.int64)
+    n_die = len(dies)
+    die_ok = np.zeros((n_pe, n_aspect, n_die), bool)
+    for i, pes in enumerate(accmod.VALID_PE_COUNTS):
+        for j in range(n_aspect):
+            for di, d in enumerate(gamod.DIE_CHOICES):
+                die_ok[i, j, di] = gamod.die_feasible(
+                    int(cols[i, j]), pes, d)
+    # FPS lattice: every (pe, aspect, glb, die) combo in one batched call
+    ri, rj, rk, rd = np.meshgrid(np.arange(n_pe), np.arange(n_aspect),
+                                 np.arange(len(glb)), np.arange(n_die),
+                                 indexing="ij")
     fps_flat = dfmod.batched_fps(
         workload, rows[ri.ravel(), rj.ravel()], cols[ri.ravel(), rj.ravel()],
-        glb[rk.ravel()], node_nm, dram_gbps)
-    fps_table = np.asarray(fps_flat).reshape(n_pe, n_aspect, len(glb))
+        glb[rk.ravel()], node_nm, dram_gbps, dies=dies[rd.ravel()])
+    fps_table = np.asarray(fps_flat).reshape(n_pe, n_aspect, len(glb),
+                                             n_die)
 
     return DesignSpace(
         workload=workload, node_nm=node_nm, fps_min=fps_min,
@@ -156,7 +173,8 @@ def build_space(workload: str, node_nm: int, fps_min: float,
         glb_kib=glb,
         mult_area=np.array([m.area_nand2eq for m in mults]),
         mult_allowed=allowed,
-        fps_table=fps_table, exact_idx=exact_idx)
+        fps_table=fps_table, exact_idx=exact_idx,
+        dies=dies, die_ok=die_ok)
 
 
 # ---------------------------------------------------------------------------
@@ -165,14 +183,17 @@ def build_space(workload: str, node_nm: int, fps_min: float,
 
 def _metrics(pop: jnp.ndarray, t: dict, node_nm: int,
              fps_penalty: float) -> dict:
-    """CDP fitness of a (P, 5) genome array — pure gathers + elementwise
+    """CDP fitness of a (P, 6) genome array — pure gathers + elementwise
     array math, no Python per-genome work."""
-    pe, aspect, rf, glb, mult = (pop[:, i] for i in range(N_GENES))
-    fps = t["fps"][pe, aspect, glb]
-    area = accmod.area_total_mm2_arr(
-        t["num_pes"][pe], t["rf"][rf], t["glb"][glb],
+    pe, aspect, rf, glb, mult, die = (pop[:, i] for i in range(N_GENES))
+    fps = t["fps"][pe, aspect, glb, die]
+    n_dies = t["dies"][die]
+    die_area = accmod.area_total_mm2_arr(
+        t["num_pes"][pe] / n_dies, t["rf"][rf], t["glb"][glb],
         t["mult_area"][mult], node_nm)
-    carbon = carbonmod.embodied_carbon_g_arr(area, node_nm, t["ci_fab"])
+    area = n_dies * die_area
+    carbon = carbonmod.multi_die_carbon_g_arr(die_area, n_dies, node_nm,
+                                              t["ci_fab"])
     cdp = carbonmod.cdp_arr(carbon, fps)
     fps_min = t["fps_min"]
     # identical semantics to ga.evaluate: fps capped at the threshold
@@ -183,11 +204,13 @@ def _metrics(pop: jnp.ndarray, t: dict, node_nm: int,
     deficit = (fps_min - fps) / jnp.maximum(fps_min, 1e-9)
     penalized = fitness * (1.0 + fps_penalty * deficit * (1.0 + deficit))
     fitness = jnp.where((fps_min > 0) & (fps < fps_min), penalized, fitness)
-    # constraint mask: accuracy-infeasible multiplier genes never score
-    feasible = t["allowed"][mult]
+    # constraint mask: accuracy-infeasible multiplier genes and uneven die
+    # splits never score
+    feasible = t["allowed"][mult] & t["die_ok"][pe, aspect, die]
     fitness = jnp.where(feasible, fitness, jnp.inf)
     return {"fps": fps, "area_mm2": area, "carbon_g": carbon, "cdp": cdp,
-            "fitness": fitness, "feasible": feasible}
+            "fitness": fitness, "feasible": feasible,
+            "n_dies": n_dies, "die_area_mm2": die_area}
 
 
 @functools.partial(jax.jit, static_argnames=("node_nm", "fps_penalty"))
@@ -198,15 +221,29 @@ def evaluate_population(pop: jnp.ndarray, tables: dict, node_nm: int,
 
 def _random_genes(key: jnp.ndarray, n: int, gene_sizes: tuple[int, ...],
                   allowed: jnp.ndarray) -> jnp.ndarray:
-    """(n, 5) random genomes; the multiplier gene is drawn ONLY from the
-    accuracy-feasible set (constraint satisfaction by construction)."""
+    """(n, 6) random genomes; the multiplier gene is drawn ONLY from the
+    accuracy-feasible set (constraint satisfaction by construction).  The
+    die gene is uniform — its feasibility depends on the (pe, aspect)
+    genes, so uneven splits are repaired by `_snap_die_gene` instead."""
     keys = jax.random.split(key, N_GENES)
-    cols = [jax.random.randint(keys[i], (n,), 0, gene_sizes[i], jnp.int32)
-            for i in range(N_GENES - 1)]
     logits = jnp.where(allowed, 0.0, -jnp.inf)
-    cols.append(jax.random.categorical(
-        keys[-1], logits, shape=(n,)).astype(jnp.int32))
+    cols = []
+    for i in range(N_GENES):
+        if i == MULT_GENE:
+            cols.append(jax.random.categorical(
+                keys[i], logits, shape=(n,)).astype(jnp.int32))
+        else:
+            cols.append(jax.random.randint(keys[i], (n,), 0, gene_sizes[i],
+                                           jnp.int32))
     return jnp.stack(cols, axis=1)
+
+
+def _snap_die_gene(pop: jnp.ndarray, die_ok: jnp.ndarray) -> jnp.ndarray:
+    """Repair uneven die splits to the always-feasible monolithic gene 0
+    (DIE_CHOICES[0] == 1)."""
+    ok = die_ok[pop[:, 0], pop[:, 1], pop[:, DIE_GENE]]
+    return pop.at[:, DIE_GENE].set(
+        jnp.where(ok, pop[:, DIE_GENE], 0).astype(pop.dtype))
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -243,11 +280,12 @@ def _ga_step(key: jnp.ndarray, pop: jnp.ndarray, tables: dict,
     child = child.at[:elitism].set(pop[order[:elitism]])
 
     # constraint masking, applied last so even seeded-infeasible elites
-    # cannot carry an accuracy-infeasible multiplier gene forward — snap
-    # it to the exact multiplier.
-    mult = child[:, -1]
-    child = child.at[:, -1].set(
+    # cannot carry an accuracy-infeasible multiplier gene (snap to the
+    # exact multiplier) or an uneven die split (snap to 1 die) forward.
+    mult = child[:, MULT_GENE]
+    child = child.at[:, MULT_GENE].set(
         jnp.where(t["allowed"][mult], mult, t["exact_idx"]))
+    child = _snap_die_gene(child, t["die_ok"])
     return child, fit[order[0]], pop[order[0]]
 
 
@@ -289,6 +327,7 @@ def run_ga_batched(workload: str, node_nm: int, fps_min: float,
     key = jax.random.PRNGKey(cfg.seed)
     key, k_init = jax.random.split(key)
     pop = _random_genes(k_init, cfg.pop_size, gene_sizes, tables["allowed"])
+    pop = _snap_die_gene(pop, tables["die_ok"])
 
     history: list[float] = []
     for _ in range(cfg.generations):
@@ -313,15 +352,20 @@ def run_ga_batched(workload: str, node_nm: int, fps_min: float,
                            space=space)
 
 
-def exhaustive_best(space: DesignSpace,
-                    fps_penalty: float = 50.0) -> tuple[gamod.Genome, dict]:
+def exhaustive_best(space: DesignSpace, fps_penalty: float = 50.0,
+                    max_dies: int | None = None
+                    ) -> tuple[gamod.Genome, dict]:
     """Ground truth by brute force: evaluate EVERY genome in the space in
     one batched call (the space is small enough that the batched model
     makes exhaustive search cheaper than the sequential GA's first
-    generation).  Returns (argmin genome, its metrics)."""
+    generation).  Returns (argmin genome, its metrics).  `max_dies=1`
+    restricts to monolithic designs — the baseline the multi-die
+    scenarios are compared against."""
     grids = np.meshgrid(*(np.arange(s) for s in space.gene_sizes),
                         indexing="ij")
     pop = np.stack([g.ravel() for g in grids], axis=1).astype(np.int32)
+    if max_dies is not None:
+        pop = pop[space.dies[pop[:, DIE_GENE]] <= max_dies]
     met = evaluate_population(jnp.asarray(pop), space.tables(),
                               space.node_nm, fps_penalty)
     met = {k: np.asarray(v) for k, v in met.items()}

@@ -68,22 +68,47 @@ def interpret_mode() -> bool:
     return not compat.is_tpu_backend()
 
 
+def tp_degree(mesh) -> int:
+    """Model-axis size of a mesh (1 when absent / no mesh): the tensor-
+    parallel fan-out a GEMM's output dimension is split across."""
+    if mesh is None:
+        return 1
+    try:
+        return int(mesh.shape.get("model", 1))
+    except AttributeError:
+        return 1
+
+
+def tp_split(n: int, tp: int) -> int:
+    """Shard-local output dimension under `tp`-way column parallelism
+    (the whole dim when it does not divide — that GEMM stays unsplit)."""
+    return n // tp if tp > 1 and n % tp == 0 else n
+
+
 def use_pallas_gemm(policy: str | None, *, m: int, k: int, n: int,
-                    n_planes: int = 1) -> bool:
+                    n_planes: int = 1, tp: int = 1) -> bool:
     """Should this (m, k, n) approximate GEMM with `n_planes` operand planes
-    run on the Pallas kernel?  Resolved at trace time (shapes are static)."""
+    run on the Pallas kernel?  Resolved at trace time (shapes are static).
+
+    Under `tp`-way tensor parallelism the kernel runs per shard (via
+    shard_map, kernels/ops.approx_qgemm_tp), so both the minimum-tile
+    check and the VMEM budget apply to the SHARD-LOCAL shape
+    (m, k, n/tp) — a GEMM whose fused working set busts VMEM globally can
+    still run fused when each die's slice fits; one that doesn't falls
+    back to XLA per-shard."""
     p = resolve(policy)
     if p == "xla":
         return False
+    n_local = tp_split(n, tp)
     if p == "pallas":
         return True
     # auto
     if not compat.is_tpu_backend():
         return False
-    if min(m, k, n) < MIN_DIM:
+    if min(m, k, n_local) < MIN_DIM:
         return False
     from repro.kernels import approx_qgemm as qk
-    bm, bk, bn = qk.choose_blocks(m, k, n)
+    bm, bk, bn = qk.choose_blocks(m, k, n_local)
     return qk.fused_vmem_bytes(bm, bk, bn, n_planes) <= VMEM_BUDGET_BYTES
 
 

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.approx import gemm as gemm_mod
 from repro.kernels import approx_qgemm as qk
 from repro.kernels import dispatch
@@ -96,6 +97,54 @@ def approx_qgemm(a_q: jax.Array, b_q: jax.Array, spec: gemm_mod.MultSpec,
                                      trunc_b=trunc_b, bm=bm, bk=bk, bn=bn,
                                      interpret=interpret)
     return out[:m, :n]
+
+
+def approx_qgemm_tp(a_q: jax.Array, b_q: jax.Array,
+                    spec: gemm_mod.MultSpec, mesh, *,
+                    axis: str = "model", fused: bool = True) -> jax.Array:
+    """Column-parallel tensor-parallel fused GEMM: the weight is sharded
+    on its output dim over the mesh's `axis`, activations are replicated,
+    and each shard runs the SAME fused Pallas kernel on its shard-local
+    (m, k, n/tp) slice — the (R, 256) LUT factor tables ride into every
+    shard's VMEM (they are spec constants, replicated by closure).  A
+    full-K contraction per shard means no cross-shard reduction, so the
+    result is bit-identical to the single-device kernel.
+
+    Inside jit, the shard_map in_specs double as sharding constraints:
+    weights prepared/committed with sharding/rules.py (col-parallel on
+    "model") flow in without movement; anything else is resharded once by
+    GSPMD."""
+    from jax.sharding import PartitionSpec as P
+
+    n = b_q.shape[1]
+    tp = dispatch.tp_degree(mesh)
+    assert tp > 1 and n % tp == 0, (n, tp)
+    shard_map = compat.shard_map_fn()
+
+    def per_shard(a, b):
+        return approx_qgemm(a, b, spec, fused=fused)
+
+    run = shard_map(per_shard, mesh=mesh,
+                    in_specs=(P(), P(None, axis)),
+                    out_specs=P(None, axis), check_rep=False)
+    return run(a_q, b_q)
+
+
+def approx_qgemm_replicated(a_q: jax.Array, b_q: jax.Array,
+                            spec: gemm_mod.MultSpec, mesh, *,
+                            fused: bool = True) -> jax.Array:
+    """Fully-replicated shard_map wrapper: every device runs the whole
+    fused kernel.  The escape hatch for a pallas-pinned policy on a
+    multi-device mesh when the output dim does not divide the model axis
+    (pallas_call is opaque to GSPMD, so it must run under manual
+    partitioning either way)."""
+    from jax.sharding import PartitionSpec as P
+
+    shard_map = compat.shard_map_fn()
+    run = shard_map(
+        lambda a, b: approx_qgemm(a, b, spec, fused=fused), mesh=mesh,
+        in_specs=(P(), P()), out_specs=P(), check_rep=False)
+    return run(a_q, b_q)
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,

@@ -3,14 +3,24 @@
 Kept as functions (never module-level constants) so importing this module
 never touches JAX device state — the dry-run must set XLA_FLAGS before any
 jax initialization.
+
+The serving/train CLIs accept a ``--mesh model=4,data=2`` override (or the
+``REPRO_MESH`` environment variable) instead of hardcoding the host mesh;
+`make_mesh_from_spec` resolves it (flag > env > host default) and
+validates the axis product against the visible devices.
 """
 
 from __future__ import annotations
+
+import os
 
 import jax
 from jax.sharding import Mesh
 
 from repro import compat
+from repro.core.target import parse_mesh_spec
+
+MESH_ENV_VAR = "REPRO_MESH"
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -29,3 +39,41 @@ def make_host_mesh(model: int | None = None) -> Mesh:
     model = model or (2 if n % 2 == 0 and n > 1 else 1)
     data = n // model
     return compat.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_from_axes(axes: tuple[tuple[str, int], ...]) -> Mesh:
+    """Concrete mesh from parsed (name, size) pairs; always carries a
+    "data" and a "model" axis (size-1 filled in) so sharding/rules.py
+    applies uniformly.  Unknown axis names raise — silently dropping one
+    would serve on a different mesh than the caller modeled."""
+    from repro.core.target import MESH_AXIS_NAMES
+    for name, _ in axes:
+        if name not in MESH_AXIS_NAMES:
+            raise ValueError(f"unknown mesh axis {name!r}; expected axes "
+                             f"from {MESH_AXIS_NAMES}")
+    d = dict(axes)
+    d.setdefault("data", 1)
+    d.setdefault("model", 1)
+    names = tuple(n for n in ("pod", "data", "model") if n in d)
+    sizes = tuple(d[n] for n in names)
+    need = 1
+    for s in sizes:
+        need *= s
+    have = len(jax.devices())
+    if need > have:
+        raise ValueError(
+            f"mesh {dict(zip(names, sizes))} needs {need} devices but only "
+            f"{have} visible (hint: XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need} on CPU)")
+    return compat.make_mesh(sizes, names)
+
+
+def make_mesh_from_spec(spec: str | None = None) -> Mesh:
+    """Mesh from a ``"model=4,data=2"`` spec string; precedence is the
+    explicit argument, then $REPRO_MESH, then the host-mesh default."""
+    spec = spec if spec not in (None, "") else os.environ.get(
+        MESH_ENV_VAR, "")
+    axes = parse_mesh_spec(spec)
+    if not axes:
+        return make_host_mesh()
+    return mesh_from_axes(axes)

@@ -36,6 +36,10 @@ def main(argv=None) -> int:
                     help="Pallas/XLA GEMM dispatch (kernels/dispatch.py); "
                          "'pallas' on CPU runs kernels in interpret mode")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", default="",
+                    help="device mesh spec, e.g. 'model=4,data=2' "
+                         "(default: $REPRO_MESH, then the host mesh); a "
+                         "multi-device 'model' axis serves tensor-parallel")
     ap.add_argument("--capacity", type=int, default=0,
                     help="decode-arena slots (default: --batch)")
     ap.add_argument("--temperature", type=float, default=0.0,
@@ -58,9 +62,11 @@ def main(argv=None) -> int:
         img = synthetic.img_batch(args.batch, cfg.n_img_tokens,
                                   cfg.d_model, 0, args.seed)
 
+    from repro.launch.mesh import make_mesh_from_spec
     max_len = args.prompt_len + args.gen
     eng = Engine(cfg, capacity=args.capacity or args.batch, max_len=max_len,
-                 prefill_buckets=(args.prompt_len,), seed=args.seed)
+                 prefill_buckets=(args.prompt_len,), seed=args.seed,
+                 mesh=make_mesh_from_spec(args.mesh))
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
                         max_new_tokens=args.gen)
     for i in range(args.batch):

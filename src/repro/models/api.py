@@ -49,7 +49,8 @@ def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
 
 
 def prepare_params(params: Params, cfg: ModelConfig,
-                   spec: gemm_mod.MultSpec | None = None) -> Params:
+                   spec: gemm_mod.MultSpec | None = None,
+                   mesh=None) -> Params:
     """Build the serving-time weight-plane cache over a param tree.
 
     Every leaf named in the family's PREPARED_GEMM_WEIGHTS allowlist (the
@@ -63,29 +64,42 @@ def prepare_params(params: Params, cfg: ModelConfig,
     `spec=None` resolves via `make_spec(cfg)`.  Identity for exact specs.
     Serving only — training re-quantizes live (weights change each step)
     and differentiation through prepared leaves raises.
+
+    `mesh` commits the result onto the device mesh under the tensor-
+    parallel rules of sharding/rules.py: each PreparedWeight's quantized
+    plane(s) land PER SHARD (a column-parallel weight's wq/sw/planes live
+    only where its output slice lives) instead of replicated on device 0
+    — the serving engine passes its mesh here.
     """
     if spec is None:
         spec = make_spec(cfg)
-    if spec is None or spec.is_exact:
-        return params
-    from repro.approx import quant
-    names = getattr(family_module(cfg), "PREPARED_GEMM_WEIGHTS", frozenset())
+    prepared = params
+    if spec is not None and not spec.is_exact:
+        from repro.approx import quant
+        names = getattr(family_module(cfg), "PREPARED_GEMM_WEIGHTS",
+                        frozenset())
 
-    def prep(path, leaf):
-        if gemm_mod.is_prepared(leaf):
-            return leaf  # idempotent: re-preparing a prepared tree is a no-op
-        if quant.leaf_name(path) not in names:
-            return leaf
-        if not hasattr(leaf, "ndim") or leaf.ndim < 2 or \
-                not jnp.issubdtype(leaf.dtype, jnp.floating):
-            return leaf
-        return gemm_mod.prepare_weight(leaf, spec)
+        def prep(path, leaf):
+            if gemm_mod.is_prepared(leaf):
+                return leaf  # idempotent: re-preparing is a no-op
+            if quant.leaf_name(path) not in names:
+                return leaf
+            if not hasattr(leaf, "ndim") or leaf.ndim < 2 or \
+                    not jnp.issubdtype(leaf.dtype, jnp.floating):
+                return leaf
+            return gemm_mod.prepare_weight(leaf, spec)
 
-    # is_leaf keeps tree_map from descending INTO PreparedWeight pytree
-    # nodes (whose w/sw fields would otherwise be re-wrapped under the
-    # enclosing leaf name)
-    return jax.tree_util.tree_map_with_path(prep, params,
-                                            is_leaf=gemm_mod.is_prepared)
+        # is_leaf keeps tree_map from descending INTO PreparedWeight
+        # pytree nodes (whose w/sw fields would otherwise be re-wrapped
+        # under the enclosing leaf name)
+        prepared = jax.tree_util.tree_map_with_path(
+            prep, params, is_leaf=gemm_mod.is_prepared)
+    if mesh is not None:
+        from repro.sharding import rules
+        shardings = rules.param_shardings(prepared, mesh,
+                                          fsdp=rules.should_fsdp(cfg))
+        prepared = jax.device_put(prepared, shardings)
+    return prepared
 
 
 def forward(params: Params, batch: dict, cfg: ModelConfig, spec=None

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.approx import layers as AL
 from repro.approx import gemm as gemm_mod
+from repro.sharding.ctx import hint
 
 MultSpec = gemm_mod.MultSpec
 Params = dict[str, Any]
@@ -75,7 +76,18 @@ def rope_freqs(hd: int, theta: float) -> jax.Array:
 
 
 def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
-    """x (..., s, h, hd), positions (..., s) -> same shape."""
+    """x (..., s, h, hd), positions (..., s) -> same shape.
+
+    The heads hint is load-bearing under tensor parallelism, not an
+    optimization: x arrives reshaped from a column-parallel projection
+    ((..., h*hd) sharded on "model"), and re-expressing that sharding on
+    the heads dim (the same device-local bytes when h divides the model
+    axis) keeps the rotate-half split/concat below OFF the sharded axis —
+    XLA's CPU SPMD partitioner miscompiles concatenate along a sharded
+    dim (observed on jax 0.4.37; tests/test_distributed.py pins parity).
+    """
+    if x.ndim == 4:
+        x = hint(x, "batch", None, "heads", None)
     hd = x.shape[-1]
     freqs = rope_freqs(hd, theta)                         # (hd/2,)
     ang = positions[..., None].astype(jnp.float32) * freqs  # (..., s, hd/2)
@@ -253,6 +265,12 @@ def rowwise_cache_update(cache: jax.Array, new: jax.Array,
     """Write `new` (b, 1, ...) into `cache` (b, smax, ...) at per-row
     positions `lengths` (b,) — each row of a decode batch may sit at a
     different sequence offset (continuous batching)."""
+    if new.ndim == 4:
+        # (b, 1, kv, hd) fresh KV arrives reshaped off a column-parallel
+        # projection; pin the sharding to the kv-heads dim (or replicated
+        # when it doesn't divide) BEFORE the scatter — same CPU-SPMD
+        # miscompile class as the rotate-half in apply_rope.
+        new = hint(new, "batch", None, "kv_heads", None)
     def upd(c, x, l):
         return jax.lax.dynamic_update_slice_in_dim(c, x, l, axis=0)
     return jax.vmap(upd)(cache, new.astype(cache.dtype), lengths)

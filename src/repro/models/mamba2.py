@@ -164,7 +164,11 @@ def block(hstate, lp, cfg: ModelConfig, spec, init_state=None,
     b, s, d = hstate.shape
     d_in, h, p, n, conv_ch = _dims(cfg)
     x = C.rmsnorm(hstate, lp["ln"])
-    z = AL.gemm(x, lp["in_proj"], spec)
+    # gather the column-parallel projection before slicing it up: the
+    # five sub-projections and the conv concat below cut across shard
+    # boundaries, which XLA's CPU SPMD partitioner miscompiles (same
+    # class as the rotate-half fix in common.apply_rope)
+    z = hint(AL.gemm(x, lp["in_proj"], spec), "batch", None, None)
     zg, xin, Bm, Cm, dt = _split_proj(z, cfg)
 
     conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
@@ -231,7 +235,8 @@ def decode_step(params: Params, cache: dict, tokens: jax.Array,
     def scan_block(hh, sp):
         lp, conv_st, ssm_st = sp
         x = C.rmsnorm(hh, lp["ln"])
-        z = AL.gemm(x, lp["in_proj"], spec)
+        # gathered before the sub-projection splits; see block()
+        z = hint(AL.gemm(x, lp["in_proj"], spec), "batch", None, None)
         zg, xin, Bm, Cm, dt = _split_proj(z, cfg)
         conv_in = jnp.concatenate([xin, Bm, Cm], -1)  # (b, 1, ch)
         window = jnp.concatenate([conv_st, conv_in], axis=1)  # (b, w, ch)

@@ -65,7 +65,12 @@ class Engine:
         once.  Default (max_len,) keeps the one-compile-per-phase
         guarantee; pass e.g. (32, 128, 512) to trade a few compiles for
         less padded prefill compute.
-      mesh: device mesh (host mesh by default).
+      mesh: device mesh (host mesh by default).  Weights, decode caches,
+        and sampler state commit onto it under the tensor-parallel rules
+        of sharding/rules.py, so a multi-device "model" axis serves
+        genuinely tensor-parallel.
+      target: `core.target.HardwareTarget` — builds the mesh from the
+        target's axes when `mesh` is None (one die == one TP shard).
       seed: engine RNG seed (params init + per-request sampling streams).
       on_token: streaming callback `f(request_id, token_id)`.
     """
@@ -73,12 +78,16 @@ class Engine:
     def __init__(self, cfg: ModelConfig, params: Any | None = None, *,
                  capacity: int = 4, max_len: int = 256,
                  prefill_buckets: tuple[int, ...] | None = None,
-                 mesh=None, seed: int = 0,
+                 mesh=None, target=None, seed: int = 0,
                  on_token: Callable[[str, int], None] | None = None):
         if mesh is None:
-            from repro.launch.mesh import make_host_mesh
-            mesh = make_host_mesh()
+            if target is not None:
+                mesh = target.make_mesh()
+            else:
+                from repro.launch.mesh import make_host_mesh
+                mesh = make_host_mesh()
         self.cfg, self.mesh, self.seed = cfg, mesh, seed
+        self.target = target
         self.capacity, self.max_len = capacity, max_len
         self.buckets = tuple(sorted(prefill_buckets or (max_len,)))
         self.on_token = on_token
@@ -90,8 +99,11 @@ class Engine:
         # GEMM weight once per (weight, spec) instead of on every decode
         # step.  `exec_params` feeds prefill AND decode; `self.params`
         # stays raw (bit-identical outputs either way — the cache is a
-        # recomputation saving, not an approximation).
-        self.exec_params = api.prepare_params(self.params, cfg, self._spec)
+        # recomputation saving, not an approximation).  The mesh argument
+        # commits every (prepared) weight under the TP rules: per-shard
+        # int8 planes, not a device-0 copy.
+        self.exec_params = api.prepare_params(self.params, cfg, self._spec,
+                                              mesh=self.mesh)
 
         self._arena = SlotArena(cfg, capacity, max_len)
         self._state = {
@@ -105,15 +117,20 @@ class Engine:
             self._state["img"] = jnp.zeros(
                 (capacity, cfg.n_img_tokens, cfg.d_model),
                 jnp.dtype(cfg.dtype))
-        # commit the state once, replicated on the mesh, so the first
-        # decode step sees the same shardings as every later one (a
-        # single compilation, not uncommitted-then-committed twins)
-        from jax.sharding import NamedSharding, PartitionSpec
-        self._state = jax.device_put(
-            self._state, NamedSharding(self.mesh, PartitionSpec()))
+        # commit the state once under the SAME rules the decode step's
+        # sharding hints request — caches shard their batch dim on "data"
+        # and their kv-head dim on "model" (rules.cache_shardings), the
+        # per-slot sampler state shards on "data" where it divides — and
+        # pin the decode step's output to that commitment, so every step
+        # sees identical shardings (a single compilation, and no
+        # replicated-KV fallback on a multi-device mesh).
+        self._state_sh = self._state_shardings()
+        self._state = jax.device_put(self._state, self._state_sh)
 
         self._prefill = ts.make_prefill_step(cfg, mesh, max_len=max_len)
-        self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
+        self._decode = jax.jit(
+            self._decode_impl, donate_argnums=(1,),
+            out_shardings=(self._state_sh, self._replicated()))
         self._first = jax.jit(sampling.sample_tokens)
 
         self._sched = Scheduler()
@@ -125,7 +142,27 @@ class Engine:
         self._admitted = 0
         self._prefill_s = 0.0
         self._decode_s = 0.0
+        self._queue_wait_ticks = 0.0
+        self._evictions = {"eos": 0, "length": 0}
         self.completions: list[Completion] = []
+
+    def _replicated(self):
+        from jax.sharding import NamedSharding, PartitionSpec
+        return NamedSharding(self.mesh, PartitionSpec())
+
+    def _state_shardings(self) -> dict:
+        """Rules-driven NamedShardings for the decode-arena state."""
+        from jax.sharding import NamedSharding
+        mesh = self.mesh
+        sh = {"cache": rules.cache_shardings(self._state["cache"], mesh)}
+        for key in ("tok", "temp", "topk"):
+            sh[key] = NamedSharding(mesh, rules.batch_pspec(
+                key, self._state[key].shape, mesh))
+        sh["rng"] = self._replicated()   # per-slot PRNG keys: tiny
+        if "img" in self._state:
+            sh["img"] = NamedSharding(mesh, rules.batch_pspec(
+                "img", self._state["img"].shape, mesh))
+        return sh
 
     # --- jitted decode + sample ------------------------------------------
 
@@ -229,6 +266,10 @@ class Engine:
             self._state["img"] = jax.lax.dynamic_update_slice_in_dim(
                 self._state["img"], extras["img_embeds"].astype(
                     self._state["img"].dtype), slot_id, axis=0)
+        # re-commit the canonical shardings after the out-of-jit updates
+        # (slot insert / .at scatters), so the decode step's jit cache
+        # always keys on one sharding layout
+        self._state = jax.device_put(self._state, self._state_sh)
 
         slot = _Slot(request, n, self._tick, ready_wall)
         slot.first_wall = time.perf_counter()
@@ -251,6 +292,9 @@ class Engine:
     def _evict(self, slot_id: int, reason: str) -> None:
         slot = self._slots[slot_id]
         now = time.perf_counter()
+        self._evictions[reason] = self._evictions.get(reason, 0) + 1
+        self._queue_wait_ticks += max(
+            0.0, slot.admitted_tick - slot.request.arrival)
         self.completions.append(Completion(
             request_id=slot.request.request_id,
             prompt_len=slot.prompt_len,
@@ -312,10 +356,20 @@ class Engine:
         return self.completions
 
     def stats(self) -> dict:
+        done = len(self.completions)
         out = {"ticks": self._tick, "decode_steps": self._decode_steps,
                "admitted": self._admitted,
-               "completed": len(self.completions),
-               "prefill_s": self._prefill_s, "decode_s": self._decode_s}
+               "completed": done,
+               "prefill_s": self._prefill_s, "decode_s": self._decode_s,
+               # admission-queue wait (arrival -> admitted, in ticks) and
+               # why slots were reclaimed — the signals a capacity planner
+               # needs (a rising queue wait means the arena is the
+               # bottleneck, not the model)
+               "queue_wait_ticks_total": self._queue_wait_ticks,
+               "queue_wait_ticks_mean":
+                   self._queue_wait_ticks / done if done else 0.0,
+               "evictions": dict(self._evictions),
+               "mesh": {ax: int(sz) for ax, sz in self.mesh.shape.items()}}
         for name, fn in (("prefill", self._prefill),
                          ("decode", self._decode)):
             if hasattr(fn, "_cache_size"):

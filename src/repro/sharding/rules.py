@@ -73,9 +73,16 @@ def _param_rules(fsdp_ax) -> dict[str, list]:
         "we_gate": ["model", fsdp_ax, None],
         "we_up": ["model", fsdp_ax, None],
         "we_down": ["model", None, fsdp_ax],
-        # mamba2
-        "in_proj": col, "out_proj": row,
-        "conv_w": [None, "model"], "conv_b": ["model"],
+        # mamba2.  Only the (bigger) input projection is TP-sharded:
+        # the depthwise conv taps are tiny vector-unit arrays whose
+        # channel-sharded output would be split/concatenated across shard
+        # boundaries, and a row-parallel out_proj feeds off the replicated
+        # SSD state math — both patterns XLA's CPU SPMD partitioner
+        # miscompiles on supported JAX versions (tests/test_distributed.py
+        # pins TP token parity for the ssm family).  out_proj keeps its
+        # ZeRO-3 weight sharding on the data axis: only the model-axis
+        # split is the hazard.
+        "in_proj": col, "out_proj": [None, fsdp_ax],
         # rg-lru
         "w_x": col, "w_gate_br": col, "w_rg": col, "w_in": col,
         "w_out": row,
@@ -92,17 +99,29 @@ def _moe_fallback(name: str, shape: tuple[int, ...], mesh: Mesh, fsdp_ax
     return None
 
 
+#: Serving-cache wrapper fields (approx/gemm.PreparedWeight dataclass
+#: attrs).  These appear in key paths as attribute keys, NOT dict keys, so
+#: skipping them never shadows a real param ("wq" is also an attention
+#: projection name — as a dict key it still resolves normally).  The
+#: wrapped leaves then inherit the underlying weight's partition rule:
+#: wq/w/planes carry the (..., k, n) core dims, sw is (..., 1, n).
+_PREPARED_ATTRS = frozenset({"w", "wq", "sw", "planes"})
+
+
 def param_pspec(path: tuple, arr_shape: tuple[int, ...], mesh: Mesh,
                 fsdp: bool = True) -> P:
     fsdp_ax = "data" if fsdp else None
     name = None
     for part in reversed(path):
+        is_attr = not hasattr(part, "key") and hasattr(part, "name")
         key = getattr(part, "key", None) or getattr(part, "name", None) or \
             (part if isinstance(part, str) else None)
-        if key is not None and str(key) not in ("q", "s"):
-            # skip int8-weight wrapper levels ({"q","s"} dict leaves)
-            name = str(key)
-            break
+        if key is None or str(key) in ("q", "s"):
+            continue  # int8-weight wrapper levels ({"q","s"} dict leaves)
+        if is_attr and str(key) in _PREPARED_ATTRS:
+            continue  # PreparedWeight fields: use the enclosing leaf name
+        name = str(key)
+        break
     rules = _param_rules(fsdp_ax)
     if name not in rules:
         return P()  # norms, scalars, biases, gates: replicated
@@ -152,9 +171,12 @@ _CACHE_BATCH_DIM = {
     "rec_conv": 2, "rec_lru": 2, "att_k": 1, "att_v": 1,
     "tail_conv": 1, "tail_lru": 1,
 }
-# additionally shard kv-heads/head dims on "model" where they exist
+# additionally shard kv-heads/head dims on "model" where they exist.
+# (The mamba2 "ssm" state is deliberately absent: the SSD recurrence runs
+# replicated — see the in_proj-only TP rule above — so sharding its state
+# would only buy a reshard per decode step.)
 _CACHE_MODEL_DIM = {"k": -2, "v": -2, "xk": -2, "xv": -2,
-                    "att_k": -2, "att_v": -2, "ssm": 2}
+                    "att_k": -2, "att_v": -2}
 
 
 def cache_pspec(key: str, shape: tuple[int, ...], mesh: Mesh) -> P:

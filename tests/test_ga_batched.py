@@ -64,25 +64,32 @@ def test_batched_area_matches_reference():
 
 
 def test_population_fitness_matches_sequential_evaluate():
-    """Every genome of a random population scores identically (to f32)
-    under the batched evaluator and the sequential reference."""
+    """Every genome of a random population — including multi-die splits
+    and infeasible (uneven) ones — scores identically (to f32) under the
+    batched evaluator and the sequential reference."""
     mults = _fast_mults()
     space = gb.build_space("vgg16", 7, 30.0, 2.0, mults=mults)
     rng = np.random.default_rng(0)
     pop = np.stack([rng.integers(0, n, 64) for n in space.gene_sizes],
                    axis=1).astype(np.int32)
     allowed = np.flatnonzero(space.mult_allowed)
-    pop[:, -1] = allowed[pop[:, -1] % len(allowed)]
+    pop[:, gb.MULT_GENE] = allowed[pop[:, gb.MULT_GENE] % len(allowed)]
     met = gb.evaluate_population(jnp.asarray(pop), space.tables(), 7)
     gcfg = ga.GAConfig()
+    n_multi = 0
     for row, fit, fps, carbon in zip(pop, np.asarray(met["fitness"]),
                                      np.asarray(met["fps"]),
                                      np.asarray(met["carbon_g"])):
         e = ga.evaluate(space.decode(row), "vgg16", 7, list(space.mults),
                         30.0, gcfg)
+        n_multi += e.n_dies > 1
         assert fps == pytest.approx(e.fps, rel=1e-5)
         assert carbon == pytest.approx(e.carbon_g, rel=1e-5)
-        assert fit == pytest.approx(e.fitness, rel=1e-5)
+        if np.isinf(e.fitness):
+            assert np.isinf(fit)
+        else:
+            assert fit == pytest.approx(e.fitness, rel=1e-5)
+    assert n_multi > 0  # the random population exercised the die gene
 
 
 # --- GA parity ---------------------------------------------------------------
@@ -98,6 +105,7 @@ def test_ga_parity_with_numpy_reference(workload):
     rn = ga.run_ga(workload, 7, 30.0, 2.0, mults=mults,
                    cfg=ga.GAConfig(pop_size=32, generations=16, seed=0))
     assert rb.best.config == rn.best.config
+    assert rb.best.n_dies == rn.best.n_dies
     assert rb.best.cdp == pytest.approx(rn.best.cdp, rel=1e-6)
     # exhaustive ground truth: nothing in the space beats the GA designs
     g_ex, met_ex = gb.exhaustive_best(rb.space)
@@ -129,7 +137,8 @@ def test_masking_never_admits_infeasible_genomes(seed):
     pop = res.population
     for g, n in zip(pop.T, space.gene_sizes):
         assert (g >= 0).all() and (g < n).all()
-    assert space.mult_allowed[pop[:, -1]].all()
+    assert space.mult_allowed[pop[:, gb.MULT_GENE]].all()
+    assert space.die_ok[pop[:, 0], pop[:, 1], pop[:, gb.DIE_GENE]].all()
     assert res.metrics["feasible"].all()
     drop = ga.proxy_accuracy_drop(space.mults[res.best_genome.mult_idx])
     assert drop <= max_drop
@@ -147,14 +156,18 @@ def test_masking_repairs_seeded_infeasible_population(seed):
     rng = np.random.default_rng(seed)
     pop = np.stack([rng.integers(0, n, 64) for n in space.gene_sizes],
                    axis=1).astype(np.int32)
-    pop[:, -1] = bad_idx
+    pop[:, gb.MULT_GENE] = bad_idx
     met = gb.evaluate_population(jnp.asarray(pop), space.tables(), 7)
     assert np.isinf(np.asarray(met["fitness"])).all()
     # elitism=2: even the verbatim-surviving elites must be repaired
     new_pop, _, _ = gb._ga_step(
         jax.random.PRNGKey(seed), jnp.asarray(pop), space.tables(), 7,
         space.gene_sizes, 3, 2, 0.7, 0.25, 50.0)
-    assert space.mult_allowed[np.asarray(new_pop)[:, -1]].all()
+    new_pop = np.asarray(new_pop)
+    assert space.mult_allowed[new_pop[:, gb.MULT_GENE]].all()
+    # and no uneven die split survives the step either
+    assert space.die_ok[new_pop[:, 0], new_pop[:, 1],
+                        new_pop[:, gb.DIE_GENE]].all()
 
 
 def test_prebuilt_space_must_match_problem():

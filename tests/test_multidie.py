@@ -1,0 +1,221 @@
+"""Multi-die hardware target: packaging carbon, per-die yield, the
+dataflow model's die partition (per-die DRAM channel + D2D all-gather),
+the GA's die gene, scenario reporting, and the HardwareTarget bridge
+between the co-design and serving layers."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import accelerator as acc
+from repro.core import carbon as cb
+from repro.core import codesign
+from repro.core import dataflow as df
+from repro.core import ga
+from repro.core import ga_batched as gb
+from repro.core import multipliers as mm
+from repro.core import target as tg
+
+
+def _fast_mults():
+    return [mm.exact_multiplier(), mm.truncated(1, 1), mm.truncated(2, 2),
+            mm.truncated(3, 3)]
+
+
+# --- carbon ------------------------------------------------------------------
+
+def test_monolithic_collapse():
+    """n_dies=1 is exactly the monolithic model: no packaging, same total."""
+    mdc = cb.multi_die_carbon(35.0, 1, 7)
+    mono = cb.embodied_carbon(35.0, 7)
+    assert mdc.packaging_g == 0.0
+    assert mdc.total_g == pytest.approx(mono.total_g, rel=1e-12)
+    assert cb.packaging_carbon(35.0, 1) == 0.0
+
+
+def test_yield_favors_small_dies_at_large_area():
+    """The paper's chiplet lever: at defect-limited area, 4 small dies
+    (plus packaging) beat one 4x die; at tiny area packaging dominates
+    and the monolithic die wins."""
+    big = cb.embodied_carbon(200.0, 7)
+    split = cb.multi_die_carbon(50.0, 4, 7)
+    assert split.die_yield > big.yield_
+    assert split.total_g < big.total_g
+    small = cb.embodied_carbon(2.0, 7)
+    small_split = cb.multi_die_carbon(0.5, 4, 7)
+    assert small_split.total_g > small.total_g
+
+
+def test_multi_die_carbon_arr_matches_scalar():
+    areas = np.geomspace(0.5, 120.0, 12)
+    for n in (1, 2, 4):
+        ref = [cb.multi_die_carbon(a, n, 7).total_g for a in areas]
+        got = np.asarray(cb.multi_die_carbon_g_arr(
+            jnp.asarray(areas, jnp.float32), jnp.float32(n), 7))
+        np.testing.assert_allclose(got, ref, rtol=1e-5)
+
+
+# --- dataflow ----------------------------------------------------------------
+
+def test_dataflow_n_dies_1_unchanged():
+    cfg = acc.nvdla_default(512, 7)
+    assert df.workload_perf("vgg16", cfg, 1).fps == \
+        df.workload_perf("vgg16", cfg).fps
+
+
+def test_multi_die_lifts_memory_bound_fps():
+    """Per-die DRAM channels: a bandwidth-bound workload speeds up with
+    dies, sublinearly (replicated ifmap + D2D all-gather)."""
+    cfg = acc.AcceleratorConfig(32, 64, 32, 512, "exact", 7)
+    f1 = df.workload_perf("vgg16", cfg, 1).fps
+    f2 = df.workload_perf("vgg16", cfg, 2).fps
+    f4 = df.workload_perf("vgg16", cfg, 4).fps
+    assert f1 < f2 < f4
+    assert f4 < 4.0 * f1      # D2D + replicated-ifmap tax
+
+    p4 = df.workload_perf("vgg16", cfg, 4)
+    assert any(l.d2d_cycles > 0 for l in p4.layers)
+    assert all(l.hop_cycles == df.D2D_HOP_CYCLES for l in p4.layers)
+
+
+def test_batched_fps_die_axis_matches_scalar():
+    rows, cols, glbs, dies, ref = [], [], [], [], []
+    for pes in (256, 2048):
+        for aspect in ga.ASPECTS:
+            r, c = ga._pe_split(pes, aspect)
+            for d in ga.DIE_CHOICES:
+                cfg = acc.AcceleratorConfig(r, c, 32, 128, "exact", 7)
+                rows.append(r), cols.append(c), glbs.append(128)
+                dies.append(d)
+                ref.append(df.workload_perf("resnet50", cfg, d).fps)
+    got = np.asarray(df.batched_fps(
+        "resnet50", np.array(rows), np.array(cols), np.array(glbs), 7,
+        dies=np.array(dies)))
+    np.testing.assert_allclose(got, np.array(ref), rtol=1e-4)
+
+
+# --- GA die gene -------------------------------------------------------------
+
+def test_die_feasibility():
+    assert ga.die_feasible(32, 512, 1)
+    assert ga.die_feasible(32, 512, 4)       # 128 PEs/die, cols split 8
+    assert not ga.die_feasible(2, 64, 4)     # cols 2 cannot split 4 ways
+    assert not ga.die_feasible(8, 64, 2)     # 32 PEs/die < smallest array
+
+
+def test_genome_to_target_roundtrip():
+    mults = _fast_mults()
+    g = ga.Genome(3, 0, 0, 2, 0, 2)          # 512 PEs, 4 dies
+    t = g.to_target(mults, 7)
+    assert t.n_dies == 4
+    assert t.die.num_pes == 128
+    assert t.total_pes == 512
+    assert t.tp_degree == 4
+    assert dict(t.mesh_axes)["model"] == 4
+    assert t.carbon().packaging_g > 0
+    # uneven split raises
+    with pytest.raises(ValueError):
+        ga.Genome(0, 2, 0, 0, 0, 2).to_target(mults, 7)  # tall 64: cols 4
+
+
+def test_target_mesh_spec_parsing():
+    axes = tg.parse_mesh_spec("model=4,data=2")
+    assert dict(axes) == {"model": 4, "data": 2}
+    assert tg.parse_mesh_spec("") == ()
+    with pytest.raises(ValueError):
+        tg.parse_mesh_spec("modle=4")
+    with pytest.raises(ValueError):
+        tg.parse_mesh_spec("model=4,model=2")
+    with pytest.raises(ValueError):
+        tg.parse_mesh_spec("model=0")
+    # mesh model axis must equal die count
+    with pytest.raises(ValueError):
+        tg.HardwareTarget(die=acc.nvdla_default(64, 7), n_dies=2,
+                          mesh_axes=(("model", 4),))
+    # a typo'd axis name cannot silently drop to a monolithic mesh
+    with pytest.raises(ValueError, match="unknown mesh axis"):
+        tg.HardwareTarget(die=acc.nvdla_default(64, 7), n_dies=2,
+                          mesh_axes=(("modell", 2),))
+    # nor can a missing model axis stand in for n_dies > 1
+    with pytest.raises(ValueError, match="model axis"):
+        tg.HardwareTarget(die=acc.nvdla_default(64, 7), n_dies=2,
+                          mesh_axes=(("data", 2),))
+    from repro.launch import mesh as meshmod
+    with pytest.raises(ValueError, match="unknown mesh axis"):
+        meshmod.mesh_from_axes((("modell", 1),))
+
+
+def test_calibrate_serving_rejects_target_plus_mesh_spec():
+    from repro.core import calibrate as cal
+    t = tg.HardwareTarget.monolithic(acc.nvdla_default(64, 7))
+    with pytest.raises(ValueError, match="not both"):
+        cal.calibrate_serving(target=t, mesh_spec="model=1")
+
+
+def test_ga_picks_multi_die_when_floor_unreachable_monolithically():
+    """vgg16 @ 7nm with a 120-FPS floor: one DRAM channel saturates below
+    the floor, so the GA must fire the die gene — and the winner must
+    beat the best monolithic design on constrained CDP (the acceptance
+    scenario recorded by bench_codesign)."""
+    mults = _fast_mults()
+    res = gb.run_ga_batched(
+        "vgg16", 7, 120.0, 2.0, mults=mults,
+        cfg=gb.BatchedGAConfig(pop_size=1024, generations=8, seed=0))
+    assert res.best.n_dies > 1
+    assert res.best.fps >= 120.0
+    assert res.best.packaging_g > 0
+    assert 0 < res.best.die_yield <= 1.0
+    mono_genome, mono_met = gb.exhaustive_best(res.space, max_dies=1)
+    assert mono_genome.n_dies == 1
+    assert res.best.fitness < float(mono_met["fitness"])
+
+
+def test_numpy_ga_supports_die_gene():
+    mults = _fast_mults()
+    rn = ga.run_ga("vgg16", 7, 120.0, 2.0, mults=mults,
+                   cfg=ga.GAConfig(pop_size=32, generations=16, seed=0))
+    assert rn.best.n_dies > 1
+    assert np.isfinite(rn.best.fitness)
+
+
+def test_scenario_records_multi_die_fields():
+    scen = codesign.multi_die_scenarios()[:1]
+    res = codesign.run_scenarios(
+        scen, mults=_fast_mults(),
+        cfg=gb.BatchedGAConfig(pop_size=512, generations=5, seed=0))
+    d = res[0].to_dict()
+    best, mono = d["best"], d["best_monolithic"]
+    for rec in (best, mono):
+        assert {"n_dies", "die_area_mm2", "die_yield", "packaging_g",
+                "cdp_constrained"} <= set(rec)
+    assert best["n_dies"] > 1
+    assert mono["n_dies"] == 1
+    assert best["cdp_constrained"] < mono["cdp_constrained"]
+    assert best["die_area_mm2"] * best["n_dies"] == \
+        pytest.approx(best["area_mm2"], rel=1e-6)
+
+
+def test_exhaustive_best_max_dies_restriction():
+    space = gb.build_space("vgg16", 7, 120.0, 2.0, mults=_fast_mults())
+    g_all, met_all = gb.exhaustive_best(space)
+    g_mono, met_mono = gb.exhaustive_best(space, max_dies=1)
+    assert g_mono.n_dies == 1
+    assert float(met_all["fitness"]) <= float(met_mono["fitness"])
+
+
+# --- calibration bridge ------------------------------------------------------
+
+def test_calibrate_serving_analytical_mirror_scales_with_dies():
+    """The analytical side of the TP serving anchor runs the multi-die
+    dataflow model (per-die K split): more dies -> faster predicted
+    decode on the bandwidth-bound anchor."""
+    layers = []
+    from repro.core import workloads as wl
+    for i in range(2):
+        layers += wl.decode_block_gemms(f"l{i}", 256, 1024, 8, 4, 32)
+    anchor = acc.nvdla_default(2048, 7)
+    f1 = df.layers_perf(layers, anchor, 1).fps
+    f4 = df.layers_perf(layers, anchor, 4).fps
+    assert f4 > f1
