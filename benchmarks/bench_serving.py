@@ -77,6 +77,11 @@ def main(argv=None) -> int:
     ap.add_argument("--out", default="BENCH_serving.json")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny trace on the reduced config (CI)")
+    ap.add_argument("--sanitize-retrace", action="store_true",
+                    help="watch the engine's jitted phases under the "
+                         "repro.analysis compile budgets (decode compiles "
+                         "once, prefill once per bucket) and fail the "
+                         "bench on any violation")
     args = ap.parse_args(argv)
 
     if args.smoke:
@@ -97,6 +102,12 @@ def main(argv=None) -> int:
     from repro.launch.mesh import make_mesh_from_spec
     eng = Engine(cfg, capacity=args.capacity, max_len=args.max_len,
                  seed=args.seed, mesh=make_mesh_from_spec(args.mesh))
+    sanitizer = None
+    if args.sanitize_retrace:
+        # budgets count from here, so the warmup compiles are the ONLY
+        # compiles allowed: decode exactly once, prefill once per bucket
+        from repro.analysis.retrace import instrument_engine
+        sanitizer = instrument_engine(eng)
     # warm the jitted prefill/insert/decode once so the trace's latency
     # percentiles measure steady-state serving, not compile time
     eng.submit(Request("_warmup", [1] * args.prompt_min,
@@ -158,6 +169,14 @@ def main(argv=None) -> int:
         },
         "engine": stats,
     }
+    retrace_findings = []
+    if sanitizer is not None:
+        retrace_findings = sanitizer.findings()
+        report["retrace"] = {
+            "ok": not retrace_findings,
+            "findings": [f.render() for f in retrace_findings],
+            "watches": sanitizer.report(),
+        }
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
     m = report["metrics"]
@@ -170,6 +189,15 @@ def main(argv=None) -> int:
           f"p95 {m['latency_p95_s'] * 1e3:.0f}ms, "
           f"ttft p50 {m['ttft_p50_s'] * 1e3:.0f}ms "
           f"p95 {m['ttft_p95_s'] * 1e3:.0f}ms -> {args.out}")
+    if sanitizer is not None:
+        compiles = {n: w["compiles"]
+                    for n, w in sanitizer.report().items()}
+        print(f"[bench_serving] retrace sanitizer: "
+              f"{'OK' if not retrace_findings else 'FAIL'} {compiles}")
+        for f_ in retrace_findings:
+            print(f"[bench_serving]   {f_.render()}")
+        if retrace_findings:
+            return 1
     return 0
 
 

@@ -1,0 +1,154 @@
+"""Schema/invariant checks for the BENCH_*.json bench reports.
+
+One place for the assertions that used to live as three copies of
+inline ``python - <<EOF`` heredocs in .github/workflows/ci.yml — now
+shared by CI, `tests/test_analysis.py` (which validates the checked-in
+reports), and anyone running a bench locally:
+
+    python benchmarks/check_schema.py BENCH_serving.json
+    python benchmarks/check_schema.py BENCH_serving.json \
+        --expect-mesh data=4,model=2
+    python benchmarks/check_schema.py BENCH_gemm.json BENCH_codesign.json
+
+The report kind is read from the file's "bench" field.  Each check
+raises AssertionError with the offending fragment; the CLI exits 1.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def check_serving(r: dict, expect_mesh: dict | None = None) -> None:
+    assert r["bench"] == "serving", r.get("bench")
+    assert r["engine"]["completed"] == r["trace"]["requests"], r
+    # per-request TTFT percentiles + queue-wait/eviction accounting
+    m = r["metrics"]
+    assert {"ttft_p50_s", "ttft_p95_s", "ttft_mean_s",
+            "latency_p50_s", "latency_p95_s"} <= set(m), m
+    assert 0 < m["ttft_p50_s"] <= m["ttft_p95_s"], m
+    e = r["engine"]
+    assert {"queue_wait_ticks_total", "queue_wait_ticks_mean",
+            "evictions", "mesh"} <= set(e), e
+    assert sum(e["evictions"].values()) == e["completed"], e
+    assert r["mesh"] == e["mesh"], r["mesh"]
+    if expect_mesh is not None:
+        assert r["mesh"] == expect_mesh, (r["mesh"], expect_mesh)
+    if "retrace" in r:  # bench ran with --sanitize-retrace
+        assert r["retrace"]["ok"] is True, r["retrace"]["findings"]
+        w = r["retrace"]["watches"]
+        assert w["serving/engine:decode"]["compiles"] == 1, w
+
+
+def check_gemm(r: dict) -> None:
+    assert r["bench"] == "gemm" and r["modes"], r
+    for m in r["modes"]:
+        assert {"name", "mode", "rank", "planes", "us",
+                "est_hbm_bytes", "hbm_reduction",
+                "fused_vs_stacked_speedup"} <= set(m), m
+        assert {"fused", "stacked", "xla"} <= set(m["us"]), m
+    # the load-bearing fused-beats-stacked check is structural:
+    # the fused jaxpr must not materialize operand stacks at all
+    s = r["structural"]
+    assert s["fused_builds_stacks"] is False, s
+    assert s["stacked_builds_stacks"] is True, s
+    # weight-cache timings ride in the artifact for the perf trajectory
+    # (too noisy on CI runners to gate on a threshold); schema only:
+    assert {"mult", "rank", "us_fresh", "us_prepared",
+            "hit_speedup"} <= set(r["weight_cache"]), r
+
+
+def check_codesign(r: dict) -> None:
+    assert r["bench"] == "codesign", r.get("bench")
+    # parity: the batched engine and the numpy reference twin must
+    # select the SAME best-CDP design (deterministic at fixed seed)
+    assert len(r["parity"]) >= 2, r["parity"]
+    for p in r["parity"]:
+        assert {"workload", "match", "batched", "numpy"} <= set(p), p
+        assert p["match"] is True, p
+    # population-eval timing: both engines' numbers recorded; the
+    # batched engine must win (the >=10x figure is recorded for the
+    # perf trajectory; CI gates only on a noise-safe floor)
+    pe = r["population_eval"]
+    assert {"pop_size", "numpy_s", "batched_s", "speedup",
+            "max_rel_fitness_err"} <= set(pe), pe
+    assert pe["pop_size"] >= 4096 and pe["speedup"] > 1.0, pe
+    assert pe["max_rel_fitness_err"] < 1e-4, pe
+    assert {"wall_s", "best_cdp", "history"} <= set(r["ga"]), r["ga"]
+    # calibration: measured + analytical throughput and the scale
+    c = r["calibration"]
+    assert {"measured", "analytical", "scale", "source",
+            "unit"} <= set(c), c
+    assert c["measured"] > 0 and c["scale"] > 0, c
+    # scenario sweep covers >1 node and >1 fab carbon intensity
+    assert len(r["scenarios"]) >= 4, len(r["scenarios"])
+    for s in r["scenarios"]:
+        assert {"scenario", "best", "best_monolithic",
+                "exact_baseline", "ga_reduction",
+                "cdp_calibrated", "wall_s"} <= set(s), s
+        assert s["best"]["carbon_g"] > 0 and s["best"]["fps"] > 0, s
+        # multi-die reporting: per-die yield + packaging recorded
+        assert {"n_dies", "die_area_mm2", "die_yield",
+                "packaging_g", "cdp_constrained"} <= set(s["best"]), s
+    nodes = {s["scenario"]["node_nm"] for s in r["scenarios"]}
+    cis = {s["scenario"]["ci_fab_g_per_kwh"] for s in r["scenarios"]}
+    assert len(nodes) >= 2 and len(cis) >= 2, (nodes, cis)
+    # multi-die co-design is live: at least one scenario where the
+    # GA selects >1 die AND beats the best monolithic design on the
+    # constrained-CDP fitness, with yield/packaging recorded
+    assert len(r["multi_die_wins"]) >= 1, r["multi_die_wins"]
+    for w in r["multi_die_wins"]:
+        assert w["n_dies"] > 1 and 0 < w["die_yield"] <= 1, w
+        assert w["packaging_g"] > 0, w
+        assert w["cdp_constrained"] < w["mono_cdp_constrained"], w
+
+
+CHECKS = {"serving": check_serving, "gemm": check_gemm,
+          "codesign": check_codesign}
+
+
+def check_report(r: dict, expect_mesh: dict | None = None) -> str:
+    """Dispatch on the report's "bench" field; returns the kind."""
+    kind = r.get("bench")
+    if kind not in CHECKS:
+        raise AssertionError(
+            f"unknown bench report kind {kind!r}; known: {list(CHECKS)}")
+    if kind == "serving":
+        check_serving(r, expect_mesh)
+    else:
+        CHECKS[kind](r)
+    return kind
+
+
+def _parse_mesh(spec: str) -> dict:
+    out = {}
+    for part in spec.split(","):
+        k, _, v = part.partition("=")
+        out[k.strip()] = int(v)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("reports", nargs="+", help="BENCH_*.json files")
+    ap.add_argument("--expect-mesh", default=None,
+                    help="required engine mesh for serving reports, "
+                         "e.g. data=4,model=2")
+    args = ap.parse_args(argv)
+    mesh = _parse_mesh(args.expect_mesh) if args.expect_mesh else None
+    for path in args.reports:
+        with open(path) as f:
+            r = json.load(f)
+        try:
+            kind = check_report(r, mesh)
+        except AssertionError as e:
+            print(f"[check_schema] {path}: FAIL\n{e}", file=sys.stderr)
+            return 1
+        print(f"[check_schema] {path}: {kind} OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,22 @@
+"""JAX-aware static analysis & sanitizers for the repro codebase.
+
+Four checkers behind one CLI (`python -m repro.analysis`):
+
+* ``jit`` (lint.py) — AST lint for jit hazards: host syncs, Python
+  control flow on traced values, numpy on tracers, mutable static-arg
+  defaults;
+* ``retrace`` (retrace.py) — runtime compile-budget sanitizer over the
+  serving engine, the batched GA, and the Pallas kernels;
+* ``sharding`` (coverage.py) — every family's param/cache/batch pytree
+  leaf must match a sharding rule or an explicit exemption;
+* ``pallas`` (contracts.py) — declared VMEM models, grid divisibility,
+  dispatch-budget consistency, and K-tail masking checked against the
+  kernels' actual BlockSpecs.
+
+See docs/ANALYSIS.md for finding codes and suppression formats.
+"""
+
+from repro.analysis.findings import (  # noqa: F401
+    CODES, Baseline, Finding, apply_suppressions, inline_allowed)
+from repro.analysis.retrace import (  # noqa: F401
+    RetraceSanitizer, instrument_engine)

@@ -1,0 +1,311 @@
+"""PC: Pallas kernel contract checker.
+
+`kernels/dispatch.py` admits a GEMM to the fused Pallas path when
+`fused_vmem_bytes(bm, bk, bn, planes) <= vmem_budget_bytes()` — a
+hand-maintained analytical model of the kernel's VMEM working set.  If
+someone edits a BlockSpec or adds a kernel operand without updating the
+model, dispatch happily schedules kernels that bust VMEM on real TPUs
+(or conservatively rejects ones that fit).  This checker recomputes the
+working set from the kernels' *actual* BlockSpecs — captured by
+intercepting `pl.pallas_call` while the wrappers trace — and
+cross-checks the declared model, plus the grid and K-tail contracts:
+
+  PC401  declared VMEM bytes drifted from the BlockSpec-derived working
+         set by more than the scalar-operand tolerance;
+  PC402  a captured grid/block pair does not tile its operands;
+  PC403  a shape dispatch admits under the budget whose recomputed
+         working set busts it;
+  PC404  the fused kernel with K padding is not bit-identical to the
+         unpadded XLA reference (the k_valid tail mask regressed).
+
+VMEM accounting model (matches `fused_vmem_bytes`'s conventions):
+pipelined inputs/outputs are double-buffered (x2), scratch is
+single-buffered.  Tiny scalar operands the declared model ignores (the
+(P, 1) plane-scale vector: 8*P bytes) are covered by `TOLERANCE_BYTES`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.analysis.findings import Finding
+
+#: slack for deliberately-unmodeled scalar operands (plane scales).
+TOLERANCE_BYTES = 1024
+
+#: (m, k, n, rank) shapes the dispatch-consistency sweep (PC403) probes:
+#: the default blocks, the rank-8 case the fused budget newly admits, and
+#: K-tail / minimum-tile edges.
+PROBE_SHAPES = (
+    (256, 512, 256, 0),
+    (256, 512, 256, 2),
+    (256, 512, 256, 8),
+    (512, 2048, 512, 4),
+    (128, 128, 128, 1),
+    (1024, 4096, 1024, 8),
+)
+
+
+@dataclasses.dataclass
+class PallasCapture:
+    """One intercepted `pl.pallas_call` invocation."""
+    kernel_name: str
+    grid: tuple[int, ...]
+    in_blocks: list[tuple[tuple[int, ...], int]]    # (block_shape, itemsize)
+    out_blocks: list[tuple[tuple[int, ...], int]]
+    scratch_bytes: int
+    operand_shapes: list[tuple[int, ...]]
+
+    def vmem_bytes(self) -> int:
+        """BlockSpec-derived working set: 2x pipelined ins/outs + scratch."""
+        total = 0
+        for shape, itemsize in self.in_blocks + self.out_blocks:
+            numel = 1
+            for d in shape:
+                numel *= d
+            total += 2 * numel * itemsize
+        return total + self.scratch_bytes
+
+
+def _block_entry(spec, operand) -> tuple[tuple[int, ...], int]:
+    shape = tuple(spec.block_shape) if spec.block_shape is not None \
+        else tuple(operand.shape)
+    return shape, operand.dtype.itemsize
+
+
+def _scratch_nbytes(scratch_shapes) -> int:
+    import numpy as np
+    total = 0
+    for s in scratch_shapes or ():
+        numel = 1
+        for d in s.shape:
+            numel *= d
+        total += numel * np.dtype(s.dtype).itemsize
+    return total
+
+
+class _Interceptor:
+    """Swaps `pl.pallas_call` for a recorder inside the kernel modules.
+
+    The stub returns zeros of `out_shape`, so the wrappers run eagerly
+    end to end (padding, reshapes, slicing) without compiling anything —
+    the capture sees exactly the specs a real trace would emit."""
+
+    def __init__(self):
+        self.captures: list[PallasCapture] = []
+        self._saved: list[tuple[Any, Any]] = []
+
+    def _fake_pallas_call(self, kernel, *, grid=None, in_specs=None,
+                          out_specs=None, out_shape=None,
+                          scratch_shapes=None, **kw):
+        import jax.numpy as jnp
+
+        name = getattr(kernel, "func", kernel)
+        name = getattr(name, "__name__", str(name))
+
+        def runner(*operands):
+            cap = PallasCapture(
+                kernel_name=name,
+                grid=tuple(int(g) for g in (grid or ())),
+                in_blocks=[_block_entry(s, o)
+                           for s, o in zip(in_specs or [], operands)],
+                out_blocks=[],
+                scratch_bytes=_scratch_nbytes(scratch_shapes),
+                operand_shapes=[tuple(o.shape) for o in operands])
+            outs = out_shape if isinstance(out_shape, (list, tuple)) \
+                else [out_shape]
+            specs = out_specs if isinstance(out_specs, (list, tuple)) \
+                else [out_specs]
+            for s, o in zip(specs, outs):
+                cap.out_blocks.append(_block_entry(s, o))
+            self.captures.append(cap)
+            zeros = [jnp.zeros(o.shape, o.dtype) for o in outs]
+            return zeros if isinstance(out_shape, (list, tuple)) \
+                else zeros[0]
+
+        return runner
+
+    def __enter__(self):
+        from repro.kernels import approx_qgemm as qk
+        from repro.kernels import quantize as qz
+        for mod in (qk, qz):
+            self._saved.append((mod.pl, mod.pl.pallas_call))
+        # both modules import the same `pallas` module object; patch once
+        # per distinct object
+        for plmod, _orig in {id(p): (p, o)
+                             for p, o in self._saved}.values():
+            plmod.pallas_call = self._fake_pallas_call
+        return self
+
+    def __exit__(self, *exc):
+        for plmod, orig in self._saved:
+            plmod.pallas_call = orig
+        return False
+
+
+def _unjitted(fn):
+    return getattr(fn, "__wrapped__", fn)
+
+
+def _capture_fused(m: int, k: int, n: int, rank: int
+                   ) -> tuple[PallasCapture, tuple[int, int, int]]:
+    """Trace the fused (or plane0) wrapper at (m, k, n, rank) under the
+    interceptor and return its capture + chosen blocks."""
+    import jax.numpy as jnp
+    from repro.kernels import approx_qgemm as qk
+
+    bm, bk, bn = qk.choose_blocks(m, k, n)
+    a = jnp.zeros((m, k), jnp.int8)
+    b = jnp.zeros((k, n), jnp.int8)
+    with _Interceptor() as icept:
+        if rank:
+            fu = jnp.zeros((rank, 256), jnp.int8)
+            scales = jnp.zeros((rank + 1, 1), jnp.float32)
+            _unjitted(qk.approx_qgemm_fused)(
+                a, b, fu, fu, scales, trunc_a=0, trunc_b=0, k_valid=k,
+                bm=bm, bk=bk, bn=bn, interpret=True)
+        else:
+            _unjitted(qk.approx_qgemm_plane0)(
+                a, b, trunc_a=0, trunc_b=0, bm=bm, bk=bk, bn=bn,
+                interpret=True)
+    assert len(icept.captures) == 1, [c.kernel_name for c in icept.captures]
+    return icept.captures[0], (bm, bk, bn)
+
+
+def _loc(kernel: str) -> str:
+    mod = "quantize" if kernel.startswith("_kernel") else "approx_qgemm"
+    return f"kernels/{mod}:{kernel}"
+
+
+def _check_grid(cap: PallasCapture) -> list[Finding]:
+    out = []
+    for (block, _), oshape in zip(cap.in_blocks + cap.out_blocks,
+                                  cap.operand_shapes +
+                                  [None] * len(cap.out_blocks)):
+        ref = oshape
+        if ref is None:
+            continue  # outputs tile by construction of out_shape
+        if len(block) != len(ref) or any(s % b for s, b in zip(ref, block)):
+            out.append(Finding(
+                "PC402", _loc(cap.kernel_name),
+                f"block {block} does not tile operand {ref} "
+                f"(grid {cap.grid})"))
+    return out
+
+
+def _check_vmem_models() -> list[Finding]:
+    from repro.kernels import approx_qgemm as qk
+
+    out: list[Finding] = []
+    for m, k, n, rank in PROBE_SHAPES:
+        cap, (bm, bk, bn) = _capture_fused(m, k, n, rank)
+        out.extend(_check_grid(cap))
+        actual = cap.vmem_bytes()
+        declared = qk.fused_vmem_bytes(bm, bk, bn, rank + 1)
+        if abs(declared - actual) > TOLERANCE_BYTES:
+            out.append(Finding(
+                "PC401", _loc(cap.kernel_name),
+                f"fused_vmem_bytes({bm},{bk},{bn},planes={rank + 1}) = "
+                f"{declared} but BlockSpecs give {actual} "
+                f"(drift {declared - actual:+d}B > {TOLERANCE_BYTES}B "
+                f"tolerance) for gemm {(m, k, n)}"))
+    # stacked twin
+    cap = _capture_stacked(256, 512, 256, rank=2)
+    out.extend(_check_grid(cap))
+    declared = qk.stacked_vmem_bytes(256, 512, 256, 3)
+    actual = cap.vmem_bytes()
+    if abs(declared - actual) > TOLERANCE_BYTES:
+        out.append(Finding(
+            "PC401", _loc(cap.kernel_name),
+            f"stacked_vmem_bytes(256,512,256,planes=3) = {declared} but "
+            f"BlockSpecs give {actual}"))
+    return out
+
+
+def _capture_stacked(m: int, k: int, n: int, rank: int) -> PallasCapture:
+    import jax.numpy as jnp
+    from repro.kernels import approx_qgemm as qk
+
+    p = rank + 1
+    a = jnp.zeros((p, m, k), jnp.int8)
+    b = jnp.zeros((p, k, n), jnp.int8)
+    s = jnp.zeros((p, 1), jnp.float32)
+    with _Interceptor() as icept:
+        _unjitted(qk.approx_qgemm_stacked)(a, b, s, bm=m, bk=k, bn=n,
+                                           interpret=True)
+    assert len(icept.captures) == 1
+    return icept.captures[0]
+
+
+def _check_quantize() -> list[Finding]:
+    import jax.numpy as jnp
+    from repro.kernels import quantize as qz
+
+    with _Interceptor() as icept:
+        _unjitted(qz.quantize_rows)(jnp.zeros((256, 192), jnp.float32),
+                                    bm=128, trunc=2, interpret=True)
+    assert len(icept.captures) == 1
+    return _check_grid(icept.captures[0])
+
+
+def _check_dispatch_consistency() -> list[Finding]:
+    from repro.kernels import approx_qgemm as qk
+    from repro.kernels import dispatch
+
+    out = []
+    budget = dispatch.vmem_budget_bytes()
+    for m, k, n, rank in PROBE_SHAPES:
+        bm, bk, bn = qk.choose_blocks(m, k, n)
+        declared = qk.fused_vmem_bytes(bm, bk, bn, rank + 1)
+        if declared > budget:
+            continue  # dispatch rejects it; nothing to cross-check
+        cap, _ = _capture_fused(m, k, n, rank)
+        if cap.vmem_bytes() > budget + TOLERANCE_BYTES:
+            out.append(Finding(
+                "PC403", "kernels/dispatch:use_pallas_gemm",
+                f"dispatch admits gemm {(m, k, n)} rank {rank} "
+                f"(declared {declared}B <= budget {budget}B) but the "
+                f"BlockSpec working set is {cap.vmem_bytes()}B"))
+    return out
+
+
+def _check_ktail() -> list[Finding]:
+    """PC404: the fused kernel with K padding must be bit-identical to
+    the stacked reference twin (which pads AFTER table mapping, so its
+    pad elements are exactly zero in every plane).  The in-kernel
+    k_valid tail mask is the only thing standing between the fused
+    path's zero-padding and nonzero table garbage."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.approx import gemm as gemm_mod
+    from repro.core import multipliers as mm
+    from repro.core import netlist as nl
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(7)
+    mask = rng.random(len(nl.bw8().prunable_gates())) < 0.03
+    spec = gemm_mod.from_multiplier(mm.pruned(mask, name="pc_ktail"),
+                                    rank=2)
+    m, k, n = 16, 130, 24          # K=130 forces a padded tail block
+    a = jnp.asarray(rng.integers(-127, 128, (m, k), np.int8))
+    b = jnp.asarray(rng.integers(-127, 128, (k, n), np.int8))
+    fused = np.asarray(ops.approx_qgemm(a, b, spec, fused=True))
+    ref = np.asarray(ops.approx_qgemm(a, b, spec, fused=False))
+    if not np.array_equal(fused, ref):
+        bad = int(np.sum(fused != ref))
+        return [Finding(
+            "PC404", "kernels/approx_qgemm:_fused_kernel",
+            f"K-padded fused gemm {(m, k, n)} differs from the stacked "
+            f"reference at {bad}/{fused.size} positions — the k_valid "
+            f"tail mask is not masking table-mapped pad columns")]
+    return []
+
+
+def check(root: str | None = None) -> list[Finding]:
+    findings: list[Finding] = []
+    findings.extend(_check_vmem_models())
+    findings.extend(_check_quantize())
+    findings.extend(_check_dispatch_consistency())
+    findings.extend(_check_ktail())
+    return findings

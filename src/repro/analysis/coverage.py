@@ -1,0 +1,201 @@
+"""SC: sharding-rule coverage over every model family's pytrees.
+
+PR 5's bug class was "a param leaf silently missed a rule": a weight
+that should shard under tensor parallelism fell through
+`rules.param_pspec`'s replicated default and nobody noticed until TP
+decode diverged.  This checker walks the *actual* param / decode-cache /
+batch pytrees of one representative (reduced) config per family —
+resolved exactly the way `sharding/rules.py` resolves them — and fails
+on any leaf that neither matches a rule nor appears in the explicit
+exemption table below:
+
+  SC301  a matrix-shaped param leaf with no partition rule and no
+         exemption (the PR 5 class);
+  SC302  a decode-cache leaf whose key has no batch-dim rule;
+  SC303  a batch leaf whose leading axis stays unsharded on a mesh whose
+         data axes divide it.
+
+Vectors/scalars (ndim < 2) are structurally replicated and auto-exempt.
+Every exemption entry names WHY the leaf is replicated — adding a new
+model weight means either giving it a rule in `sharding/rules.py` or
+arguing its replication here; silence is no longer an option.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+from repro.analysis.findings import Finding
+
+#: one representative architecture per family (reduced configs keep the
+#: checker fast; rule resolution is shape-independent by name).
+FAMILY_ARCHS = {
+    "lm": "tinyllama-1.1b",
+    "ssm": "mamba2-370m",
+    "hybrid": "recurrentgemma-9b",
+    "encdec": "whisper-medium",
+}
+
+#: param leaves (ndim >= 2) that are DELIBERATELY replicated.  Keyed by
+#: resolved leaf name (the same name `rules.param_pspec` matches on);
+#: the value is the reason carried into the report.
+PARAM_EXEMPTIONS: dict[str, str] = {
+    # layer-stacked norm scales/biases: (layers, d) — per-layer vectors
+    "ln1": "stacked RMSNorm scales: per-layer vectors, no matrix dim",
+    "ln2": "stacked RMSNorm scales: per-layer vectors, no matrix dim",
+    "ln": "stacked norm scales: per-layer vectors",
+    "mln": "stacked MLP norm scales: per-layer vectors",
+    "ln1b": "stacked LayerNorm biases: per-layer vectors",
+    "ln2b": "stacked LayerNorm biases: per-layer vectors",
+    "xln": "cross-attention norm scales: per-layer vectors",
+    "xlnb": "cross-attention norm biases: per-layer vectors",
+    "norm_gate": "mamba2 gated-norm scale: per-layer vector",
+    # mamba2 SSD internals: tiny per-head vectors / depthwise taps whose
+    # channel-sharded output XLA's CPU SPMD partitioner miscompiles
+    # (see the in_proj-only TP rule in sharding/rules.py)
+    "A_log": "mamba2 per-head decay: (layers, heads) vector",
+    "D": "mamba2 skip gain: (layers, heads) vector",
+    "dt_bias": "mamba2 dt bias: (layers, heads) vector",
+    "conv_w": "depthwise conv taps: vector-unit arrays, deliberately "
+              "replicated (rules.py mamba2/rg-lru comment)",
+    "conv_b": "depthwise conv bias: per-channel vector",
+    "lam": "rg-lru lambda: per-channel vector",
+    # whisper biases: (layers, d) per-layer vectors
+    "bq": "attention biases: per-layer vectors",
+    "bv": "attention biases: per-layer vectors",
+    "bo": "attention biases: per-layer vectors",
+    "xbq": "cross-attention biases: per-layer vectors",
+    "xbv": "cross-attention biases: per-layer vectors",
+    "xbo": "cross-attention biases: per-layer vectors",
+    "mb_up": "MLP biases: per-layer vectors",
+    "mb_down": "MLP biases: per-layer vectors",
+}
+
+#: batch keys whose leading dim is NOT the batch axis (never sharded).
+BATCH_EXEMPTIONS: dict[str, str] = {}
+
+
+def _leaf_name(path: tuple) -> str | None:
+    """Resolve a pytree path to its rule-matching name — the SAME walk
+    as rules.param_pspec (skipping int8 {"q","s"} wrapper levels and
+    PreparedWeight attr fields), so checker and rules cannot diverge on
+    name resolution."""
+    from repro.sharding import rules
+    for part in reversed(path):
+        is_attr = not hasattr(part, "key") and hasattr(part, "name")
+        key = getattr(part, "key", None) or getattr(part, "name", None) or \
+            (part if isinstance(part, str) else None)
+        if key is None or str(key) in ("q", "s"):
+            continue
+        if is_attr and str(key) in rules._PREPARED_ATTRS:
+            continue
+        return str(key)
+    return None
+
+
+def _check_params(cfg, shapes: Any) -> list[Finding]:
+    import jax
+    from repro.sharding import rules
+
+    known = rules.known_param_rule_names()
+    out: list[Finding] = []
+
+    def visit(path, leaf):
+        name = _leaf_name(path)
+        if getattr(leaf, "ndim", 0) < 2:
+            return leaf  # vectors/scalars: structurally replicated
+        if name in known or name in PARAM_EXEMPTIONS:
+            return leaf
+        out.append(Finding(
+            "SC301", f"sharding/rules:{cfg.family}",
+            f"param leaf `{name}` {tuple(leaf.shape)} of {cfg.name} has "
+            f"no partition rule and no exemption — give it a rule in "
+            f"rules._param_rules or justify replication in "
+            f"coverage.PARAM_EXEMPTIONS"))
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit, shapes)
+    return out
+
+
+def _check_cache(cfg, cache_shapes: Any) -> list[Finding]:
+    import jax
+    from repro.sharding import rules
+
+    known = rules.known_cache_keys()
+    out: list[Finding] = []
+
+    def visit(path, leaf):
+        key = None
+        for part in reversed(path):
+            k = getattr(part, "key", None)
+            if k is not None:
+                key = str(k)
+                break
+        if key not in known:
+            out.append(Finding(
+                "SC302", f"sharding/rules:{cfg.family}",
+                f"decode-cache leaf `{key}` {tuple(leaf.shape)} of "
+                f"{cfg.name} has no batch-dim rule in "
+                f"rules._CACHE_BATCH_DIM"))
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit, cache_shapes)
+    return out
+
+
+def _check_batch(cfg, mesh) -> list[Finding]:
+    from repro.sharding import rules
+
+    out: list[Finding] = []
+    batch = 8  # divisible by any reasonable data-axis product
+    keys = {"tokens": (batch, 16), "labels": (batch, 16),
+            "mask": (batch, 16)}
+    if cfg.family == "encdec":
+        keys["frames"] = (batch, cfg.enc_seq, cfg.d_model)
+    if cfg.cross_every:
+        keys["img"] = (batch, cfg.n_img_tokens, cfg.d_model)
+    for key, shape in keys.items():
+        if key in BATCH_EXEMPTIONS:
+            continue
+        spec = rules.batch_pspec(key, shape, mesh)
+        lead = spec[0] if len(spec) else None
+        if lead is None:
+            out.append(Finding(
+                "SC303", f"sharding/rules:{cfg.family}",
+                f"batch leaf `{key}` {shape} of {cfg.name} stays "
+                f"replicated on mesh {dict(mesh.shape)} although its "
+                f"batch dim divides the data axes"))
+    return out
+
+
+def _abstract_mesh():
+    """A (model=2, data=2) mesh for rule resolution.  Rules only consult
+    `mesh.shape` / `mesh.axis_names`, so an AbstractMesh works without 4
+    physical devices; fall back to a trivial host mesh if this JAX
+    predates AbstractMesh."""
+    from repro import compat
+    try:
+        return compat.make_abstract_mesh((2, 2), ("data", "model"))
+    except Exception:
+        from repro.launch.mesh import make_host_mesh
+        return make_host_mesh()
+
+
+def check(root: str | None = None) -> list[Finding]:
+    import jax
+    from repro import configs
+    from repro.models import api
+
+    mesh = _abstract_mesh()
+    findings: list[Finding] = []
+    for family, arch in FAMILY_ARCHS.items():
+        cfg = configs.apply_overrides(configs.get_config(arch),
+                                      reduced=True)
+        shapes = jax.eval_shape(
+            lambda c=cfg: api.init_params(c, jax.random.key(0)))
+        findings.extend(_check_params(cfg, shapes))
+        cache = jax.eval_shape(lambda c=cfg: api.init_cache(c, 2, 32))
+        findings.extend(_check_cache(cfg, cache))
+        findings.extend(_check_batch(cfg, mesh))
+    return findings

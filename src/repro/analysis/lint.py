@@ -1,0 +1,409 @@
+"""JH: jit-hazard AST lint over `src/repro/`.
+
+Statically flags the recompile-storm and tracer-leak bug classes on any
+function that is *jit-reachable* — decorated with `jax.jit` /
+`functools.partial(jax.jit, ...)`, wrapped by a `jax.jit(fn)` call
+expression anywhere in the package (the serving engine's
+`jax.jit(self._decode_impl)` pattern), or reachable from such a function
+through the package call graph:
+
+  JH101  host-sync calls: `.item()`, `float(param)`, `np.asarray(...)`,
+         `jax.device_get(...)` — each forces a device round-trip per call
+         under trace, or leaks a tracer to the host;
+  JH102  Python `if`/`while`/ternary whose test computes on a traced
+         value (`jnp.any(x)`, `x.sum() > 0`, ...) — a trace-time
+         ConcretizationError or, with static inputs, a silent per-value
+         recompile;
+  JH103  numpy ops applied to potentially traced arguments — numpy
+         silently materializes the tracer;
+  JH104  a parameter named in `static_argnames` with a mutable default
+         (list/dict/set) — unhashable static args fail the jit cache
+         lookup on every call.
+
+Reachability is intentionally an over-approximation resolved by name
+(bare calls within a module, `self.method`, and imported-module
+attributes); the family-dispatch indirection in `models/api.py`
+(`family_module(cfg).forward(...)`) is bridged by the explicit
+DYNAMIC_EDGES table so model code stays in scope.  False positives are
+suppressed inline (`# analysis: allow[JHxxx] reason`) or via the
+baseline file — never by weakening the pass.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+
+from repro.analysis.findings import Finding
+
+#: api-level entry points dispatch on cfg.family at runtime; the static
+#: call graph cannot see through `family_module(cfg).<name>(...)`, so these
+#: edges are declared: api.<name> -> every family module's <name>.
+_FAMILY_MODULES = ("transformer", "mamba2", "rglru", "encdec")
+_FAMILY_API = ("forward", "prefill", "decode_step", "init_cache",
+               "init_params")
+DYNAMIC_EDGES = {
+    (os.path.join("src", "repro", "models", "api.py"), name): [
+        (os.path.join("src", "repro", "models", f"{mod}.py"), name)
+        for mod in _FAMILY_MODULES]
+    for name in _FAMILY_API
+}
+
+_HOST_SYNC_NP = {"asarray", "array", "copy", "save", "savez", "tolist"}
+_ARRAY_BOOL_METHODS = {"any", "all", "sum", "max", "min", "mean", "item",
+                       "argmax", "argmin"}
+
+
+@dataclasses.dataclass
+class FunctionInfo:
+    module: str                   # repo-relative path
+    qualname: str                 # e.g. "Engine._decode_impl"
+    node: ast.AST
+    params: list[str]
+    static_names: set[str]
+    jit_entry: bool = False
+    lineno: int = 0
+
+    @property
+    def key(self) -> tuple[str, str]:
+        return (self.module, self.qualname)
+
+
+def _is_jit_attr(node: ast.AST, jax_aliases: set[str],
+                 jit_names: set[str]) -> bool:
+    """`jax.jit` / bare `jit` (imported from jax)."""
+    if isinstance(node, ast.Attribute) and node.attr == "jit" and \
+            isinstance(node.value, ast.Name) and \
+            node.value.id in jax_aliases:
+        return True
+    return isinstance(node, ast.Name) and node.id in jit_names
+
+
+def _static_argnames(call: ast.Call) -> set[str]:
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            if isinstance(kw.value, (ast.Tuple, ast.List)):
+                return {e.value for e in kw.value.elts
+                        if isinstance(e, ast.Constant)
+                        and isinstance(e.value, str)}
+            if isinstance(kw.value, ast.Constant) and \
+                    isinstance(kw.value.value, str):
+                return {kw.value.value}
+    return set()
+
+
+class _ModuleIndex(ast.NodeVisitor):
+    """One module's functions, imports, and jit registration sites."""
+
+    def __init__(self, module: str, tree: ast.Module):
+        self.module = module
+        self.functions: dict[str, FunctionInfo] = {}
+        self.import_mod: dict[str, str] = {}    # alias -> dotted module
+        self.import_from: dict[str, tuple[str, str]] = {}  # name -> (mod, nm)
+        self.jax_aliases: set[str] = set()
+        self.np_aliases: set[str] = set()
+        self.jnp_aliases: set[str] = set()
+        self.jit_names: set[str] = set()        # `from jax import jit`
+        self.partial_names: set[str] = set()    # functools.partial aliases
+        # qualnames jit-wrapped via call expressions (`jax.jit(fn)`), with
+        # the static names the wrapping declared
+        self.wrapped: dict[str, set[str]] = {}
+        self._stack: list[str] = []
+        self.visit(tree)
+
+    # --- imports ---------------------------------------------------------
+
+    def visit_Import(self, node: ast.Import):
+        for a in node.names:
+            alias = a.asname or a.name.split(".")[0]
+            self.import_mod[alias] = a.name
+            if a.name == "jax":
+                self.jax_aliases.add(alias)
+            if a.name == "numpy":
+                self.np_aliases.add(alias)
+            if a.name == "jax.numpy":
+                self.jnp_aliases.add(alias)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom):
+        for a in node.names:
+            alias = a.asname or a.name
+            self.import_from[alias] = (node.module or "", a.name)
+            if node.module == "jax" and a.name == "numpy":
+                self.jnp_aliases.add(alias)
+            if node.module == "jax" and a.name == "jit":
+                self.jit_names.add(alias)
+            if node.module == "functools" and a.name == "partial":
+                self.partial_names.add(alias)
+            if (node.module or "").startswith("repro"):
+                self.import_mod[alias] = f"{node.module}.{a.name}"
+
+    # --- function defs ---------------------------------------------------
+
+    def _is_partial_jit(self, call: ast.Call) -> bool:
+        f = call.func
+        is_partial = (
+            isinstance(f, ast.Attribute) and f.attr == "partial" and
+            isinstance(f.value, ast.Name) and f.value.id == "functools"
+        ) or (isinstance(f, ast.Name) and f.id in self.partial_names)
+        return is_partial and call.args and _is_jit_attr(
+            call.args[0], self.jax_aliases, self.jit_names)
+
+    def _handle_def(self, node):
+        qual = ".".join(self._stack + [node.name])
+        params = [a.arg for a in (node.args.posonlyargs + node.args.args +
+                                  node.args.kwonlyargs)]
+        static: set[str] = set()
+        entry = False
+        for dec in node.decorator_list:
+            if _is_jit_attr(dec, self.jax_aliases, self.jit_names):
+                entry = True
+            elif isinstance(dec, ast.Call):
+                if _is_jit_attr(dec.func, self.jax_aliases, self.jit_names):
+                    entry = True
+                    static |= _static_argnames(dec)
+                elif self._is_partial_jit(dec):
+                    entry = True
+                    static |= _static_argnames(dec)
+        info = FunctionInfo(self.module, qual, node, params, static,
+                            jit_entry=entry, lineno=node.lineno)
+        self.functions[qual] = info
+        self._stack.append(node.name)
+        self.generic_visit(node)
+        self._stack.pop()
+
+    visit_FunctionDef = _handle_def
+    visit_AsyncFunctionDef = _handle_def
+
+    # --- jax.jit(fn) call-expression registration ------------------------
+
+    def visit_Call(self, node: ast.Call):
+        target = None
+        if _is_jit_attr(node.func, self.jax_aliases, self.jit_names) and \
+                node.args:
+            target = node.args[0]
+        elif isinstance(node.func, ast.Call) and \
+                self._is_partial_jit(node.func) and node.args:
+            target = node.args[0]
+        if target is not None:
+            static = _static_argnames(node)
+            if isinstance(target, ast.Name):
+                self.wrapped.setdefault(target.id, set()).update(static)
+            elif isinstance(target, ast.Attribute):
+                # `jax.jit(self._decode_impl)` -> any same-module method
+                self.wrapped.setdefault(target.attr, set()).update(static)
+        self.generic_visit(node)
+
+
+def _iter_py(root: str, subdir: str):
+    base = os.path.join(root, subdir)
+    for dirpath, _, names in os.walk(base):
+        for n in sorted(names):
+            if n.endswith(".py"):
+                yield os.path.relpath(os.path.join(dirpath, n), root)
+
+
+def build_index(root: str, subdir: str = os.path.join("src", "repro")
+                ) -> dict[str, _ModuleIndex]:
+    out = {}
+    for rel in _iter_py(root, subdir):
+        with open(os.path.join(root, rel)) as f:
+            src = f.read()
+        try:
+            tree = ast.parse(src, filename=rel)
+        except SyntaxError:
+            continue
+        out[rel] = _ModuleIndex(rel, tree)
+    return out
+
+
+def _apply_wrapped(index: dict[str, _ModuleIndex]) -> None:
+    for mod in index.values():
+        for name, static in mod.wrapped.items():
+            for info in mod.functions.values():
+                if info.qualname == name or \
+                        info.qualname.endswith("." + name):
+                    info.jit_entry = True
+                    info.static_names |= static
+
+
+def _dotted_to_rel(dotted: str) -> str:
+    return os.path.join("src", *dotted.split(".")) + ".py"
+
+
+def _callees(info: FunctionInfo, mod: _ModuleIndex,
+             index: dict[str, _ModuleIndex]) -> set[tuple[str, str]]:
+    """Resolve this function's outgoing call edges (+ nested defs)."""
+    edges: set[tuple[str, str]] = set()
+
+    def local(name: str):
+        for q, fi in mod.functions.items():
+            if q == name or q.endswith("." + name):
+                edges.add(fi.key)
+
+    for node in ast.walk(info.node):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) and \
+                node is not info.node:
+            # nested defs (scan bodies, shard_map lambdas' helpers) run
+            # under the parent's trace
+            local(node.name)
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        if isinstance(f, ast.Name):
+            if f.id in mod.import_from:
+                fmod, fname = mod.import_from[f.id]
+                rel = _dotted_to_rel(fmod)
+                if rel in index and fname in index[rel].functions:
+                    edges.add((rel, fname))
+            local(f.id)
+        elif isinstance(f, ast.Attribute):
+            if isinstance(f.value, ast.Name):
+                base = f.value.id
+                if base == "self":
+                    local(f.attr)
+                elif base in mod.import_mod:
+                    rel = _dotted_to_rel(mod.import_mod[base])
+                    if rel in index and f.attr in index[rel].functions:
+                        edges.add((rel, f.attr))
+    for (dmod, dname), targets in DYNAMIC_EDGES.items():
+        if dmod == info.module and info.qualname.split(".")[-1] == dname:
+            for t in targets:
+                if t[0] in index and t[1] in index[t[0]].functions:
+                    edges.add(t)
+    return edges
+
+
+def reachable_set(index: dict[str, _ModuleIndex]) -> set[tuple[str, str]]:
+    """BFS over the call graph from every jit entry point."""
+    _apply_wrapped(index)
+    frontier = [fi for m in index.values() for fi in m.functions.values()
+                if fi.jit_entry]
+    seen = {fi.key for fi in frontier}
+    while frontier:
+        fi = frontier.pop()
+        for key in _callees(fi, index[fi.module], index):
+            if key in seen:
+                continue
+            seen.add(key)
+            frontier.append(index[key[0]].functions[key[1]])
+    return seen
+
+
+# --------------------------------------------------------------------------
+# hazard detection within one jit-reachable function
+# --------------------------------------------------------------------------
+
+def _expr_has_traced_test(node: ast.AST, mod: _ModuleIndex,
+                          traced: set[str]) -> bool:
+    """Does this test expression compute on an array value?"""
+    for sub in ast.walk(node):
+        if not isinstance(sub, ast.Call):
+            continue
+        f = sub.func
+        if isinstance(f, ast.Attribute):
+            if isinstance(f.value, ast.Name) and \
+                    f.value.id in mod.jnp_aliases:
+                return True
+            if f.attr in _ARRAY_BOOL_METHODS and \
+                    isinstance(f.value, ast.Name) and f.value.id in traced:
+                return True
+    return False
+
+
+def _uses_traced(node: ast.AST, traced: set[str]) -> bool:
+    return any(isinstance(s, ast.Name) and s.id in traced
+               for s in ast.walk(node))
+
+
+def _scan_function(info: FunctionInfo, mod: _ModuleIndex
+                   ) -> list[Finding]:
+    out: list[Finding] = []
+    traced = set(info.params) - info.static_names - {"self", "cls"}
+    own = {n for n in ast.walk(info.node)
+           if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+           and n is not info.node}
+    skip = {id(d) for fn in own for d in ast.walk(fn)}
+
+    def emit(code, node, msg):
+        out.append(Finding(code, info.module, msg, line=node.lineno))
+
+    for node in ast.walk(info.node):
+        if id(node) in skip:
+            continue  # nested defs are scanned as their own functions
+        if isinstance(node, (ast.If, ast.While)):
+            if _expr_has_traced_test(node.test, mod, traced):
+                emit("JH102", node,
+                     f"`{info.qualname}` branches on a traced value "
+                     f"(trace-time control flow; use lax.cond/jnp.where)")
+        elif isinstance(node, ast.IfExp):
+            if _expr_has_traced_test(node.test, mod, traced):
+                emit("JH102", node,
+                     f"`{info.qualname}` ternary on a traced value")
+        elif isinstance(node, ast.Call):
+            f = node.func
+            if isinstance(f, ast.Attribute):
+                if f.attr == "item" and not node.args:
+                    emit("JH101", node,
+                         f"`.item()` in jit-reachable `{info.qualname}` "
+                         f"forces a host sync per trace")
+                elif isinstance(f.value, ast.Name) and \
+                        f.value.id in mod.jax_aliases and \
+                        f.attr == "device_get":
+                    emit("JH101", node,
+                         f"`jax.device_get` inside jit-reachable "
+                         f"`{info.qualname}`")
+                elif isinstance(f.value, ast.Name) and \
+                        f.value.id in mod.np_aliases and \
+                        any(_uses_traced(a, traced) for a in node.args):
+                    code = "JH101" if f.attr in _HOST_SYNC_NP else "JH103"
+                    what = ("host-syncs" if code == "JH101"
+                            else "silently materializes")
+                    emit(code, node,
+                         f"`np.{f.attr}` on a potentially traced arg in "
+                         f"`{info.qualname}` {what} the tracer")
+            elif isinstance(f, ast.Name) and f.id in ("float", "int",
+                                                      "bool"):
+                if node.args and isinstance(node.args[0], ast.Name) and \
+                        node.args[0].id in traced:
+                    emit("JH101", node,
+                         f"`{f.id}({node.args[0].id})` on a traced "
+                         f"parameter of `{info.qualname}`")
+    return out
+
+
+def _scan_static_defaults(info: FunctionInfo) -> list[Finding]:
+    if not (info.jit_entry and info.static_names):
+        return []
+    out = []
+    node = info.node
+    args = node.args.posonlyargs + node.args.args
+    defaults = node.args.defaults
+    pairs = list(zip(args[len(args) - len(defaults):], defaults))
+    pairs += [(a, d) for a, d in zip(node.args.kwonlyargs,
+                                     node.args.kw_defaults) if d is not None]
+    for arg, default in pairs:
+        if arg.arg in info.static_names and \
+                isinstance(default, (ast.List, ast.Dict, ast.Set)):
+            out.append(Finding(
+                "JH104", info.module,
+                f"static arg `{arg.arg}` of `{info.qualname}` has a "
+                f"mutable default (unhashable jit cache key)",
+                line=default.lineno))
+    return out
+
+
+def check(root: str, subdir: str = os.path.join("src", "repro")
+          ) -> list[Finding]:
+    """Run the jit-hazard lint over `root/subdir`."""
+    index = build_index(root, subdir)
+    reach = reachable_set(index)
+    findings: list[Finding] = []
+    for rel, qual in sorted(reach):
+        info = index[rel].functions[qual]
+        findings.extend(_scan_function(info, index[rel]))
+    for mod in index.values():
+        for info in mod.functions.values():
+            findings.extend(_scan_static_defaults(info))
+    findings.sort(key=lambda f: (f.path, f.line, f.code))
+    return findings

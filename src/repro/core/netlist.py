@@ -24,7 +24,6 @@ tool; the JAX/Pallas side consumes its outputs (LUTs + low-rank error factors).
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 import numpy as np
 

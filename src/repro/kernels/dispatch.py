@@ -36,10 +36,30 @@ POLICIES = ("auto", "pallas", "xla")
 #: Below one MXU tile on any operand dim, block padding dominates.
 MIN_DIM = 128
 #: Per-grid-step VMEM working-set budget for the fused kernel: ~16 MiB/core
-#: minus compiler headroom.
+#: minus compiler headroom.  Override per process with $REPRO_VMEM_BUDGET
+#: (bytes, decimal or 0x-hex) for parts with different VMEM — the override
+#: feeds every budget consumer (auto dispatch and the repro.analysis Pallas
+#: contract checker) through `vmem_budget_bytes()`.
 VMEM_BUDGET_BYTES = 14 << 20
 
 _ENV_VAR = "REPRO_KERNEL_POLICY"
+_VMEM_ENV_VAR = "REPRO_VMEM_BUDGET"
+
+
+def vmem_budget_bytes() -> int:
+    """Effective fused-kernel VMEM budget: $REPRO_VMEM_BUDGET (positive
+    integer bytes; "0x..." hex accepted) or VMEM_BUDGET_BYTES."""
+    raw = os.environ.get(_VMEM_ENV_VAR, "").strip()
+    if not raw:
+        return VMEM_BUDGET_BYTES
+    try:
+        val = int(raw, 0)
+    except ValueError:
+        raise ValueError(
+            f"${_VMEM_ENV_VAR}={raw!r} is not an integer byte count")
+    if val <= 0:
+        raise ValueError(f"${_VMEM_ENV_VAR}={raw!r} must be positive")
+    return val
 
 
 def default_policy() -> str:
@@ -109,7 +129,7 @@ def use_pallas_gemm(policy: str | None, *, m: int, k: int, n: int,
         return False
     from repro.kernels import approx_qgemm as qk
     bm, bk, bn = qk.choose_blocks(m, k, n_local)
-    return qk.fused_vmem_bytes(bm, bk, bn, n_planes) <= VMEM_BUDGET_BYTES
+    return qk.fused_vmem_bytes(bm, bk, bn, n_planes) <= vmem_budget_bytes()
 
 
 def use_pallas_attention(policy: str | None, *, seq: int,

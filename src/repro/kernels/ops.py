@@ -14,11 +14,8 @@ reference twin for parity tests and the BENCH_gemm trajectory.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import compat
 from repro.approx import gemm as gemm_mod

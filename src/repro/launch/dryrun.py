@@ -22,15 +22,14 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro import compat, configs
 from repro.configs.base import ModelConfig, ShapeSpec
 from repro.launch.mesh import make_production_mesh
 from repro.models import api
 from repro.roofline import analysis as roofline
-from repro.sharding import ctx, rules
+from repro.sharding import rules
 from repro.train import train_step as ts
 
 

@@ -9,7 +9,6 @@ not the approximate MAC array — see DESIGN.md §Arch-applicability).
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

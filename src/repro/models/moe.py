@@ -33,7 +33,6 @@ def moe_ffn(x: jax.Array, router: jax.Array, we_gate: jax.Array,
     we_down = _as_weight(we_down, x.dtype)
     t, d = x.shape
     e = router.shape[1]
-    f = we_gate.shape[2]
     capacity = max(1, int(capacity_factor * top_k * t / e))
 
     logits = jnp.einsum("td,de->te", x.astype(jnp.float32),

@@ -102,8 +102,6 @@ def ef_compressed_allreduce(g: jax.Array, e: jax.Array, axis_name: str
 def make_compressed_allreduce_fn(mesh: Mesh, axis: str = "data"):
     """shard_map-wrapped compressed all-reduce over one mesh axis, for
     replicated-along-`axis` tensors."""
-    other = tuple(a for a in mesh.axis_names if a != axis)
-
     @functools.partial(
         shard_map, mesh=mesh, in_specs=P(), out_specs=P(),
         check_rep=False)

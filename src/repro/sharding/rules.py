@@ -14,10 +14,9 @@ import math
 from typing import Any
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ModelConfig, ShapeSpec
+from repro.configs.base import ModelConfig
 
 
 def dp_axes(mesh: Mesh):
@@ -212,3 +211,16 @@ def cache_shardings(cache_tree: Any, mesh: Mesh) -> Any:
 def should_fsdp(cfg: ModelConfig) -> bool:
     """ZeRO-3 weight sharding on the data axis for >=20B-param configs."""
     return cfg.param_count() >= 20e9
+
+
+# --- rule introspection (repro.analysis coverage checker) ---------------------
+
+def known_param_rule_names() -> frozenset[str]:
+    """Param leaf names with an explicit partition rule."""
+    return frozenset(_param_rules(None))
+
+
+def known_cache_keys() -> frozenset[str]:
+    """Decode-cache keys with a batch-dim rule ("length" is handled as an
+    explicit replicated special case in cache_pspec)."""
+    return frozenset(_CACHE_BATCH_DIM) | {"length"}

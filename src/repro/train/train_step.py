@@ -11,8 +11,7 @@ gradient reduce-scatter under XLA's latency-hiding scheduler).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,17 @@
+"""Shared fixtures.
+
+`retrace_sanitizer`: a `repro.analysis.retrace.RetraceSanitizer` that
+asserts every declared compile budget at teardown — a test that watches
+a jitted entry point fails if the entry point retraced beyond budget,
+even if all its own assertions passed.
+"""
+
+import pytest
+
+
+@pytest.fixture
+def retrace_sanitizer():
+    from repro.analysis.retrace import RetraceSanitizer
+    s = RetraceSanitizer()
+    yield s
+    s.assert_ok()

@@ -1,0 +1,375 @@
+"""repro.analysis: findings model, all four checkers (each proven live
+by a seeded violation), suppressions, the CLI, the VMEM budget override,
+and the shared bench-report schema checker."""
+
+import importlib.util
+import json
+import os
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import findings as fmod
+from repro.analysis.findings import Baseline, Finding, apply_suppressions
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# --------------------------------------------------------------------------
+# findings / suppression machinery
+# --------------------------------------------------------------------------
+
+def test_finding_checker_derived_from_code():
+    assert Finding("JH101", "a.py", "m").checker == "jit"
+    assert Finding("RT201", "x", "m").checker == "retrace"
+    assert Finding("SC301", "x", "m").checker == "sharding"
+    assert Finding("PC401", "x", "m").checker == "pallas"
+    with pytest.raises(AssertionError):
+        Finding("ZZ999", "x", "m")
+
+
+def test_inline_allow_comment():
+    assert fmod.inline_allowed("x = 1  # analysis: allow[JH102] why") \
+        == "JH102"
+    assert fmod.inline_allowed("x = 1  # plain comment") is None
+
+
+def test_baseline_match_and_stale_tracking():
+    b = Baseline([{"code": "SC301", "path": "sharding/rules:lm",
+                   "reason": "known"},
+                  {"code": "JH101", "path": "never/hit.py",
+                   "reason": "stale"}])
+    f = Finding("SC301", "sharding/rules:lm", "m")
+    assert b.match(f) == "known"
+    assert [e["path"] for e in b.unused()] == ["never/hit.py"]
+    with pytest.raises(ValueError):
+        Baseline([{"code": "XX000", "path": "p", "reason": "r"}])
+    with pytest.raises(ValueError):
+        Baseline([{"code": "JH101"}])
+
+
+def test_apply_suppressions_inline(tmp_path):
+    (tmp_path / "mod.py").write_text(
+        "x = 1\ny = 2  # analysis: allow[JH103] vetted\n")
+    fs = [Finding("JH103", "mod.py", "m", line=2),
+          Finding("JH103", "mod.py", "m", line=1)]
+    apply_suppressions(fs, Baseline([]), str(tmp_path))
+    assert fs[0].suppressed and fs[0].suppress_reason == "inline allow"
+    assert not fs[1].suppressed
+
+
+# --------------------------------------------------------------------------
+# jit-hazard lint (JH)
+# --------------------------------------------------------------------------
+
+HAZARD_SRC = textwrap.dedent("""\
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+
+    @jax.jit
+    def f(x):
+        if jnp.any(x > 0):
+            x = x + 1
+        np.asarray(x)
+        np.square(x)
+        return helper(x)
+
+
+    def helper(x):
+        return float(x)
+
+
+    @functools.partial(jax.jit, static_argnames=("opts",))
+    def g(x, opts=[]):
+        return x
+""")
+
+
+@pytest.fixture
+def hazard_tree(tmp_path):
+    pkg = tmp_path / "src" / "repro"
+    pkg.mkdir(parents=True)
+    (pkg / "bad.py").write_text(HAZARD_SRC)
+    return tmp_path
+
+
+def test_lint_seeded_violations_fire_exact_codes(hazard_tree):
+    from repro.analysis import lint
+    fs = lint.check(str(hazard_tree))
+    codes = sorted(f.code for f in fs)
+    assert codes == ["JH101", "JH101", "JH102", "JH103", "JH104"], \
+        [f.render() for f in fs]
+    # reachability: helper() is flagged only because f() is jit-entry
+    helper_f = [f for f in fs if "helper" in f.message]
+    assert helper_f and helper_f[0].code == "JH101"
+    # findings carry the repo-relative path + line for inline suppression
+    assert all(f.path == os.path.join("src", "repro", "bad.py")
+               for f in fs)
+    assert all(f.line > 0 for f in fs)
+
+
+def test_lint_unreachable_function_not_flagged(tmp_path):
+    pkg = tmp_path / "src" / "repro"
+    pkg.mkdir(parents=True)
+    (pkg / "host.py").write_text(textwrap.dedent("""\
+        import numpy as np
+
+        def host_only(x):
+            return float(x) + np.asarray(x).sum()
+    """))
+    from repro.analysis import lint
+    assert lint.check(str(tmp_path)) == []
+
+
+def test_lint_clean_on_this_repo():
+    from repro.analysis import lint
+    assert [f.render() for f in lint.check(REPO)] == []
+
+
+# --------------------------------------------------------------------------
+# retrace sanitizer (RT)
+# --------------------------------------------------------------------------
+
+def test_retrace_over_budget_rt201():
+    from repro.analysis.retrace import RetraceSanitizer
+    s = RetraceSanitizer()
+    fn = jax.jit(lambda x: x * 2)
+    w = s.watch("test:shape-storm", fn, budget=1, warmup=1)
+    for n in (2, 3, 4):  # every call a new shape -> a new compile
+        w(jnp.ones((n,)))
+    fs = s.findings()
+    assert [f.code for f in fs] == ["RT201"]
+    assert "3 compiles (budget 1)" in fs[0].message
+    with pytest.raises(AssertionError):
+        s.assert_ok()
+
+
+def test_retrace_late_retrace_rt202():
+    from repro.analysis.retrace import RetraceSanitizer
+    s = RetraceSanitizer()
+    fn = jax.jit(lambda x: x + 1)
+    w = s.watch("test:late", fn, budget=5, warmup=1)
+    w(jnp.ones((2,)))
+    w(jnp.ones((3,)))  # within budget but after warmup -> RT202
+    assert [f.code for f in s.findings()] == ["RT202"]
+
+
+def test_retrace_within_budget_clean(retrace_sanitizer):
+    fn = jax.jit(lambda x: x - 1)
+    w = retrace_sanitizer.watch("test:ok", fn, budget=1)
+    w(jnp.ones((4,)))
+    w(jnp.ones((4,)))  # cache hit
+    assert retrace_sanitizer.findings() == []
+    rep = retrace_sanitizer.report()["test:ok"]
+    assert rep["calls"] == 2 and rep["compiles"] == 1
+
+
+def test_engine_budget_table():
+    from repro.analysis.retrace import engine_budgets
+
+    class FakeEngine:
+        buckets = (16, 32, 64)
+    b = engine_budgets(FakeEngine())
+    assert b["serving/engine:decode"] == 1
+    assert b["serving/engine:prefill"] == 3
+
+
+# --------------------------------------------------------------------------
+# sharding coverage (SC)
+# --------------------------------------------------------------------------
+
+def test_coverage_unknown_param_leaf_sc301():
+    from repro import configs
+    from repro.analysis import coverage
+    cfg = configs.apply_overrides(configs.get_config("tinyllama-1.1b"),
+                                  reduced=True)
+    shapes = {"mystery_w": jax.ShapeDtypeStruct((128, 128), jnp.float32),
+              "ln1": jax.ShapeDtypeStruct((2, 64), jnp.float32)}
+    fs = coverage._check_params(cfg, shapes)
+    assert [f.code for f in fs] == ["SC301"]
+    assert "mystery_w" in fs[0].message  # exempt ln1 not flagged
+
+
+def test_coverage_unknown_cache_key_sc302():
+    from repro import configs
+    from repro.analysis import coverage
+    cfg = configs.apply_overrides(configs.get_config("tinyllama-1.1b"),
+                                  reduced=True)
+    fake = {"weird_state": jax.ShapeDtypeStruct((2, 4, 8), jnp.float32)}
+    fs = coverage._check_cache(cfg, fake)
+    assert [f.code for f in fs] == ["SC302"]
+    assert "weird_state" in fs[0].message
+
+
+def test_coverage_clean_on_all_families():
+    from repro.analysis import coverage
+    assert [f.render() for f in coverage.check()] == []
+
+
+# --------------------------------------------------------------------------
+# Pallas contracts (PC)
+# --------------------------------------------------------------------------
+
+def test_contracts_vmem_drift_pc401(monkeypatch):
+    from repro.analysis import contracts
+    from repro.kernels import approx_qgemm as qk
+    monkeypatch.setattr(qk, "fused_vmem_bytes", lambda *a: 0)
+    monkeypatch.setattr(qk, "stacked_vmem_bytes", lambda *a: 0)
+    fs = contracts._check_vmem_models()
+    assert fs and all(f.code == "PC401" for f in fs)
+
+
+def test_contracts_grid_divisibility_pc402():
+    from repro.analysis.contracts import PallasCapture, _check_grid
+    cap = PallasCapture(
+        kernel_name="_fused_kernel", grid=(2, 2, 3),
+        in_blocks=[((96, 100), 1)], out_blocks=[((96, 96), 4)],
+        scratch_bytes=0, operand_shapes=[(192, 512)])
+    fs = _check_grid(cap)
+    assert [f.code for f in fs] == ["PC402"]
+
+
+def test_contracts_dispatch_budget_pc403(monkeypatch):
+    from repro.analysis import contracts
+    from repro.kernels import approx_qgemm as qk
+    # declared model says "free" while $REPRO_VMEM_BUDGET shrinks the
+    # budget below any real working set -> dispatch would admit shapes
+    # that bust VMEM
+    monkeypatch.setattr(qk, "fused_vmem_bytes", lambda *a: 0)
+    monkeypatch.setenv("REPRO_VMEM_BUDGET", "4096")
+    fs = contracts._check_dispatch_consistency()
+    assert fs and all(f.code == "PC403" for f in fs)
+
+
+def test_contracts_ktail_mismatch_pc404(monkeypatch):
+    from repro.analysis import contracts
+    from repro.kernels import ops
+
+    def fake_gemm(a, b, spec, fused=True, **kw):
+        out = jnp.zeros((a.shape[0], b.shape[1]), jnp.float32)
+        return out if fused else out + 1  # fused != stacked
+    monkeypatch.setattr(ops, "approx_qgemm", fake_gemm)
+    fs = contracts._check_ktail()
+    assert [f.code for f in fs] == ["PC404"]
+
+
+def test_contracts_clean_on_kernels():
+    from repro.analysis import contracts
+    assert [f.render() for f in contracts.check()] == []
+
+
+def test_vmem_budget_env_override(monkeypatch):
+    from repro.kernels import dispatch
+    assert dispatch.vmem_budget_bytes() == dispatch.VMEM_BUDGET_BYTES
+    monkeypatch.setenv("REPRO_VMEM_BUDGET", str(1 << 20))
+    assert dispatch.vmem_budget_bytes() == 1 << 20
+    monkeypatch.setenv("REPRO_VMEM_BUDGET", "0x100000")
+    assert dispatch.vmem_budget_bytes() == 1 << 20
+    monkeypatch.setenv("REPRO_VMEM_BUDGET", "lots")
+    with pytest.raises(ValueError):
+        dispatch.vmem_budget_bytes()
+    monkeypatch.setenv("REPRO_VMEM_BUDGET", "-1")
+    with pytest.raises(ValueError):
+        dispatch.vmem_budget_bytes()
+
+
+# --------------------------------------------------------------------------
+# CLI
+# --------------------------------------------------------------------------
+
+def test_cli_json_report_clean_lint(tmp_path):
+    from repro.analysis import cli
+    out = tmp_path / "report.json"
+    rc = cli.run(["--checks", "jit", "--format", "json",
+                  "--out", str(out)])
+    assert rc == 0
+    rep = json.loads(out.read_text())
+    assert rep["checks"] == ["jit"] and rep["open"] == 0
+    assert rep["errors"] == []
+
+
+def test_cli_exit_1_on_findings_and_baseline_suppression(hazard_tree,
+                                                         tmp_path):
+    from repro.analysis import cli
+    assert cli.run(["--checks", "jit", "--root", str(hazard_tree)]) == 1
+    # a full baseline turns the same run green (exit 0, all suppressed)
+    bad = os.path.join("src", "repro", "bad.py")
+    baseline = tmp_path / "b.json"
+    baseline.write_text(json.dumps(
+        [{"code": c, "path": bad, "reason": "seeded"}
+         for c in ("JH101", "JH102", "JH103", "JH104")]))
+    out = tmp_path / "rep.json"
+    rc = cli.run(["--checks", "jit", "--root", str(hazard_tree),
+                  "--baseline", str(baseline), "--format", "json",
+                  "--out", str(out)])
+    assert rc == 0
+    rep = json.loads(out.read_text())
+    assert rep["open"] == 0 and rep["suppressed"] == 5
+
+
+def test_cli_rejects_unknown_checker():
+    from repro.analysis import cli
+    with pytest.raises(SystemExit):
+        cli.run(["--checks", "nope"])
+
+
+def test_checked_in_baseline_is_valid():
+    b = Baseline.load(os.path.join(REPO, "analysis-baseline.json"))
+    assert isinstance(b.entries, list)
+
+
+# --------------------------------------------------------------------------
+# docs stay in sync with the code registry
+# --------------------------------------------------------------------------
+
+def test_docs_list_every_finding_code():
+    doc = open(os.path.join(REPO, "docs", "ANALYSIS.md")).read()
+    for code, desc in fmod.CODES.items():
+        assert code in doc, f"docs/ANALYSIS.md missing {code}: {desc}"
+
+
+# --------------------------------------------------------------------------
+# shared bench-report schema checks (benchmarks/check_schema.py)
+# --------------------------------------------------------------------------
+
+def _load_check_schema():
+    spec = importlib.util.spec_from_file_location(
+        "check_schema", os.path.join(REPO, "benchmarks",
+                                     "check_schema.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_checked_in_bench_reports_pass_schema():
+    cs = _load_check_schema()
+    for name in ("BENCH_serving.json", "BENCH_gemm.json",
+                 "BENCH_codesign.json"):
+        path = os.path.join(REPO, name)
+        if not os.path.exists(path):
+            pytest.skip(f"{name} not committed")
+        kind = cs.check_report(json.load(open(path)))
+        assert kind == name[len("BENCH_"):-len(".json")]
+
+
+def test_schema_checker_rejects_mutations():
+    cs = _load_check_schema()
+    path = os.path.join(REPO, "BENCH_serving.json")
+    if not os.path.exists(path):
+        pytest.skip("BENCH_serving.json not committed")
+    r = json.load(open(path))
+    r["engine"]["completed"] += 1
+    with pytest.raises(AssertionError):
+        cs.check_report(r)
+    with pytest.raises(AssertionError):
+        cs.check_report({"bench": "mystery"})
+    # serving mesh expectation is enforced when supplied
+    r2 = json.load(open(path))
+    with pytest.raises(AssertionError):
+        cs.check_serving(r2, {"data": 512, "model": 2})

@@ -1,7 +1,5 @@
 """Carbon model, accelerator area model, dataflow perf model, GA-CDP."""
 
-import math
-
 import pytest
 
 from repro.core import accelerator as acc

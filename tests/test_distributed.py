@@ -3,7 +3,6 @@ parallelism, sharded train step.  Multi-device cases run in a subprocess
 with XLA_FLAGS=--xla_force_host_platform_device_count=8 so the main test
 process keeps its single real device (per the brief)."""
 
-import json
 import os
 import subprocess
 import sys

@@ -1,7 +1,6 @@
 """Approx-GEMM dispatch, quantization, layers, and gradients (STE)."""
 
 import numpy as np
-import pytest
 import jax
 import jax.numpy as jnp
 

@@ -7,7 +7,6 @@ matches the XLA reference within f32 ULPs (FMA contraction differences only).
 
 import numpy as np
 import pytest
-import jax
 import jax.numpy as jnp
 
 from repro.approx import gemm as G

@@ -3,8 +3,6 @@ dataflow model's die partition (per-die DRAM channel + D2D all-gather),
 the GA's die gene, scenario reporting, and the HardwareTarget bridge
 between the co-design and serving layers."""
 
-import dataclasses
-
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -90,7 +90,6 @@ def test_carbon_monotone_property(a1, a2, node):
        st.integers(0, 2 ** 31 - 1))
 def test_approx_gemm_linearity_in_k(m_, n_, k_, seed):
     """sum_k structure: concatenating along K adds contributions exactly."""
-    from repro.approx import gemm as G
     from repro.kernels import ref
     rng = np.random.default_rng(seed)
     mult = mm.truncated(2, 2)

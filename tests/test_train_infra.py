@@ -2,7 +2,6 @@
 synthetic data, end-to-end loss decrease."""
 
 import os
-import signal
 import subprocess
 import sys
 import tempfile
