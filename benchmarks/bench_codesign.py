@@ -21,7 +21,13 @@ Sections of the report:
                 kernel timing.
   * scenarios — (node x fab carbon intensity x workload) sweep, each point
                 solved by the batched GA, with analytical and calibrated
-                CDP.
+                CDP, plus the (carbon, delay) frontier of the final GA
+                population.
+  * total_carbon — the fleet loop closed into co-design: CDP winner vs
+                the amortized-embodied + operational winner under an
+                `repro.fleet.total.OperationalModel`, per scenario, with
+                at least one point where pricing operational carbon
+                changes the chosen design.
 """
 
 from __future__ import annotations
@@ -205,6 +211,15 @@ def main(argv=None) -> dict:
         if s["best"]["n_dies"] > 1 and s["best_monolithic"] is not None
         and s["best"]["cdp_constrained"] <
         s["best_monolithic"]["cdp_constrained"]]
+
+    # total-carbon axis: same pressure-point scenarios, winners compared
+    # under a deployment's operational model (grid CI, lifetime, D2D
+    # link power) — ground-truth exhaustive search, cheap at this space
+    from repro.fleet.total import OperationalModel
+    total_carbon = codesign.run_total_carbon(
+        codesign.multi_die_scenarios(), OperationalModel(),
+        mults=_parity_mults())
+
     report = {
         "bench": "codesign",
         "smoke": args.smoke,
@@ -216,6 +231,7 @@ def main(argv=None) -> dict:
         "calibration": calib.to_dict(),
         "scenarios": scenario_dicts,
         "multi_die_wins": multi_wins,
+        "total_carbon": total_carbon,
     }
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
@@ -248,6 +264,15 @@ def main(argv=None) -> dict:
               f"pkg {w['packaging_g']:.1f} g) cdp* "
               f"{w['cdp_constrained']:.3g} vs mono "
               f"{w['mono_cdp_constrained']:.3g}")
+    for s in total_carbon:
+        sc = s["scenario"]
+        tag = "DIFFERS" if s["differs"] else "same"
+        print(f"[bench_codesign] total-carbon {sc['workload']}@"
+              f"{sc['node_nm']}nm fps>={sc['fps_min']:.0f} "
+              f"ci_use={s['op']['ci_use_g_per_kwh']:.0f}: {tag}; "
+              f"total {s['total_winner']['total_g_per_inf']:.3e} vs "
+              f"cdp-design {s['cdp_winner']['total_g_per_inf']:.3e} g/inf "
+              f"({100 * s['total_reduction']:+.2f}%)")
     print(f"[bench_codesign] -> {args.out}")
     return report
 

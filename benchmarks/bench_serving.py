@@ -74,6 +74,12 @@ def main(argv=None) -> int:
     ap.add_argument("--uniform-sampling", action="store_true",
                     help="all-greedy trace (default mixes sampling params)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--meter", action="store_true",
+                    help="serve with a repro.fleet EnergyMeter attached: "
+                         "adds metrics.energy_j / co2e_g / "
+                         "co2e_g_per_token and per-request carbon")
+    ap.add_argument("--region", default="us-east",
+                    help="grid region for --meter intensity")
     ap.add_argument("--out", default="BENCH_serving.json")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny trace on the reduced config (CI)")
@@ -100,8 +106,14 @@ def main(argv=None) -> int:
                        args.seed, not args.uniform_sampling)
 
     from repro.launch.mesh import make_mesh_from_spec
+    meter = None
+    if args.meter:
+        from repro.fleet import DevicePowerModel, EnergyMeter, StaticGrid
+        meter = EnergyMeter(power=DevicePowerModel(),
+                            grid=StaticGrid(args.region))
     eng = Engine(cfg, capacity=args.capacity, max_len=args.max_len,
-                 seed=args.seed, mesh=make_mesh_from_spec(args.mesh))
+                 seed=args.seed, mesh=make_mesh_from_spec(args.mesh),
+                 meter=meter)
     sanitizer = None
     if args.sanitize_retrace:
         # budgets count from here, so the warmup compiles are the ONLY
@@ -169,6 +181,19 @@ def main(argv=None) -> int:
         },
         "engine": stats,
     }
+    if meter is not None:
+        # per-request attribution over the measured trace (the engine's
+        # cumulative counters in stats["carbon"] also include warmup)
+        energy_j = sum(c.carbon.energy_j for c in done)
+        co2e_g = sum(c.carbon.co2e_g for c in done)
+        report["metrics"]["energy_j"] = energy_j
+        report["metrics"]["co2e_g"] = co2e_g
+        report["metrics"]["co2e_g_per_token"] = co2e_g / max(total_toks, 1)
+        report["metrics"]["energy_j_per_token"] = (
+            energy_j / max(total_toks, 1))
+        report["carbon"] = {"region": meter.region,
+                            "g_per_kwh": meter.g_per_kwh_now(),
+                            "power": stats["carbon"]["power"]}
     retrace_findings = []
     if sanitizer is not None:
         retrace_findings = sanitizer.findings()
@@ -189,6 +214,10 @@ def main(argv=None) -> int:
           f"p95 {m['latency_p95_s'] * 1e3:.0f}ms, "
           f"ttft p50 {m['ttft_p50_s'] * 1e3:.0f}ms "
           f"p95 {m['ttft_p95_s'] * 1e3:.0f}ms -> {args.out}")
+    if meter is not None:
+        print(f"[bench_serving] carbon ({meter.region}): "
+              f"{m['energy_j']:.2f} J, {m['co2e_g']:.3e} gCO2e, "
+              f"{m['co2e_g_per_token']:.3e} g/token")
     if sanitizer is not None:
         compiles = {n: w["compiles"]
                     for n, w in sanitizer.report().items()}

@@ -21,7 +21,8 @@ import json
 import sys
 
 
-def check_serving(r: dict, expect_mesh: dict | None = None) -> None:
+def check_serving(r: dict, expect_mesh: dict | None = None,
+                  expect_carbon: bool = False) -> None:
     assert r["bench"] == "serving", r.get("bench")
     assert r["engine"]["completed"] == r["trace"]["requests"], r
     # per-request TTFT percentiles + queue-wait/eviction accounting
@@ -40,6 +41,17 @@ def check_serving(r: dict, expect_mesh: dict | None = None) -> None:
         assert r["retrace"]["ok"] is True, r["retrace"]["findings"]
         w = r["retrace"]["watches"]
         assert w["serving/engine:decode"]["compiles"] == 1, w
+    if expect_carbon or "carbon" in r:  # bench ran with --meter
+        assert {"energy_j", "co2e_g", "co2e_g_per_token",
+                "energy_j_per_token"} <= set(m), m
+        assert m["energy_j"] > 0 and m["co2e_g"] > 0, m
+        assert m["co2e_g_per_token"] > 0, m
+        c = r["carbon"]
+        assert c["g_per_kwh"] > 0 and c["region"], c
+        # per-token figure must be consistent with the totals
+        tol = 1e-9 + 1e-6 * m["co2e_g"]
+        assert abs(m["co2e_g_per_token"] * m["total_tokens"]
+                   - m["co2e_g"]) <= tol, m
 
 
 def check_gemm(r: dict) -> None:
@@ -95,6 +107,19 @@ def check_codesign(r: dict) -> None:
     nodes = {s["scenario"]["node_nm"] for s in r["scenarios"]}
     cis = {s["scenario"]["ci_fab_g_per_kwh"] for s in r["scenarios"]}
     assert len(nodes) >= 2 and len(cis) >= 2, (nodes, cis)
+    # carbon/delay frontier of the final GA population per scenario:
+    # nondominated and sorted by carbon
+    for s in r["scenarios"]:
+        fr = s["frontier"]
+        assert fr, s["scenario"]
+        carbons = [p["carbon_g"] for p in fr]
+        delays = [p["delay_s"] for p in fr]
+        assert carbons == sorted(carbons), fr
+        assert all(c > 0 and d > 0 for c, d in zip(carbons, delays)), fr
+        # sorted by carbon ascending => delay must descend (no point may
+        # dominate another)
+        assert all(delays[i] >= delays[i + 1]
+                   for i in range(len(fr) - 1)), fr
     # multi-die co-design is live: at least one scenario where the
     # GA selects >1 die AND beats the best monolithic design on the
     # constrained-CDP fitness, with yield/packaging recorded
@@ -103,20 +128,75 @@ def check_codesign(r: dict) -> None:
         assert w["n_dies"] > 1 and 0 < w["die_yield"] <= 1, w
         assert w["packaging_g"] > 0, w
         assert w["cdp_constrained"] < w["mono_cdp_constrained"], w
+    # total-carbon axis: embodied + operational per inference, and at
+    # least one scenario where pricing operational carbon changes the
+    # winning design vs pure CDP
+    tc = r["total_carbon"]
+    assert len(tc) >= 2, tc
+    for s in tc:
+        for k in ("cdp_winner", "total_winner"):
+            d = s[k]
+            assert d["total_g_per_inf"] > 0, s
+            assert d["operational_g_per_inf"] >= 0, s
+            assert d["embodied_g_per_inf"] > 0, s
+            lo = d["total_g_per_inf"] * (1 - 1e-6)
+            hi = d["total_g_per_inf"] * (1 + 1e-6)
+            assert (lo <= d["operational_g_per_inf"]
+                    + d["embodied_g_per_inf"] <= hi), s
+        # the total-carbon optimum can't be beaten by the CDP design
+        assert (s["total_winner"]["total_g_per_inf"]
+                <= s["cdp_winner"]["total_g_per_inf"] * (1 + 1e-6)), s
+        assert {"ci_use_g_per_kwh", "lifetime_s", "util",
+                "die_w"} <= set(s["op"]), s
+    assert any(s["differs"] for s in tc), \
+        "no scenario where the total-carbon winner differs from CDP"
+
+
+def check_fleet(r: dict) -> None:
+    assert r["bench"] == "fleet", r.get("bench")
+    reps = r["replicas"]
+    assert len(reps) >= 2, reps
+    regions = {p["region"] for p in reps}
+    assert len(regions) >= 2, regions   # different-intensity fleet
+    for p in reps:
+        assert {"name", "region", "alive", "routed", "completed",
+                "carbon"} <= set(p), p
+        assert p["carbon"]["energy_j"] >= 0, p
+    # routing follows the grid: most requests went to the cleanest
+    # live region at their routing instant
+    assert r["routing"]["low_carbon_share"] >= 0.5, r["routing"]
+    # failover: a replica was killed mid-trace, its in-flight work
+    # re-queued, and NOTHING was lost
+    fo = r["failover"]
+    assert fo["killed"], fo
+    assert fo["requeued"] >= 1, fo
+    assert fo["lost"] == 0, fo
+    assert r["totals"]["completed"] == r["totals"]["submitted"], r["totals"]
+    # SLO held under carbon-aware placement
+    slo = r["slo"]
+    assert slo["ttft_p95_ticks"] <= slo["ttft_slo_ticks"], slo
+    # metering on: per-token CO2e recorded and consistent
+    t = r["totals"]
+    assert t["energy_j"] > 0 and t["co2e_g"] > 0, t
+    tol = 1e-9 + 1e-6 * t["co2e_g"]
+    assert abs(t["co2e_g_per_token"] * t["tokens"] - t["co2e_g"]) <= tol, t
+    if "retrace" in r:  # bench ran with --sanitize-retrace
+        assert r["retrace"]["ok"] is True, r["retrace"]["findings"]
 
 
 CHECKS = {"serving": check_serving, "gemm": check_gemm,
-          "codesign": check_codesign}
+          "codesign": check_codesign, "fleet": check_fleet}
 
 
-def check_report(r: dict, expect_mesh: dict | None = None) -> str:
+def check_report(r: dict, expect_mesh: dict | None = None,
+                 expect_carbon: bool = False) -> str:
     """Dispatch on the report's "bench" field; returns the kind."""
     kind = r.get("bench")
     if kind not in CHECKS:
         raise AssertionError(
             f"unknown bench report kind {kind!r}; known: {list(CHECKS)}")
     if kind == "serving":
-        check_serving(r, expect_mesh)
+        check_serving(r, expect_mesh, expect_carbon)
     else:
         CHECKS[kind](r)
     return kind
@@ -136,13 +216,16 @@ def main(argv=None) -> int:
     ap.add_argument("--expect-mesh", default=None,
                     help="required engine mesh for serving reports, "
                          "e.g. data=4,model=2")
+    ap.add_argument("--expect-carbon", action="store_true",
+                    help="require serving reports to carry the --meter "
+                         "energy/CO2e metrics")
     args = ap.parse_args(argv)
     mesh = _parse_mesh(args.expect_mesh) if args.expect_mesh else None
     for path in args.reports:
         with open(path) as f:
             r = json.load(f)
         try:
-            kind = check_report(r, mesh)
+            kind = check_report(r, mesh, args.expect_carbon)
         except AssertionError as e:
             print(f"[check_schema] {path}: FAIL\n{e}", file=sys.stderr)
             return 1

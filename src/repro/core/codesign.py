@@ -20,6 +20,8 @@ from __future__ import annotations
 import dataclasses
 import time
 
+import numpy as np
+
 from . import accelerator as accmod
 from . import calibrate as calmod
 from . import carbon as carbonmod
@@ -193,6 +195,10 @@ class ScenarioResult:
     cdp_calibrated: float | None   # CDP under measured (not modeled) delay
     wall_s: float
     mono: gamod.Evaluated | None = None   # best monolithic (die gene = 1)
+    #: nondominated (carbon_g, delay_s) points of the final GA
+    #: population (feasible designs only, <= _FRONTIER_MAX points) —
+    #: the carbon/delay trade space behind the single CDP winner.
+    frontier: list[dict] | None = None
 
     @staticmethod
     def _design_dict(e: gamod.Evaluated) -> dict:
@@ -229,7 +235,34 @@ class ScenarioResult:
             "ga_reduction": self.ga_reduction,
             "cdp_calibrated": self.cdp_calibrated,
             "wall_s": self.wall_s,
+            "frontier": self.frontier,
         }
+
+
+_FRONTIER_MAX = 16
+
+
+def population_frontier(metrics: dict, max_points: int = _FRONTIER_MAX
+                        ) -> list[dict]:
+    """(carbon_g, delay_s) nondominated front of a final GA population
+    (`BatchedGAResult.metrics` arrays).  Feasible designs only; unique
+    objective points; evenly thinned to `max_points`."""
+    ok = (np.asarray(metrics["feasible"], bool)
+          & np.isfinite(np.asarray(metrics["fitness"], float)))
+    if not ok.any():
+        return []
+    carbon = np.asarray(metrics["carbon_g"], float)[ok]
+    fps = np.asarray(metrics["fps"], float)[ok]
+    pts = np.unique(np.stack(
+        [carbon, 1.0 / np.maximum(fps, 1e-9)], axis=1), axis=0)
+    idx = paretomod.nondominated_front(pts)
+    if len(idx) > max_points:
+        keep = np.unique(np.linspace(0, len(idx) - 1, max_points)
+                         .round().astype(int))
+        idx = idx[keep]
+    return [{"carbon_g": float(pts[i, 0]), "delay_s": float(pts[i, 1]),
+             "fps": float(1.0 / pts[i, 1]),
+             "cdp": float(pts[i, 0] * pts[i, 1])} for i in idx]
 
 
 def run_scenarios(scenarios: list[Scenario],
@@ -278,5 +311,76 @@ def run_scenarios(scenarios: list[Scenario],
             scenario=sc, best=res.best, exact=exact,
             ga_reduction=1.0 - res.best.carbon_g / exact.carbon_g,
             cdp_calibrated=cdp_cal, wall_s=time.perf_counter() - t0,
-            mono=mono))
+            mono=mono, frontier=population_frontier(res.metrics)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Total-carbon axis: embodied + operational, closing the fleet loop.
+# ---------------------------------------------------------------------------
+
+def run_total_carbon(scenarios: list[Scenario], op,
+                     mults: list[mm.ApproxMultiplier] | None = None,
+                     accuracy_fn: gamod.AccuracyFn =
+                     gamod.proxy_accuracy_drop,
+                     fps_penalty: float = 50.0) -> list[dict]:
+    """Per scenario: the CDP winner vs the **total-carbon** winner
+    (amortized embodied + operational gCO2e per inference under `op`,
+    an `repro.fleet.total.OperationalModel`), both by exhaustive search
+    over the design space, so a differing winner is a property of the
+    objectives — not GA noise.  The same objective is available to the
+    batched GA via `BatchedGAConfig(objective="total_carbon")`; this
+    reporting path uses ground truth.
+
+    The winners genuinely diverge because CDP caps the fps credit at the
+    floor (speed headroom is worthless) while the operational term's
+    race-to-idle rewards real speed, and chiplet designs cut embodied
+    carbon (yield) but pay die-to-die link energy every inference."""
+    from . import ga_batched as gbmod
+    if mults is None:
+        mults = paretomod.default_front() + list(mm.static_library().values())
+    spaces: dict[tuple, "gbmod.DesignSpace"] = {}
+    out = []
+    tc_keys = ("total_g_per_inf", "operational_g_per_inf",
+               "embodied_g_per_inf", "energy_j_per_inf")
+
+    def design(space, sc, genome, met):
+        ev = gamod.evaluate(genome, sc.workload, sc.node_nm,
+                            list(space.mults), sc.fps_min,
+                            gamod.GAConfig(fps_penalty=fps_penalty),
+                            ci_fab=sc.ci_fab)
+        d = ScenarioResult._design_dict(ev)
+        d.update({k: float(met[k]) for k in tc_keys})
+        return d
+
+    for sc in scenarios:
+        key = (sc.workload, sc.node_nm, sc.fps_min, sc.max_accuracy_drop)
+        if key not in spaces:
+            spaces[key] = gbmod.build_space(
+                sc.workload, sc.node_nm, sc.fps_min, sc.max_accuracy_drop,
+                mults=mults, accuracy_fn=accuracy_fn)
+        space = dataclasses.replace(spaces[key], ci_fab=sc.ci_fab, op=op)
+        g_cdp, m_cdp = gbmod.exhaustive_best(space, fps_penalty,
+                                             objective="cdp")
+        g_tot, m_tot = gbmod.exhaustive_best(space, fps_penalty,
+                                             objective="total_carbon")
+        differs = (dataclasses.astuple(g_cdp) != dataclasses.astuple(g_tot))
+        out.append({
+            "scenario": {"workload": sc.workload, "node_nm": sc.node_nm,
+                         "ci_fab_g_per_kwh": sc.ci_fab,
+                         "fps_min": sc.fps_min,
+                         "max_accuracy_drop": sc.max_accuracy_drop},
+            "op": {"ci_use_g_per_kwh": op.ci_use_g_per_kwh,
+                   "lifetime_s": op.lifetime_s, "util": op.util,
+                   "idle_frac": op.idle_frac, "die_w": op.die_w,
+                   "energy_scale": op.energy_scale},
+            "cdp_winner": design(space, sc, g_cdp, m_cdp),
+            "total_winner": design(space, sc, g_tot, m_tot),
+            "differs": differs,
+            # what pricing operational carbon saves vs shipping the CDP
+            # design into this deployment
+            "total_reduction": float(
+                1.0 - m_tot["total_g_per_inf"]
+                / max(m_cdp["total_g_per_inf"], 1e-30)),
+        })
     return out

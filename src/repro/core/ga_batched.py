@@ -29,7 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Sequence
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -58,6 +58,10 @@ class BatchedGAConfig:
     seed: int = 0
     fps_penalty: float = 50.0
     elitism: int = 2
+    #: "cdp" (the paper's embodied-carbon-x-delay fitness) or
+    #: "total_carbon" (amortized embodied + operational gCO2e per
+    #: inference; requires `DesignSpace.op`, see `repro.fleet.total`).
+    objective: str = "cdp"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,6 +86,11 @@ class DesignSpace:
     exact_idx: int            # fallback gene for constraint masking
     dies: np.ndarray          # (n_die,) die counts (gamod.DIE_CHOICES)
     die_ok: np.ndarray        # (n_pe, n_aspect, n_die) bool — even splits
+    #: operational-carbon model for the "total_carbon" objective.
+    #: Duck-typed (`repro.fleet.total.OperationalModel` in practice:
+    #: scalar fields ci_use_g_per_kwh / lifetime_s / util / idle_frac
+    #: plus `pe_active_w(node_nm)`) so core never imports fleet.
+    op: Any = None
 
     @property
     def gene_sizes(self) -> tuple[int, ...]:
@@ -97,10 +106,14 @@ class DesignSpace:
 
     def tables(self) -> dict:
         f32 = functools.partial(jnp.asarray, dtype=jnp.float32)
-        return {
+        t = {
             "rows": f32(self.rows), "cols": f32(self.cols),
             "num_pes": f32(self.num_pes), "rf": f32(self.rf_bytes),
             "glb": f32(self.glb_kib), "mult_area": f32(self.mult_area),
+            # multiplier-array energy scale: area ratio vs the exact
+            # design (approx multipliers are smaller AND lower power)
+            "mult_escale": f32(self.mult_area
+                               / self.mult_area[self.exact_idx]),
             "allowed": jnp.asarray(self.mult_allowed),
             "fps": f32(self.fps_table),
             "dies": f32(self.dies),
@@ -111,6 +124,14 @@ class DesignSpace:
                 else self.ci_fab),
             "fps_min": jnp.float32(self.fps_min),
         }
+        if self.op is not None:
+            t["op_ci_use"] = jnp.float32(self.op.ci_use_g_per_kwh)
+            t["op_life_s"] = jnp.float32(self.op.lifetime_s)
+            t["op_util"] = jnp.float32(self.op.util)
+            t["op_idle_frac"] = jnp.float32(self.op.idle_frac)
+            t["op_die_w"] = jnp.float32(self.op.die_w)
+            t["op_pe_w"] = jnp.float32(self.op.pe_active_w(self.node_nm))
+        return t
 
     def decode(self, genome_row: np.ndarray) -> gamod.Genome:
         return gamod.Genome(*(int(g) for g in genome_row))
@@ -121,7 +142,8 @@ def build_space(workload: str, node_nm: int, fps_min: float,
                 mults: Sequence[mm.ApproxMultiplier] | None = None,
                 accuracy_fn: gamod.AccuracyFn = gamod.proxy_accuracy_drop,
                 ci_fab: float | None = None,
-                dram_gbps: float = 19.2) -> DesignSpace:
+                dram_gbps: float = 19.2,
+                op: Any = None) -> DesignSpace:
     """Resolve the genome design space into gatherable arrays, including
     the FPS lattice from the batched dataflow model."""
     if mults is None:
@@ -174,7 +196,7 @@ def build_space(workload: str, node_nm: int, fps_min: float,
         mult_area=np.array([m.area_nand2eq for m in mults]),
         mult_allowed=allowed,
         fps_table=fps_table, exact_idx=exact_idx,
-        dies=dies, die_ok=die_ok)
+        dies=dies, die_ok=die_ok, op=op)
 
 
 # ---------------------------------------------------------------------------
@@ -182,9 +204,13 @@ def build_space(workload: str, node_nm: int, fps_min: float,
 # ---------------------------------------------------------------------------
 
 def _metrics(pop: jnp.ndarray, t: dict, node_nm: int,
-             fps_penalty: float) -> dict:
-    """CDP fitness of a (P, 6) genome array — pure gathers + elementwise
-    array math, no Python per-genome work."""
+             fps_penalty: float, objective: str = "cdp") -> dict:
+    """Fitness of a (P, 6) genome array — pure gathers + elementwise
+    array math, no Python per-genome work.  `objective` picks what the
+    GA minimizes: "cdp" (embodied carbon x delay) or "total_carbon"
+    (amortized embodied + operational gCO2e per inference — the batched
+    twin of `repro.fleet.total.total_carbon_g_per_inf`; requires the op_*
+    table scalars from `DesignSpace.op`)."""
     pe, aspect, rf, glb, mult, die = (pop[:, i] for i in range(N_GENES))
     fps = t["fps"][pe, aspect, glb, die]
     n_dies = t["dies"][die]
@@ -200,23 +226,52 @@ def _metrics(pop: jnp.ndarray, t: dict, node_nm: int,
     # (speed beyond the requirement must not buy carbon headroom), with
     # a superlinear penalty under the floor.
     eff = jnp.where(fps_min > 0, jnp.minimum(fps, fps_min), fps)
-    fitness = carbonmod.cdp_arr(carbon, eff)
+    out = {"fps": fps, "area_mm2": area, "carbon_g": carbon, "cdp": cdp,
+           "n_dies": n_dies, "die_area_mm2": die_area}
+    if "op_pe_w" in t:
+        # operational term (see fleet/total.py for the derivation):
+        # race-to-idle active energy + duty-cycle idle tail, amortized
+        # embodied over lifetime inferences at the duty-cycled rate.
+        escale = t["mult_escale"][mult]
+        p_active = (t["op_pe_w"] * t["num_pes"][pe]
+                    * (0.5 + 0.5 * escale)
+                    + t["op_die_w"] * jnp.maximum(n_dies - 1.0, 0.0))
+        p_idle = t["op_idle_frac"] * p_active
+        e_inf = (p_active / fps
+                 + p_idle * jnp.maximum(0.0, 1.0 / eff - 1.0 / fps))
+        op_g = e_inf / 3.6e6 * t["op_ci_use"]
+        emb_g = carbon / (t["op_life_s"] * t["op_util"] * eff)
+        out["energy_j_per_inf"] = e_inf
+        out["operational_g_per_inf"] = op_g
+        out["embodied_g_per_inf"] = emb_g
+        out["total_g_per_inf"] = emb_g + op_g
+    if objective == "total_carbon":
+        if "op_pe_w" not in t:
+            raise ValueError(
+                "objective='total_carbon' needs DesignSpace.op (an "
+                "OperationalModel) to supply the op_* tables")
+        fitness = out["total_g_per_inf"]
+    elif objective == "cdp":
+        fitness = carbonmod.cdp_arr(carbon, eff)
+    else:
+        raise ValueError(f"unknown objective {objective!r}")
     deficit = (fps_min - fps) / jnp.maximum(fps_min, 1e-9)
     penalized = fitness * (1.0 + fps_penalty * deficit * (1.0 + deficit))
     fitness = jnp.where((fps_min > 0) & (fps < fps_min), penalized, fitness)
     # constraint mask: accuracy-infeasible multiplier genes and uneven die
     # splits never score
     feasible = t["allowed"][mult] & t["die_ok"][pe, aspect, die]
-    fitness = jnp.where(feasible, fitness, jnp.inf)
-    return {"fps": fps, "area_mm2": area, "carbon_g": carbon, "cdp": cdp,
-            "fitness": fitness, "feasible": feasible,
-            "n_dies": n_dies, "die_area_mm2": die_area}
+    out["fitness"] = jnp.where(feasible, fitness, jnp.inf)
+    out["feasible"] = feasible
+    return out
 
 
-@functools.partial(jax.jit, static_argnames=("node_nm", "fps_penalty"))
+@functools.partial(jax.jit,
+                   static_argnames=("node_nm", "fps_penalty", "objective"))
 def evaluate_population(pop: jnp.ndarray, tables: dict, node_nm: int,
-                        fps_penalty: float = 50.0) -> dict:
-    return _metrics(pop, tables, node_nm, fps_penalty)
+                        fps_penalty: float = 50.0,
+                        objective: str = "cdp") -> dict:
+    return _metrics(pop, tables, node_nm, fps_penalty, objective)
 
 
 def _random_genes(key: jnp.ndarray, n: int, gene_sizes: tuple[int, ...],
@@ -247,16 +302,17 @@ def _snap_die_gene(pop: jnp.ndarray, die_ok: jnp.ndarray) -> jnp.ndarray:
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "node_nm", "gene_sizes", "tournament", "elitism", "fps_penalty"))
+    "node_nm", "gene_sizes", "tournament", "elitism", "fps_penalty",
+    "objective"))
 def _ga_step(key: jnp.ndarray, pop: jnp.ndarray, tables: dict,
              node_nm: int, gene_sizes: tuple[int, ...], tournament: int,
              elitism: int, p_crossover: float, p_mutate: float,
-             fps_penalty: float):
+             fps_penalty: float, objective: str = "cdp"):
     """One generation — selection, crossover, mutation, constraint
     masking — as a single device program over the whole population."""
     t = tables
     P = pop.shape[0]
-    fit = _metrics(pop, t, node_nm, fps_penalty)["fitness"]
+    fit = _metrics(pop, t, node_nm, fps_penalty, objective)["fitness"]
     order = jnp.argsort(fit)
     k_sel, k_cross, k_genes, k_mut, k_rand = jax.random.split(key, 5)
 
@@ -305,23 +361,30 @@ def run_ga_batched(workload: str, node_nm: int, fps_min: float,
                    accuracy_fn: gamod.AccuracyFn = gamod.proxy_accuracy_drop,
                    cfg: BatchedGAConfig | None = None,
                    ci_fab: float | None = None,
-                   space: DesignSpace | None = None) -> BatchedGAResult:
-    """CDP-minimizing GA over a whole population per device step.  The
-    returned `best` is re-evaluated through the numpy reference
-    (`ga.evaluate`), so reported numbers are the reference model's."""
+                   space: DesignSpace | None = None,
+                   op: Any = None) -> BatchedGAResult:
+    """Carbon-minimizing GA over a whole population per device step
+    (objective per `cfg.objective`: CDP, or total carbon when an
+    operational model is supplied).  The returned `best` is re-evaluated
+    through the numpy reference (`ga.evaluate`), so reported CDP numbers
+    are the reference model's."""
     cfg = cfg or BatchedGAConfig()
     if space is None:
         space = build_space(workload, node_nm, fps_min, max_accuracy_drop,
                             mults=mults, accuracy_fn=accuracy_fn,
-                            ci_fab=ci_fab)
-    else:
-        # a prebuilt space must describe THIS problem: the GA searches on
-        # the space's tables but reports through the args
-        got = (space.workload, space.node_nm, space.fps_min,
-               space.max_accuracy_drop)
-        want = (workload, node_nm, fps_min, max_accuracy_drop)
-        if got != want:
-            raise ValueError(f"space {got} != requested problem {want}")
+                            ci_fab=ci_fab, op=op)
+    elif op is not None and space.op is None:
+        space = dataclasses.replace(space, op=op)
+    if cfg.objective == "total_carbon" and space.op is None:
+        raise ValueError("objective='total_carbon' requires an "
+                         "OperationalModel (op=... or space.op)")
+    # a prebuilt space must describe THIS problem: the GA searches on
+    # the space's tables but reports through the args
+    got = (space.workload, space.node_nm, space.fps_min,
+           space.max_accuracy_drop)
+    want = (workload, node_nm, fps_min, max_accuracy_drop)
+    if got != want:
+        raise ValueError(f"space {got} != requested problem {want}")
     tables = space.tables()
     gene_sizes = space.gene_sizes
     key = jax.random.PRNGKey(cfg.seed)
@@ -334,10 +397,12 @@ def run_ga_batched(workload: str, node_nm: int, fps_min: float,
         key, k_step = jax.random.split(key)
         pop, best_fit, _ = _ga_step(
             k_step, pop, tables, space.node_nm, gene_sizes, cfg.tournament,
-            cfg.elitism, cfg.p_crossover, cfg.p_mutate_gene, cfg.fps_penalty)
+            cfg.elitism, cfg.p_crossover, cfg.p_mutate_gene, cfg.fps_penalty,
+            cfg.objective)
         history.append(float(best_fit))
 
-    final = evaluate_population(pop, tables, space.node_nm, cfg.fps_penalty)
+    final = evaluate_population(pop, tables, space.node_nm, cfg.fps_penalty,
+                                cfg.objective)
     final = {k: np.asarray(v) for k, v in final.items()}
     best_row = np.asarray(pop)[int(np.argmin(final["fitness"]))]
     history.append(float(final["fitness"].min()))
@@ -353,8 +418,8 @@ def run_ga_batched(workload: str, node_nm: int, fps_min: float,
 
 
 def exhaustive_best(space: DesignSpace, fps_penalty: float = 50.0,
-                    max_dies: int | None = None
-                    ) -> tuple[gamod.Genome, dict]:
+                    max_dies: int | None = None,
+                    objective: str = "cdp") -> tuple[gamod.Genome, dict]:
     """Ground truth by brute force: evaluate EVERY genome in the space in
     one batched call (the space is small enough that the batched model
     makes exhaustive search cheaper than the sequential GA's first
@@ -367,7 +432,7 @@ def exhaustive_best(space: DesignSpace, fps_penalty: float = 50.0,
     if max_dies is not None:
         pop = pop[space.dies[pop[:, DIE_GENE]] <= max_dies]
     met = evaluate_population(jnp.asarray(pop), space.tables(),
-                              space.node_nm, fps_penalty)
+                              space.node_nm, fps_penalty, objective)
     met = {k: np.asarray(v) for k, v in met.items()}
     i = int(np.argmin(met["fitness"]))
     return space.decode(pop[i]), {k: v[i] for k, v in met.items()}

@@ -68,14 +68,13 @@ def _evaluate(mask: np.ndarray, ta: int, tb: int) -> tuple[float, float]:
 
 
 def _nondominated_sort(objs: np.ndarray) -> list[np.ndarray]:
-    """objs (n, 2) minimize-both -> list of index arrays per front."""
+    """objs (n, m) minimize-all -> list of index arrays per front.
+
+    i dominates j iff i is <= j on every objective and < on at least
+    one (works for any m >= 1; the NSGA-II loop uses m = 2)."""
     n = len(objs)
-    dominates = (
-        (objs[:, None, 0] <= objs[None, :, 0])
-        & (objs[:, None, 1] <= objs[None, :, 1])
-        & ((objs[:, None, 0] < objs[None, :, 0])
-           | (objs[:, None, 1] < objs[None, :, 1]))
-    )
+    dominates = (np.all(objs[:, None, :] <= objs[None, :, :], axis=-1)
+                 & np.any(objs[:, None, :] < objs[None, :, :], axis=-1))
     dom_count = dominates.sum(axis=0)  # how many dominate i
     fronts: list[np.ndarray] = []
     remaining = np.arange(n)
@@ -91,6 +90,22 @@ def _nondominated_sort(objs: np.ndarray) -> list[np.ndarray]:
             counts[dominates[i]] -= 1
         remaining = np.array([r for r in remaining if mask[r]], dtype=int)
     return fronts
+
+
+def nondominated_front(points: np.ndarray) -> np.ndarray:
+    """Indices of the nondominated rows of `points` (n, m objectives,
+    all minimized), sorted ascending by the first objective.
+
+    Public surface for frontier reporting outside the NSGA loop — e.g.
+    `core.codesign` extracts the (carbon, delay) frontier of a final GA
+    population with it."""
+    pts = np.asarray(points, dtype=float)
+    if pts.ndim != 2:
+        raise ValueError(f"points must be (n, m), got shape {pts.shape}")
+    if len(pts) == 0:
+        return np.empty((0,), dtype=int)
+    front = _nondominated_sort(pts)[0]
+    return front[np.argsort(pts[front, 0], kind="stable")]
 
 
 def _crowding(objs: np.ndarray, front: np.ndarray) -> np.ndarray:

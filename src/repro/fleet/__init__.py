@@ -1,0 +1,50 @@
+"""Operational-carbon fleet layer: metering, grid intensity, routing,
+and the total-carbon objective.
+
+The core package optimizes *embodied* carbon at design time (Eq. 1-2 +
+the CDP GA); this package closes the serve-time half of the loop:
+
+  * `grid.py`   — grid carbon-intensity providers (static region table,
+                  replayable time-varying traces);
+  * `meter.py`  — codecarbon-style energy/CO2eq metering around the
+                  serving engine (per-step power model x measured step
+                  time, attributed per request and per token);
+  * `replica.py`/`router.py` — a multi-replica fleet driver that routes
+                  by live grid intensity x SLO headroom and survives
+                  replica death without losing requests;
+  * `total.py`  — amortized-embodied + operational total-carbon
+                  objective, consumed by `core/ga_batched.py` /
+                  `core/codesign.py` as a scenario axis.
+
+`grid`, `meter`, and `total` are dependency-light (numpy-free host
+code); `replica`/`router` pull in the serving engine and are imported
+lazily so `from repro.fleet import total` stays cheap.
+"""
+
+from repro.fleet import grid, meter, total
+from repro.fleet.grid import (REGION_INTENSITY_G_PER_KWH, GridProvider,
+                              StaticGrid, TraceGrid, diurnal_trace)
+from repro.fleet.meter import DevicePowerModel, EnergyMeter, RequestCarbon
+from repro.fleet.total import OperationalModel
+
+__all__ = [
+    "grid", "meter", "total",
+    "REGION_INTENSITY_G_PER_KWH", "GridProvider", "StaticGrid",
+    "TraceGrid", "diurnal_trace",
+    "DevicePowerModel", "EnergyMeter", "RequestCarbon",
+    "OperationalModel",
+    "Fleet", "FleetConfig", "Replica", "ReplicaDead",
+]
+
+_LAZY = {"Fleet": "repro.fleet.router", "FleetConfig": "repro.fleet.router",
+         "Replica": "repro.fleet.replica",
+         "ReplicaDead": "repro.fleet.replica",
+         "router": "repro.fleet.router", "replica": "repro.fleet.replica"}
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        import importlib
+        mod = importlib.import_module(_LAZY[name])
+        return mod if name in ("router", "replica") else getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,166 @@
+"""One fleet replica: a serving Engine pinned to a region.
+
+A `Replica` owns an `Engine` (with its own `HardwareTarget` / mesh, so a
+fleet can mix accelerator designs), a grid-intensity provider for its
+region, an `EnergyMeter`, and the fault hooks from `train/fault.py`:
+
+  * a `StragglerWatchdog` times every engine step and flags steps that
+    blow past the running median — the degradation signal the router
+    folds into its health view;
+  * death is an *exception out of `step()`*: anything the engine raises
+    (a real crash) or an injected `ReplicaDead` (tests / chaos drills)
+    marks the replica dead, exactly like the crash boundary
+    `fault.run_with_restarts` supervises for training.  The router then
+    drains `pending_requests()` and re-queues them elsewhere — the
+    fleet-level analogue of checkpoint-restart.
+
+The replica's grid clock is its engine's virtual tick scaled by
+`seconds_per_tick` (router-visible, deterministic); the meter runs on
+measured seconds (see `fleet/meter.py`).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+from repro.fleet.grid import GridProvider, StaticGrid
+from repro.fleet.meter import DevicePowerModel, EnergyMeter
+from repro.serving import Completion, Request
+from repro.serving.engine import Engine
+from repro.train import fault
+
+
+class ReplicaDead(RuntimeError):
+    """Raised by a replica step after `inject_fault()` (and wrapped
+    around real engine crashes) — the router's failover trigger."""
+
+
+class Replica:
+    """Engine + region + meter + fault hooks, with a submit/step surface
+    the router drives.
+
+    Args:
+      name: fleet-unique replica name.
+      cfg: model config for the engine.
+      grid: region grid-intensity provider (default: static us-east).
+      power: device power model (default: derived from `target` when one
+        is given, else the generic edge-TDP default).
+      target: optional `HardwareTarget`; forwarded to the Engine (mesh
+        construction) and to `DevicePowerModel.for_target`.
+      seconds_per_tick: virtual-clock scale for *router-side* grid
+        lookups (the meter uses measured seconds independently).
+      engine_kwargs: forwarded to `Engine(...)` (capacity, max_len,
+        seed, prefill_buckets, mesh, ...).
+    """
+
+    def __init__(self, name: str, cfg, *, grid: GridProvider | None = None,
+                 power: DevicePowerModel | None = None, target=None,
+                 seconds_per_tick: float = 1.0,
+                 straggler_factor: float = 3.0,
+                 on_straggler: Callable[[int, float, float], None] | None
+                 = None,
+                 **engine_kwargs):
+        self.name = name
+        self.grid = grid or StaticGrid("us-east")
+        if power is None:
+            power = (DevicePowerModel.for_target(target)
+                     if target is not None else DevicePowerModel())
+        self.meter = EnergyMeter(power=power, grid=self.grid)
+        self.engine = Engine(cfg, target=target, meter=self.meter,
+                             **engine_kwargs)
+        self.seconds_per_tick = seconds_per_tick
+        self.watchdog = fault.StragglerWatchdog(
+            factor=straggler_factor, on_straggler=on_straggler)
+        self.alive = True
+        self.routed = 0
+        self._fault_at_step: int | None = None
+        self._steps = 0
+
+    # --- health / telemetry ----------------------------------------------
+
+    @property
+    def region(self) -> str:
+        return self.grid.region
+
+    @property
+    def capacity(self) -> int:
+        return self.engine.capacity
+
+    @property
+    def n_active(self) -> int:
+        return self.engine.n_active
+
+    @property
+    def n_queued(self) -> int:
+        return self.engine.n_queued
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.engine.n_active or self.engine.n_queued)
+
+    def g_per_kwh_now(self) -> float:
+        """Live intensity at the replica's virtual-tick clock."""
+        return self.grid.g_per_kwh(self.engine.tick * self.seconds_per_tick)
+
+    # --- traffic ----------------------------------------------------------
+
+    def submit(self, request: Request) -> None:
+        if not self.alive:
+            raise ReplicaDead(f"replica {self.name} is dead")
+        self.routed += 1
+        self.engine.submit(request)
+
+    def step(self) -> None:
+        """One engine tick under the straggler watchdog.  Any exception
+        marks the replica dead before propagating as `ReplicaDead` — the
+        router catches it and re-queues `pending_requests()`."""
+        if not self.alive:
+            raise ReplicaDead(f"replica {self.name} is dead")
+        if self._fault_at_step is not None and \
+                self._steps >= self._fault_at_step:
+            self.alive = False
+            raise ReplicaDead(
+                f"replica {self.name}: injected fault at step "
+                f"{self._steps}")
+        self.watchdog.step_start()
+        try:
+            self.engine.step()
+        except Exception as e:
+            self.alive = False
+            raise ReplicaDead(
+                f"replica {self.name} died mid-step: "
+                f"{type(e).__name__}: {e}") from e
+        self._steps += 1
+        self.watchdog.step_end(self._steps)
+
+    # --- failure ----------------------------------------------------------
+
+    def inject_fault(self, at_step: int = 0) -> None:
+        """Arrange for the replica to die at its `at_step`-th future
+        step (0 = the very next one) — the chaos hook the failover
+        tests and the `launch/fleet.py` --kill demo use."""
+        self._fault_at_step = self._steps + max(at_step, 0)
+
+    def drain(self) -> list[Request]:
+        """All unfinished requests (in-flight + queued) for re-queueing
+        elsewhere.  Valid on a dead replica — device state may be gone
+        but the host-side request records survive."""
+        return self.engine.pending_requests()
+
+    def completions(self) -> list[Completion]:
+        return self.engine.completions
+
+    def stats(self) -> dict:
+        return {
+            "name": self.name,
+            "region": self.region,
+            "alive": self.alive,
+            "routed": self.routed,
+            "completed": len(self.engine.completions),
+            "active": self.engine.n_active,
+            "queued": self.engine.n_queued,
+            "steps": self._steps,
+            "straggler_steps": list(self.watchdog.flagged),
+            "g_per_kwh_now": self.g_per_kwh_now(),
+            "carbon": self.meter.summary(),
+        }

@@ -1,0 +1,241 @@
+"""Carbon-aware multi-replica router.
+
+`Fleet` fronts N `Replica`s (each an Engine in its own region, possibly
+on its own `HardwareTarget`/mesh) behind one submit/step surface, and
+admission-routes every request by **live grid intensity x SLO
+headroom**:
+
+  * a replica's *predicted TTFT* is estimated from its queue state
+    (backlog beyond free slots x its running-mean service length /
+    capacity) — pure tick arithmetic, so routing is deterministic and
+    replayable;
+  * among replicas whose prediction fits the TTFT budget, the request
+    goes to the **lowest-intensity** region (ties break on predicted
+    wait, then name);
+  * if no replica fits the budget, latency wins: the request goes to
+    the fastest-draining replica regardless of carbon.
+
+So traffic follows the cleanest grid until the SLO pushes back — the
+follow-the-sun behavior `launch/fleet.py` demos under a time-varying
+`TraceGrid`.
+
+Failover: a replica that dies mid-step (`ReplicaDead` — real crash or
+injected fault) is dropped from the live set, its unfinished requests
+are drained (`Replica.drain()`) and re-queued through normal routing on
+the surviving replicas, and the router re-weights automatically because
+the dead replica simply stops being a candidate.  Completed work on the
+dead replica is kept; re-queued requests regenerate from scratch.  Net:
+zero lost requests as long as one replica survives.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+
+from repro.fleet.replica import Replica, ReplicaDead
+from repro.serving import Completion, Request
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    """Router knobs.
+
+    ttft_slo_ticks: admission-to-first-token budget in fleet ticks; the
+      router only considers a replica "eligible" for carbon-first
+      placement while its predicted TTFT fits this budget.
+    default_service_ticks: prior for a replica's mean request service
+      length (ticks) before it has observed any traffic.
+    """
+    ttft_slo_ticks: float = 32.0
+    default_service_ticks: float = 12.0
+
+
+@dataclasses.dataclass
+class _RouteRecord:
+    tick: int
+    request_id: str
+    replica: str
+    g_per_kwh: float
+    predicted_ttft: float
+    was_lowest_carbon: bool
+    requeue: bool
+
+
+class Fleet:
+    def __init__(self, replicas: list[Replica],
+                 cfg: FleetConfig | None = None):
+        if not replicas:
+            raise ValueError("a fleet needs at least one replica")
+        names = [r.name for r in replicas]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate replica names in {names}")
+        self.replicas = list(replicas)
+        self.cfg = cfg or FleetConfig()
+        self._pending: list[tuple[float, int, Request]] = []
+        self._order = 0
+        self._tick = 0
+        self._submitted: set[str] = set()
+        self._service_mean: dict[str, tuple[int, float]] = {
+            r.name: (0, self.cfg.default_service_ticks) for r in replicas}
+        self.routes: list[_RouteRecord] = []
+        self.requeued = 0
+        self.requeue_events: list[dict] = []
+
+    # --- submission -------------------------------------------------------
+
+    @property
+    def tick(self) -> int:
+        return self._tick
+
+    def live(self) -> list[Replica]:
+        return [r for r in self.replicas if r.alive]
+
+    def submit(self, request: Request) -> None:
+        """Queue a request for routing at its arrival tick (fleet
+        virtual clock, mirroring the engine-trace convention)."""
+        if request.request_id in self._submitted:
+            raise ValueError(
+                f"duplicate request_id {request.request_id!r}")
+        self._submitted.add(request.request_id)
+        heapq.heappush(self._pending,
+                       (float(request.arrival), self._order, request))
+        self._order += 1
+
+    # --- placement policy -------------------------------------------------
+
+    def mean_service_ticks(self, name: str) -> float:
+        return self._service_mean[name][1]
+
+    def _note_service(self, name: str, ticks: float) -> None:
+        n, mean = self._service_mean[name]
+        self._service_mean[name] = (n + 1, mean + (ticks - mean) / (n + 1))
+
+    def predicted_ttft_ticks(self, r: Replica) -> float:
+        """Queue-theory-lite TTFT estimate: a free slot admits next
+        step (1 tick to first token); a backlogged request waits for
+        `backlog` evictions, which arrive at ~capacity per mean service
+        length."""
+        backlog = r.n_active + r.n_queued + 1 - r.capacity
+        if backlog <= 0:
+            return 1.0
+        return 1.0 + backlog * self.mean_service_ticks(r.name) \
+            / max(r.capacity, 1)
+
+    def route(self, request: Request, *, requeue: bool = False) -> Replica:
+        """Pick a replica for `request` and submit it there."""
+        live = self.live()
+        if not live:
+            raise RuntimeError(
+                f"no live replicas to serve {request.request_id!r}")
+        scored = [(r, self.predicted_ttft_ticks(r), r.g_per_kwh_now())
+                  for r in live]
+        lowest_ci = min(ci for _, _, ci in scored)
+        eligible = [(r, p, ci) for r, p, ci in scored
+                    if p <= self.cfg.ttft_slo_ticks]
+        if eligible:
+            r, pred, ci = min(eligible,
+                              key=lambda t: (t[2], t[1], t[0].name))
+        else:  # SLO unsatisfiable everywhere: minimize the damage
+            r, pred, ci = min(scored,
+                              key=lambda t: (t[1], t[2], t[0].name))
+        # the engine runs its own virtual clock; arrival "now" admits at
+        # the replica's next step
+        r.submit(dataclasses.replace(request, arrival=float(r.engine.tick)))
+        self._note_service(r.name, float(request.sampling.max_new_tokens))
+        self.routes.append(_RouteRecord(
+            tick=self._tick, request_id=request.request_id, replica=r.name,
+            g_per_kwh=ci, predicted_ttft=pred,
+            was_lowest_carbon=math.isclose(ci, lowest_ci), requeue=requeue))
+        return r
+
+    # --- failover ---------------------------------------------------------
+
+    def _failover(self, dead: Replica) -> None:
+        lost = dead.drain()
+        self.requeue_events.append({
+            "tick": self._tick, "replica": dead.name,
+            "requeued": [req.request_id for req in lost]})
+        self.requeued += len(lost)
+        for req in lost:
+            # strip the engine-local arrival; route() restamps it
+            self.route(dataclasses.replace(req, arrival=float(self._tick)),
+                       requeue=True)
+
+    # --- the fleet loop ---------------------------------------------------
+
+    def step(self) -> None:
+        """One fleet tick: route due arrivals, then advance every busy
+        live replica one engine step, failing over any that die."""
+        now = self._tick
+        while self._pending and self._pending[0][0] <= now:
+            _, _, req = heapq.heappop(self._pending)
+            self.route(req)
+        for r in self.replicas:
+            if r.alive and r.busy:
+                try:
+                    r.step()
+                except ReplicaDead:
+                    self._failover(r)
+        self._tick += 1
+
+    def busy(self) -> bool:
+        return bool(self._pending) or any(r.busy for r in self.live())
+
+    def run_until_complete(self) -> list[Completion]:
+        """Drive the fleet until every submitted request completed
+        somewhere; idle ticks fast-forward to the next arrival."""
+        while self.busy():
+            if not any(r.busy for r in self.live()) and self._pending:
+                nxt = self._pending[0][0]
+                if nxt > self._tick:
+                    self._tick = int(math.ceil(nxt))
+            self.step()
+        return self.completions()
+
+    def completions(self) -> list[Completion]:
+        out: list[Completion] = []
+        for r in self.replicas:          # dead replicas keep finished work
+            out.extend(r.completions())
+        return out
+
+    # --- accounting -------------------------------------------------------
+
+    def lost_requests(self) -> set[str]:
+        """Submitted ids with no completion anywhere (must be empty
+        after `run_until_complete`)."""
+        done = {c.request_id for c in self.completions()}
+        return self._submitted - done
+
+    def stats(self) -> dict:
+        routes = self.routes
+        n_routes = max(len(routes), 1)
+        totals = {"energy_j": 0.0, "co2e_g": 0.0, "tokens": 0}
+        for r in self.replicas:
+            s = r.meter.summary()
+            totals["energy_j"] += s["energy_j"]
+            totals["co2e_g"] += s["co2e_g"]
+            totals["tokens"] += s["finalized_tokens"]
+        totals["co2e_g_per_token"] = (
+            totals["co2e_g"] / max(totals["tokens"], 1))
+        totals["energy_j_per_token"] = (
+            totals["energy_j"] / max(totals["tokens"], 1))
+        return {
+            "ticks": self._tick,
+            "submitted": len(self._submitted),
+            "completed": len(self.completions()),
+            "lost": sorted(self.lost_requests()),
+            "requeued": self.requeued,
+            "requeue_events": list(self.requeue_events),
+            "routed": {r.name: r.routed for r in self.replicas},
+            "low_carbon_share": sum(
+                1 for rec in routes if rec.was_lowest_carbon) / n_routes,
+            "slo": {
+                "ttft_slo_ticks": self.cfg.ttft_slo_ticks,
+                "predicted_ttft_max": max(
+                    (rec.predicted_ttft for rec in routes), default=0.0),
+            },
+            "totals": totals,
+            "replicas": [r.stats() for r in self.replicas],
+        }

@@ -73,13 +73,19 @@ class Engine:
         target's axes when `mesh` is None (one die == one TP shard).
       seed: engine RNG seed (params init + per-request sampling streams).
       on_token: streaming callback `f(request_id, token_id)`.
+      meter: optional `repro.fleet.meter.EnergyMeter` — converts the
+        measured prefill/decode step seconds into per-request energy and
+        CO2eq (`Completion.carbon`, cumulative counters in `stats()`).
+        None (default) serves unmetered at zero added work beyond an
+        `is None` check per phase.
     """
 
     def __init__(self, cfg: ModelConfig, params: Any | None = None, *,
                  capacity: int = 4, max_len: int = 256,
                  prefill_buckets: tuple[int, ...] | None = None,
                  mesh=None, target=None, seed: int = 0,
-                 on_token: Callable[[str, int], None] | None = None):
+                 on_token: Callable[[str, int], None] | None = None,
+                 meter=None):
         if mesh is None:
             if target is not None:
                 mesh = target.make_mesh()
@@ -91,6 +97,7 @@ class Engine:
         self.capacity, self.max_len = capacity, max_len
         self.buckets = tuple(sorted(prefill_buckets or (max_len,)))
         self.on_token = on_token
+        self.meter = meter
         self._spec = api.make_spec(cfg)
         self.params = params if params is not None else api.init_params(
             cfg, jax.random.key(seed))
@@ -244,7 +251,10 @@ class Engine:
             self.exec_params, jnp.asarray(padded), extras,
             true_len=jnp.asarray([n], jnp.int32))
         jax.block_until_ready(logits)
-        self._prefill_s += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        self._prefill_s += dt
+        if self.meter is not None:
+            self.meter.on_prefill(request.request_id, dt)
         key = self._request_key(sp)
         first = self._first(logits.astype(jnp.float32),
                             jnp.asarray([sp.temperature], jnp.float32),
@@ -304,7 +314,10 @@ class Engine:
             admitted_tick=slot.admitted_tick,
             finished_tick=self._tick,
             ttft_s=slot.first_wall - slot.ready_wall,
-            latency_s=now - slot.ready_wall))
+            latency_s=now - slot.ready_wall,
+            carbon=(self.meter.finalize(slot.request.request_id,
+                                        len(slot.tokens))
+                    if self.meter is not None else None)))
         self._slots[slot_id] = None
         self._free.append(slot_id)
 
@@ -323,6 +336,16 @@ class Engine:
     def n_queued(self) -> int:
         return len(self._sched)
 
+    def pending_requests(self) -> list[Request]:
+        """Every submitted-but-unfinished request: in-flight slot
+        occupants first (admission order is not preserved), then the
+        waiting queue.  This is the drain surface a fleet supervisor
+        uses to re-queue work off a dead replica — requests, not partial
+        generations, so a re-served request regenerates from scratch."""
+        out = [s.request for s in self._slots if s is not None]
+        out.extend(self._sched.pending())
+        return out
+
     def step(self) -> None:
         """One engine tick: admit due requests into free slots, then run
         one decode step across the whole arena."""
@@ -338,7 +361,14 @@ class Engine:
             self._state, tok = self._decode(self.exec_params, self._state)
             self._decode_steps += 1
             tok_host = np.asarray(tok)          # syncs the step
-            self._decode_s += time.perf_counter() - t0
+            dt = time.perf_counter() - t0
+            self._decode_s += dt
+            if self.meter is not None:
+                # charge BEFORE emitting: a request evicted this step
+                # must carry this step's share of the energy
+                self.meter.on_decode(
+                    dt, [s.request.request_id for s in self._slots
+                         if s is not None], self.capacity)
             for slot_id in range(self.capacity):
                 if self._slots[slot_id] is not None:
                     self._emit(slot_id, int(tok_host[slot_id]))
@@ -370,6 +400,8 @@ class Engine:
                    self._queue_wait_ticks / done if done else 0.0,
                "evictions": dict(self._evictions),
                "mesh": {ax: int(sz) for ax, sz in self.mesh.shape.items()}}
+        if self.meter is not None:
+            out["carbon"] = self.meter.summary()
         for name, fn in (("prefill", self._prefill),
                          ("decode", self._decode)):
             if hasattr(fn, "_cache_size"):

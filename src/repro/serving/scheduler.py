@@ -47,5 +47,10 @@ class Scheduler:
     def next_arrival(self) -> float | None:
         return self._heap[0][0] if self._heap else None
 
+    def pending(self) -> list[Request]:
+        """Waiting requests in admission (arrival, submission) order —
+        read-only drain surface for fleet failover."""
+        return [req for _, _, req in sorted(self._heap)]
+
     def __len__(self) -> int:
         return len(self._heap)

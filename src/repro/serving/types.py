@@ -58,3 +58,8 @@ class Completion:
     finished_tick: int
     ttft_s: float               # ready -> first token (wall clock)
     latency_s: float            # ready -> eviction (wall clock)
+    #: per-request operational footprint (`repro.fleet.meter.
+    #: RequestCarbon`) when the engine serves with an `EnergyMeter`
+    #: attached; None when metering is off.  Typed loosely so the
+    #: serving layer never imports the fleet package.
+    carbon: Any | None = None

@@ -350,7 +350,7 @@ def _load_check_schema():
 def test_checked_in_bench_reports_pass_schema():
     cs = _load_check_schema()
     for name in ("BENCH_serving.json", "BENCH_gemm.json",
-                 "BENCH_codesign.json"):
+                 "BENCH_codesign.json", "BENCH_fleet.json"):
         path = os.path.join(REPO, name)
         if not os.path.exists(path):
             pytest.skip(f"{name} not committed")

@@ -1,0 +1,466 @@
+"""Fleet layer tests: grid providers, device power model, energy-meter
+attribution (conservation), carbon-aware routing (determinism, SLO
+spill), replica failover (zero lost), and the total-carbon objective
+(scalar twin vs the batched GA metrics)."""
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import accelerator as acc
+from repro.core import ga_batched as gb
+from repro.core import multipliers as mm
+from repro.core.target import HardwareTarget
+from repro.fleet import (REGION_INTENSITY_G_PER_KWH, DevicePowerModel,
+                         EnergyMeter, Fleet, FleetConfig, GridProvider,
+                         Replica, StaticGrid, TraceGrid, diurnal_trace)
+from repro.fleet import total as ftotal
+from repro.fleet.meter import BASE_POWER_W, J_PER_KWH, PE_ACTIVE_W_BY_NODE
+from repro.launch.fleet import build_fleet, poisson_requests, ttft_ticks
+from repro.models import api
+from repro.serving import Engine, Request, SamplingParams
+
+ARCH = "tinyllama-1.1b"
+
+
+def _cfg():
+    return configs.reduced(configs.get_config(ARCH))
+
+
+@functools.lru_cache(maxsize=1)
+def _params():
+    return api.init_params(_cfg(), jax.random.key(0))
+
+
+def _prompt(n, seed, vocab=512):
+    return np.random.default_rng(seed).integers(1, vocab, (n,)).tolist()
+
+
+def _fast_mults():
+    return [mm.exact_multiplier(), mm.truncated(1, 1), mm.truncated(2, 2),
+            mm.truncated(3, 3)]
+
+
+# --- grid providers ----------------------------------------------------------
+
+def test_static_grid_from_region_table():
+    g = StaticGrid("eu-north")
+    assert isinstance(g, GridProvider)
+    assert g.g_per_kwh(0.0) == REGION_INTENSITY_G_PER_KWH["eu-north"]
+    assert g.g_per_kwh(1e9) == g.g_per_kwh(0.0)  # constant in time
+    # explicit override wins over the table
+    assert StaticGrid("anywhere", 123.0).g_per_kwh(0.0) == 123.0
+
+
+def test_static_grid_validation():
+    with pytest.raises(ValueError, match="unknown region"):
+        StaticGrid("atlantis")
+    with pytest.raises(ValueError, match="> 0"):
+        StaticGrid("us-east", -1.0)
+
+
+def test_trace_grid_lookup_wrap_and_clamp():
+    t = TraceGrid("x", step_s=10.0, values=(1.0, 2.0, 3.0))
+    assert [t.g_per_kwh(s) for s in (0.0, 9.99, 10.0, 25.0)] == \
+        [1.0, 1.0, 2.0, 3.0]
+    assert t.g_per_kwh(30.0) == 1.0        # wraps
+    assert t.period_s == 30.0
+    clamp = TraceGrid("x", step_s=10.0, values=(1.0, 2.0), wrap=False)
+    assert clamp.g_per_kwh(1e6) == 2.0     # last value holds
+    # negative times clamp to the first sample (warmup lag), not raise
+    assert t.g_per_kwh(-5.0) == 1.0
+
+
+def test_trace_grid_validation():
+    with pytest.raises(ValueError, match="step_s"):
+        TraceGrid("x", step_s=0.0, values=(1.0,))
+    with pytest.raises(ValueError, match="at least one"):
+        TraceGrid("x", step_s=1.0, values=())
+    with pytest.raises(ValueError, match="> 0 g/kWh"):
+        TraceGrid("x", step_s=1.0, values=(1.0, -2.0))
+
+
+def test_diurnal_trace_shape_and_phase():
+    d = diurnal_trace("us-west", swing=0.4, samples=24)
+    vals = d.values
+    assert len(vals) == 24 and d.period_s == 86400.0
+    mean = REGION_INTENSITY_G_PER_KWH["us-west"]
+    assert sum(vals) / len(vals) == pytest.approx(mean, rel=1e-6)
+    # cos-shaped: trough at t=0 (solar noon), peak half a period later
+    assert min(vals) == vals[0] and max(vals) == vals[12]
+    assert vals[0] == pytest.approx(mean * 0.6, rel=1e-6)
+    # opposed phases swap which region is cleanest across the day
+    a = diurnal_trace("us-west", phase=0.0)
+    b = diurnal_trace("us-west", phase=math.pi)
+    assert a.g_per_kwh(0.0) < b.g_per_kwh(0.0)
+    assert a.g_per_kwh(43200.0) > b.g_per_kwh(43200.0)
+    with pytest.raises(ValueError, match="swing"):
+        diurnal_trace("us-west", swing=1.0)
+
+
+# --- device power model ------------------------------------------------------
+
+def test_power_model_phase_weighting():
+    pm = DevicePowerModel(tdp_w=10.0, idle_frac=0.1, prefill_util=1.0,
+                          decode_util=0.5)
+    assert pm.idle_w == pytest.approx(1.0)
+    assert pm.power_w("prefill") == pytest.approx(10.0)
+    # decode scales with arena occupancy: idle + span * 0.5 * (n/cap)
+    assert pm.power_w("decode", 2, 4) == pytest.approx(1.0 + 9.0 * 0.25)
+    assert pm.power_w("decode", 4, 4) == pytest.approx(1.0 + 9.0 * 0.5)
+    assert pm.power_w("decode", 1, 4) < pm.power_w("prefill")
+    with pytest.raises(ValueError, match="phase"):
+        pm.power_w("train")
+    with pytest.raises(ValueError):
+        DevicePowerModel(tdp_w=0.0)
+    with pytest.raises(ValueError):
+        DevicePowerModel(idle_frac=1.5)
+
+
+def test_power_model_for_target():
+    die = acc.nvdla_default(256, 7)
+    pm1 = DevicePowerModel.for_target(HardwareTarget.monolithic(die))
+    assert pm1.tdp_w == pytest.approx(
+        BASE_POWER_W + 256 * PE_ACTIVE_W_BY_NODE[7])
+    # more dies -> more PEs -> higher TDP
+    pm2 = DevicePowerModel.for_target(HardwareTarget(
+        die, n_dies=2, mesh_axes=(("model", 2),)))
+    assert pm2.tdp_w > pm1.tdp_w
+
+
+# --- energy meter ------------------------------------------------------------
+
+def test_meter_charging_clock_and_finalize():
+    grid = TraceGrid("x", step_s=1.0, values=(100.0, 200.0), wrap=False)
+    pm = DevicePowerModel(tdp_w=10.0, idle_frac=0.1, prefill_util=1.0,
+                          decode_util=0.5)
+    m = EnergyMeter(power=pm, grid=grid)
+    m.on_prefill("a", 0.5)                     # 10 W x 0.5 s @ 100 g/kWh
+    assert m.energy_j == pytest.approx(5.0)
+    assert m.clock_s == pytest.approx(0.5)
+    m.on_decode(1.0, ["a", "b"], capacity=2)   # 5.5 W @ 100, split 2 ways
+    assert m.decode_j == pytest.approx(5.5)
+    m.on_decode(1.0, ["b"], capacity=2)        # 3.25 W @ 200 (clock=1.5)
+    # an empty decode step advances the clock but charges nothing
+    before = m.energy_j
+    m.on_decode(1.0, [], capacity=2)
+    assert m.energy_j == before and m.clock_s == pytest.approx(3.5)
+
+    ca = m.finalize("a", tokens=2)
+    cb = m.finalize("b", tokens=3)
+    assert ca.energy_j == pytest.approx(5.0 + 2.75)
+    assert cb.energy_j == pytest.approx(2.75 + 3.25)
+    assert ca.energy_j + cb.energy_j == pytest.approx(m.energy_j)
+    assert ca.co2e_g + cb.co2e_g == pytest.approx(m.co2e_g)
+    # all of a's energy was drawn at 100 g/kWh; b mixes 100 and 200
+    assert ca.grid_g_per_kwh_mean == pytest.approx(100.0)
+    assert 100.0 < cb.grid_g_per_kwh_mean < 200.0
+    assert ca.co2e_g == pytest.approx(ca.energy_j / J_PER_KWH * 100.0)
+    assert ca.energy_j_per_token == pytest.approx(ca.energy_j / 2)
+    assert m.finalized_tokens == 5
+    # unknown id closes an empty account rather than raising
+    z = m.finalize("ghost", tokens=1)
+    assert z.energy_j == 0.0 and z.grid_g_per_kwh_mean == 200.0
+    s = m.summary()
+    assert s["prefill_calls"] == 1 and s["decode_steps"] == 2
+    assert s["energy_j"] == pytest.approx(s["prefill_j"] + s["decode_j"])
+
+
+def test_engine_metering_conserves_energy():
+    """Sum of per-request attributed Joules == the engine meter's
+    cumulative total (the conservation property the attribution rules
+    guarantee by construction), and Completion.carbon is populated."""
+    cfg, params = _cfg(), _params()
+    meter = EnergyMeter(power=DevicePowerModel(),
+                        grid=StaticGrid("us-east"))
+    eng = Engine(cfg, params, capacity=3, max_len=64, seed=0, meter=meter)
+    for i, (n, gen, arr) in enumerate([(5, 6, 0.0), (12, 4, 0.0),
+                                       (8, 5, 2.0), (6, 7, 5.0)]):
+        eng.submit(Request(f"r{i}", _prompt(n, i, cfg.vocab),
+                           SamplingParams(max_new_tokens=gen),
+                           arrival=arr))
+    done = eng.run_until_complete()
+    assert len(done) == 4
+    for c in done:
+        assert c.carbon is not None
+        assert c.carbon.energy_j > 0 and c.carbon.co2e_g > 0
+        assert c.carbon.tokens == len(c.tokens)
+        assert c.carbon.region == "us-east"
+    total_j = sum(c.carbon.energy_j for c in done)
+    total_g = sum(c.carbon.co2e_g for c in done)
+    assert total_j == pytest.approx(meter.energy_j, rel=1e-9)
+    assert total_g == pytest.approx(meter.co2e_g, rel=1e-9)
+    assert meter.finalized_tokens == sum(len(c.tokens) for c in done)
+    # static grid: per-request mean intensity is exactly the region's
+    assert all(c.carbon.grid_g_per_kwh_mean
+               == pytest.approx(379.0) for c in done)
+
+
+def test_engine_without_meter_has_no_carbon():
+    eng = Engine(_cfg(), _params(), capacity=2, max_len=64, seed=0)
+    eng.submit(Request("r0", _prompt(5, 0),
+                       SamplingParams(max_new_tokens=3)))
+    (c,) = eng.run_until_complete()
+    assert c.carbon is None
+
+
+# --- router ------------------------------------------------------------------
+
+def _two_replica_fleet(ttft_slo_ticks=32.0, capacity=2):
+    cfg, params = _cfg(), _params()
+    reps = [Replica(name, cfg, grid=StaticGrid(name), params=params,
+                    capacity=capacity, max_len=48, seed=0)
+            for name in ("us-west", "eu-west")]   # 263 vs 346 g/kWh
+    return Fleet(reps, FleetConfig(ttft_slo_ticks=ttft_slo_ticks))
+
+
+def test_fleet_validation():
+    with pytest.raises(ValueError, match="at least one"):
+        Fleet([])
+    cfg, params = _cfg(), _params()
+    reps = [Replica("a", cfg, params=params, capacity=1, max_len=32),
+            Replica("a", cfg, params=params, capacity=1, max_len=32)]
+    with pytest.raises(ValueError, match="duplicate replica names"):
+        Fleet(reps)
+
+
+def test_duplicate_request_id_rejected():
+    fleet = _two_replica_fleet()
+    fleet.submit(Request("x", _prompt(4, 0),
+                         SamplingParams(max_new_tokens=2)))
+    with pytest.raises(ValueError, match="duplicate request_id"):
+        fleet.submit(Request("x", _prompt(4, 1),
+                             SamplingParams(max_new_tokens=2)))
+
+
+def test_router_prefers_cleanest_region_then_spills_on_slo():
+    """Idle fleet: lowest-intensity region wins.  Once its predicted
+    TTFT blows the budget, latency wins and the request spills to the
+    dirtier region."""
+    fleet = _two_replica_fleet(ttft_slo_ticks=1.5, capacity=1)
+    r0 = fleet.route(Request("a", _prompt(4, 0),
+                             SamplingParams(max_new_tokens=4), arrival=0.0))
+    assert r0.name == "us-west"
+    assert fleet.routes[0].was_lowest_carbon
+    # running-mean service estimator updated from the routed request
+    assert fleet.mean_service_ticks("us-west") == pytest.approx(4.0)
+    # us-west now has a queued request: backlog pushes prediction past
+    # the 1.5-tick budget, so the next request goes to eu-west
+    assert fleet.predicted_ttft_ticks(r0) > 1.5
+    r1 = fleet.route(Request("b", _prompt(4, 1),
+                             SamplingParams(max_new_tokens=4), arrival=0.0))
+    assert r1.name == "eu-west"
+    assert not fleet.routes[1].was_lowest_carbon
+
+
+def test_routing_is_deterministic():
+    """Same seed, same trace -> identical placement and completions."""
+    cfg, params = _cfg(), _params()
+
+    def run():
+        fleet = build_fleet(cfg, regions=("us-west", "eu-west"),
+                            trace="diurnal", capacity=2, max_len=48,
+                            params=params)
+        for r in poisson_requests(8, 6, 4, cfg.vocab, seed=3):
+            fleet.submit(r)
+        comps = fleet.run_until_complete()
+        placement = [(rec.tick, rec.request_id, rec.replica,
+                      rec.g_per_kwh) for rec in fleet.routes]
+        streams = {c.request_id: tuple(c.tokens) for c in comps}
+        return placement, streams
+
+    p1, s1 = run()
+    p2, s2 = run()
+    assert p1 == p2
+    assert s1 == s2
+
+
+def test_idle_fleet_fast_forwards_to_next_arrival():
+    fleet = _two_replica_fleet()
+    fleet.submit(Request("late", _prompt(4, 0),
+                         SamplingParams(max_new_tokens=3), arrival=100.0))
+    comps = fleet.run_until_complete()
+    assert len(comps) == 1 and not fleet.lost_requests()
+    s = fleet.stats()
+    assert 100 <= s["ticks"] < 120   # jumped, not crawled, to t=100
+
+
+def test_failover_requeues_with_zero_lost():
+    """Kill the replica the router prefers mid-trace: its in-flight
+    requests drain onto the survivor and every submitted id completes
+    exactly once."""
+    cfg, params = _cfg(), _params()
+    fleet = build_fleet(cfg, regions=("us-west", "eu-west"),
+                        trace="static", capacity=2, max_len=48,
+                        params=params)
+    for r in poisson_requests(10, 6, 6, cfg.vocab, seed=0):
+        fleet.submit(r)
+    fleet.replicas[0].inject_fault(at_step=3)  # us-west: the clean one
+    comps = fleet.run_until_complete()
+    s = fleet.stats()
+    assert not fleet.replicas[0].alive and fleet.replicas[1].alive
+    assert s["requeued"] >= 1
+    assert s["requeue_events"] and \
+        s["requeue_events"][0]["replica"] == "us-west"
+    assert s["lost"] == [] and s["completed"] == s["submitted"] == 10
+    ids = [c.request_id for c in comps]
+    assert len(ids) == len(set(ids)) == 10   # nothing served twice
+    # re-queued routes are tagged and land on the survivor
+    requeues = [rec for rec in fleet.routes if rec.requeue]
+    assert requeues and all(rec.replica == "eu-west" for rec in requeues)
+
+
+def test_dead_replica_rejects_traffic():
+    cfg, params = _cfg(), _params()
+    rep = Replica("a", cfg, params=params, capacity=1, max_len=32)
+    rep.submit(Request("r", _prompt(4, 0),
+                       SamplingParams(max_new_tokens=2)))
+    rep.inject_fault(at_step=0)
+    from repro.fleet import ReplicaDead
+    with pytest.raises(ReplicaDead):
+        rep.step()
+    assert not rep.alive
+    with pytest.raises(ReplicaDead):
+        rep.submit(Request("r2", _prompt(4, 1),
+                           SamplingParams(max_new_tokens=2)))
+    # the dead replica still drains its pending work for re-queueing
+    assert [r.request_id for r in rep.drain()] == ["r"]
+
+
+def test_fleet_stats_totals_aggregate_meters():
+    fleet = _two_replica_fleet()
+    for r in poisson_requests(6, 5, 4, _cfg().vocab, seed=1):
+        fleet.submit(r)
+    fleet.run_until_complete()
+    s = fleet.stats()
+    per_replica_j = sum(rs["carbon"]["energy_j"] for rs in s["replicas"])
+    assert s["totals"]["energy_j"] == pytest.approx(per_replica_j)
+    assert s["totals"]["co2e_g"] > 0
+    assert s["totals"]["co2e_g_per_token"] == pytest.approx(
+        s["totals"]["co2e_g"] / s["totals"]["tokens"])
+    assert ttft_ticks(fleet.completions()[0]) >= 1
+
+
+# --- total-carbon objective --------------------------------------------------
+
+def test_operational_model_validation():
+    with pytest.raises(ValueError):
+        ftotal.OperationalModel(ci_use_g_per_kwh=-1.0)
+    with pytest.raises(ValueError):
+        ftotal.OperationalModel(util=0.0)
+    with pytest.raises(ValueError):
+        ftotal.OperationalModel(energy_scale=0.0)
+    op = ftotal.OperationalModel()
+    assert op.pe_active_w(7) == PE_ACTIVE_W_BY_NODE[7]
+    assert dataclasses.replace(op, energy_scale=2.0).pe_active_w(7) \
+        == pytest.approx(2 * PE_ACTIVE_W_BY_NODE[7])
+
+
+def test_total_carbon_scalar_model_properties():
+    op = ftotal.OperationalModel()
+    with pytest.raises(ValueError):
+        ftotal.energy_j_per_inf(0.0, 256, 1.0, 7, op)
+    # race-to-idle: running faster than the duty-cycle floor cuts energy
+    # per inference (active time shrinks, only idle power fills the gap)
+    e_fast = ftotal.energy_j_per_inf(60.0, 256, 1.0, 7, op, fps_min=30.0)
+    e_slow = ftotal.energy_j_per_inf(30.0, 256, 1.0, 7, op, fps_min=30.0)
+    assert e_fast < e_slow
+    # but embodied amortization is capped at the floor: speed headroom
+    # does not buy more lifetime inferences
+    assert ftotal.embodied_g_per_inf(1e4, 60.0, op, fps_min=30.0) == \
+        ftotal.embodied_g_per_inf(1e4, 30.0, op, fps_min=30.0)
+    # approximate multipliers draw less power than exact (escale < 1)
+    assert ftotal.pe_power_w(256, 0.5, 7, op) < \
+        ftotal.pe_power_w(256, 1.0, 7, op)
+    # chiplets pay die-to-die link power
+    assert ftotal.pe_power_w(256, 1.0, 7, op, n_dies=4.0) == \
+        pytest.approx(ftotal.pe_power_w(256, 1.0, 7, op) + 3 * op.die_w)
+    # total = embodied + operational, exactly
+    tot = ftotal.total_carbon_g_per_inf(1e4, 40.0, 256, 1.0, 7, op,
+                                        fps_min=30.0, n_dies=2.0)
+    assert tot == pytest.approx(
+        ftotal.embodied_g_per_inf(1e4, 40.0, op, fps_min=30.0)
+        + ftotal.operational_g_per_inf(40.0, 256, 1.0, 7, op,
+                                       fps_min=30.0, n_dies=2.0))
+
+
+def test_energy_calibration_anchors_power_model():
+    c = ftotal.EnergyCalibration(measured_j_per_token=2.0,
+                                 modeled_j_per_token=1.0)
+    assert c.scale == pytest.approx(2.0)
+    op = c.apply(ftotal.OperationalModel())
+    assert op.energy_scale == pytest.approx(2.0)
+    assert op.pe_active_w(7) == pytest.approx(2 * PE_ACTIVE_W_BY_NODE[7])
+    # degenerate inputs fall back to the identity scale
+    assert ftotal.EnergyCalibration(0.0, 1.0).scale == 1.0
+    assert ftotal.EnergyCalibration(1.0, 0.0).scale == 1.0
+    got = ftotal.EnergyCalibration.from_meter_summary(
+        {"energy_j_per_token": 3.0}, modeled_j_per_token=1.5)
+    assert got.scale == pytest.approx(2.0)
+    with pytest.raises(ValueError):
+        ftotal.modeled_j_per_token(256, 1.0, 7,
+                                   ftotal.OperationalModel(), 0.0)
+
+
+def test_total_carbon_batched_matches_scalar_twin():
+    """The GA's batched total-carbon metrics equal the scalar model in
+    fleet/total.py genome-for-genome (the parity contract both
+    docstrings promise)."""
+    op = ftotal.OperationalModel()
+    space = gb.build_space("vgg16", 7, 30.0, 2.0, mults=_fast_mults(),
+                           op=op)
+    rng = np.random.default_rng(0)
+    pop = np.stack([rng.integers(0, n, 48) for n in space.gene_sizes],
+                   axis=1).astype(np.int32)
+    met = gb.evaluate_population(jnp.asarray(pop), space.tables(), 7)
+    escale = space.mult_area / space.mult_area[space.exact_idx]
+    for row, carbon, fps, e_inf, tot in zip(
+            pop, np.asarray(met["carbon_g"]), np.asarray(met["fps"]),
+            np.asarray(met["energy_j_per_inf"]),
+            np.asarray(met["total_g_per_inf"])):
+        pe, _aspect, _rf, _glb, mult, die = row
+        kw = dict(fps_min=30.0, n_dies=float(space.dies[die]))
+        assert e_inf == pytest.approx(ftotal.energy_j_per_inf(
+            float(fps), float(space.num_pes[pe]), float(escale[mult]),
+            7, op, **kw), rel=1e-4)
+        assert tot == pytest.approx(ftotal.total_carbon_g_per_inf(
+            float(carbon), float(fps), float(space.num_pes[pe]),
+            float(escale[mult]), 7, op, **kw), rel=1e-4)
+
+
+def test_total_carbon_objective_requires_op():
+    with pytest.raises(ValueError, match="total_carbon"):
+        gb.run_ga_batched(
+            "vgg16", 7, 30.0, 2.0, mults=_fast_mults(),
+            cfg=gb.BatchedGAConfig(pop_size=64, generations=1,
+                                   objective="total_carbon"))
+    space = gb.build_space("vgg16", 7, 30.0, 2.0, mults=_fast_mults())
+    pop = jnp.zeros((4, gb.N_GENES), jnp.int32)
+    with pytest.raises(ValueError, match="unknown objective"):
+        gb.evaluate_population(pop, space.tables(), 7,
+                               objective="banana")
+
+
+def test_total_carbon_ga_matches_exhaustive_optimum():
+    op = ftotal.OperationalModel()
+    space = gb.build_space("vgg16", 7, 30.0, 2.0, mults=_fast_mults(),
+                           op=op)
+    res = gb.run_ga_batched(
+        "vgg16", 7, 30.0, 2.0, space=space,
+        cfg=gb.BatchedGAConfig(pop_size=1024, generations=8, seed=0,
+                               objective="total_carbon"))
+    g_tot, met_tot = gb.exhaustive_best(space, objective="total_carbon")
+    assert float(np.min(res.metrics["fitness"])) <= \
+        float(met_tot["fitness"]) * (1 + 1e-4)
+    # the total-carbon optimum can't lose to the CDP optimum on total
+    _g_cdp, met_cdp = gb.exhaustive_best(space, objective="cdp")
+    assert float(met_tot["total_g_per_inf"]) <= \
+        float(met_cdp["total_g_per_inf"]) * (1 + 1e-6)
+    assert res.metrics["feasible"][
+        int(np.argmin(res.metrics["fitness"]))]

@@ -1,0 +1,92 @@
+"""Direct unit tests of the NSGA-II internals in core/pareto.py:
+nondominated sorting vs brute force (2 and 3 objectives), the public
+`nondominated_front` surface, crowding distances, front dedup, and the
+NMED-constrained picker."""
+
+import numpy as np
+import pytest
+
+from repro.core import multipliers as mm
+from repro.core import netlist as nlmod
+from repro.core import pareto
+
+
+def _brute_front(objs: np.ndarray) -> set[int]:
+    def dom(a, b):
+        return bool(np.all(a <= b) and np.any(a < b))
+    return {i for i in range(len(objs))
+            if not any(dom(objs[j], objs[i])
+                       for j in range(len(objs)) if j != i)}
+
+
+@pytest.mark.parametrize("n_obj", [2, 3])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_nondominated_sort_matches_brute_force(n_obj, seed):
+    rng = np.random.default_rng(seed)
+    objs = rng.random((40, n_obj))
+    fronts = pareto._nondominated_sort(objs)
+    # first front is exactly the brute-force nondominated set
+    assert set(fronts[0].tolist()) == _brute_front(objs)
+    # fronts partition the population
+    all_idx = np.concatenate(fronts)
+    assert sorted(all_idx.tolist()) == list(range(len(objs)))
+    # peeling is consistent: each later front is the nondominated set of
+    # what remains after removing the earlier ones
+    remaining = np.arange(len(objs))
+    for fr in fronts:
+        sub = _brute_front(objs[remaining])
+        assert set(fr.tolist()) == {int(remaining[i]) for i in sub}
+        remaining = np.setdiff1d(remaining, fr)
+
+
+def test_nondominated_sort_with_duplicates():
+    objs = np.array([[1.0, 1.0], [1.0, 1.0], [2.0, 2.0]])
+    fronts = pareto._nondominated_sort(objs)
+    assert set(fronts[0].tolist()) == {0, 1}   # ties don't dominate
+    assert fronts[1].tolist() == [2]
+
+
+def test_nondominated_front_sorted_by_first_objective():
+    pts = np.array([[3.0, 1.0],    # on the front
+                    [1.0, 3.0],    # on the front
+                    [2.0, 2.0],    # on the front
+                    [3.0, 3.0],    # dominated by (2,2)
+                    [1.0, 3.5]])   # dominated by (1,3)
+    idx = pareto.nondominated_front(pts)
+    assert idx.tolist() == [1, 2, 0]           # ascending first objective
+    assert pareto.nondominated_front(np.empty((0, 2))).tolist() == []
+    with pytest.raises(ValueError, match=r"\(n, m\)"):
+        pareto.nondominated_front(np.array([1.0, 2.0]))
+
+
+def test_crowding_boundaries_are_infinite():
+    rng = np.random.default_rng(0)
+    objs = rng.random((30, 2))
+    front = pareto._nondominated_sort(objs)[0]
+    d = pareto._crowding(objs, front)
+    assert len(d) == len(front)
+    for m in range(objs.shape[1]):
+        assert np.isinf(d[np.argmin(objs[front, m])])
+        assert np.isinf(d[np.argmax(objs[front, m])])
+    if len(front) > 2:
+        interior = d[np.isfinite(d)]
+        assert (interior >= 0).all()
+
+
+def test_front_to_multipliers_dedups_objective_points():
+    n_genes = len(nlmod.bw8().prunable_gates())
+    mask = np.zeros(n_genes, dtype=bool)
+    a = pareto.Individual(mask, 0, 0, area=100.0, nmed=0.01)
+    b = pareto.Individual(mask.copy(), 1, 0, area=100.0, nmed=0.01)
+    c = pareto.Individual(mask.copy(), 0, 1, area=90.0, nmed=0.02)
+    out = pareto.front_to_multipliers([a, b, c])
+    assert len(out) == 2                       # a and b collapse
+    assert all(hasattr(m, "area_nand2eq") for m in out)
+
+
+def test_pick_by_nmed_constrained_and_fallback():
+    mults = [mm.truncated(1, 1), mm.truncated(3, 3)]
+    got = pareto.pick_by_nmed(mults, max_nmed=1.0)
+    assert got is min(mults, key=lambda m: m.area_nand2eq)
+    # nothing feasible -> exact fallback
+    assert pareto.pick_by_nmed(mults, max_nmed=0.0).is_exact
