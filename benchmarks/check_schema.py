@@ -152,7 +152,7 @@ def check_codesign(r: dict) -> None:
         "no scenario where the total-carbon winner differs from CDP"
 
 
-def check_fleet(r: dict) -> None:
+def check_fleet(r: dict, expect_chaos: bool = False) -> None:
     assert r["bench"] == "fleet", r.get("bench")
     reps = r["replicas"]
     assert len(reps) >= 2, reps
@@ -182,6 +182,38 @@ def check_fleet(r: dict) -> None:
     assert abs(t["co2e_g_per_token"] * t["tokens"] - t["co2e_g"]) <= tol, t
     if "retrace" in r:  # bench ran with --sanitize-retrace
         assert r["retrace"]["ok"] is True, r["retrace"]["findings"]
+    if expect_chaos or "chaos" in r:   # bench ran with --chaos
+        assert "chaos" in r, "fleet report has no 'chaos' section"
+        c = r["chaos"]
+        camp = c["campaign"]
+        # the invariant gauntlet: zero lost, exactly-once, meter
+        # conservation, deadline accounting, monotone tiers — all clean
+        assert camp["ok"] is True, camp["violations"]
+        assert camp["violations"] == [], camp["violations"]
+        assert camp["lost"] == 0, camp
+        # a real campaign: >=3 distinct fault kinds, at least one of
+        # them a transient crash that the fleet recovered from
+        kinds = camp["faults_by_kind"]
+        assert len(kinds) >= 3, kinds
+        assert (kinds.get("transient", 0) + kinds.get("submit_fault", 0)
+                ) >= 1, kinds
+        assert camp["recoveries"] >= 1, camp
+        assert sum(camp["restarts"].values()) >= 1, camp["restarts"]
+        # brownout A/B: the controller held the tight SLO by moving
+        # tokens onto approx tiers, the uncontrolled fleet did not, and
+        # exact service was restored once the burst drained
+        b = c["brownout"]
+        wc, wo = b["with_controller"], b["without_controller"]
+        assert b["holds_slo"] is True, b
+        assert wc["ttft_p95_ticks"] <= b["slo_ticks"], b
+        assert b["improves_p95"] is True, b
+        assert wc["degradation_events"] >= 2, wc   # degrade AND restore
+        approx_tokens = sum(n for t, n in wc["tier_occupancy"].items()
+                            if t != c["tiers"][0])
+        assert approx_tokens > 0, wc["tier_occupancy"]
+        assert b["restored_exact"] is True, wc["final_tiers"]
+        # the uncontrolled fleet serves everything exact
+        assert set(wo["tier_occupancy"]) <= {c["tiers"][0]}, wo
 
 
 CHECKS = {"serving": check_serving, "gemm": check_gemm,
@@ -189,7 +221,8 @@ CHECKS = {"serving": check_serving, "gemm": check_gemm,
 
 
 def check_report(r: dict, expect_mesh: dict | None = None,
-                 expect_carbon: bool = False) -> str:
+                 expect_carbon: bool = False,
+                 expect_chaos: bool = False) -> str:
     """Dispatch on the report's "bench" field; returns the kind."""
     kind = r.get("bench")
     if kind not in CHECKS:
@@ -197,6 +230,8 @@ def check_report(r: dict, expect_mesh: dict | None = None,
             f"unknown bench report kind {kind!r}; known: {list(CHECKS)}")
     if kind == "serving":
         check_serving(r, expect_mesh, expect_carbon)
+    elif kind == "fleet":
+        check_fleet(r, expect_chaos)
     else:
         CHECKS[kind](r)
     return kind
@@ -219,13 +254,17 @@ def main(argv=None) -> int:
     ap.add_argument("--expect-carbon", action="store_true",
                     help="require serving reports to carry the --meter "
                          "energy/CO2e metrics")
+    ap.add_argument("--expect-chaos", action="store_true",
+                    help="require fleet reports to carry the --chaos "
+                         "campaign + brownout section")
     args = ap.parse_args(argv)
     mesh = _parse_mesh(args.expect_mesh) if args.expect_mesh else None
     for path in args.reports:
         with open(path) as f:
             r = json.load(f)
         try:
-            kind = check_report(r, mesh, args.expect_carbon)
+            kind = check_report(r, mesh, args.expect_carbon,
+                                args.expect_chaos)
         except AssertionError as e:
             print(f"[check_schema] {path}: FAIL\n{e}", file=sys.stderr)
             return 1

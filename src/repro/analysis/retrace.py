@@ -189,26 +189,48 @@ class RetraceSanitizer:
 # serving-engine instrumentation
 # --------------------------------------------------------------------------
 
+def _tier_watch_names(engine) -> dict[str, tuple[str, str]]:
+    """Watch name per (phase, tier).  Single-tier engines keep the
+    historical unsuffixed names (the schema checks key on them);
+    multi-tier engines get one watch per tier — each tier's decode and
+    prefill compile once, and a tier *switch* must not retrace."""
+    out = {}
+    tiers = getattr(engine, "tiers", ("exact",))  # duck-typed engines
+    multi = len(tiers) > 1
+    for t in tiers:
+        suffix = f"[{t}]" if multi else ""
+        out[t] = (f"serving/engine:decode{suffix}",
+                  f"serving/engine:prefill{suffix}")
+    return out
+
+
 def engine_budgets(engine) -> dict[str, int]:
     """Declared compile budgets for one Engine's jitted phases: decode
-    compiles once, prefill once per prompt bucket, the first-token
-    sampler and the arena slot-insert once each."""
-    return {"serving/engine:decode": 1,
-            "serving/engine:prefill": len(engine.buckets),
-            "serving/engine:first_token": 1,
-            "serving/arena:insert": 1}
+    compiles once (per tier), prefill once per prompt bucket (per
+    tier), the first-token sampler and the arena slot-insert once
+    each."""
+    b = {"serving/engine:first_token": 1,
+         "serving/arena:insert": 1}
+    for dec_name, pre_name in _tier_watch_names(engine).values():
+        b[dec_name] = 1
+        b[pre_name] = len(engine.buckets)
+    return b
 
 
 def instrument_engine(engine, sanitizer: RetraceSanitizer | None = None
                       ) -> RetraceSanitizer:
     """Swap an Engine's jitted entry points for watched proxies.  Must
-    run before the engine serves traffic (budgets count from here)."""
+    run before the engine serves traffic (budgets count from here).
+    Proxies are installed in the engine's per-tier tables (then
+    re-activated), so they stay live across `set_tier` switches."""
     s = sanitizer or RetraceSanitizer()
     b = engine_budgets(engine)
-    engine._decode = s.watch("serving/engine:decode", engine._decode,
-                             b["serving/engine:decode"])
-    engine._prefill = s.watch("serving/engine:prefill", engine._prefill,
-                              b["serving/engine:prefill"])
+    for tier, (dec_name, pre_name) in _tier_watch_names(engine).items():
+        engine._tier_decode_fns[tier] = s.watch(
+            dec_name, engine._tier_decode_fns[tier], b[dec_name])
+        engine._tier_prefill_fns[tier] = s.watch(
+            pre_name, engine._tier_prefill_fns[tier], b[pre_name])
+    engine._activate(engine._tier)
     engine._first = s.watch("serving/engine:first_token", engine._first,
                             b["serving/engine:first_token"])
     engine._arena._insert = s.watch("serving/arena:insert",

@@ -11,7 +11,14 @@ the CDP GA); this package closes the serve-time half of the loop:
                   time, attributed per request and per token);
   * `replica.py`/`router.py` — a multi-replica fleet driver that routes
                   by live grid intensity x SLO headroom and survives
-                  replica death without losing requests;
+                  replica death without losing requests: retry budgets
+                  with tick-based exponential backoff, transient-crash
+                  recovery with router probation, and a
+                  `DegradationController` that brownouts replicas down
+                  a prepared multiplier-tier ladder under SLO pressure;
+  * `chaos.py`  — seeded step-clock fault schedules + invariant
+                  checkers (zero lost, exactly-once, meter
+                  conservation) for deterministic chaos campaigns;
   * `total.py`  — amortized-embodied + operational total-carbon
                   objective, consumed by `core/ga_batched.py` /
                   `core/codesign.py` as a scenario axis.
@@ -34,17 +41,26 @@ __all__ = [
     "DevicePowerModel", "EnergyMeter", "RequestCarbon",
     "OperationalModel",
     "Fleet", "FleetConfig", "Replica", "ReplicaDead",
+    "DegradationConfig", "DegradationController",
+    "ChaosCampaign", "ChaosReport", "ChaosSchedule",
 ]
 
 _LAZY = {"Fleet": "repro.fleet.router", "FleetConfig": "repro.fleet.router",
+         "DegradationConfig": "repro.fleet.router",
+         "DegradationController": "repro.fleet.router",
          "Replica": "repro.fleet.replica",
          "ReplicaDead": "repro.fleet.replica",
-         "router": "repro.fleet.router", "replica": "repro.fleet.replica"}
+         "ChaosCampaign": "repro.fleet.chaos",
+         "ChaosReport": "repro.fleet.chaos",
+         "ChaosSchedule": "repro.fleet.chaos",
+         "router": "repro.fleet.router", "replica": "repro.fleet.replica",
+         "chaos": "repro.fleet.chaos"}
 
 
 def __getattr__(name: str):
     if name in _LAZY:
         import importlib
         mod = importlib.import_module(_LAZY[name])
-        return mod if name in ("router", "replica") else getattr(mod, name)
+        return (mod if name in ("router", "replica", "chaos")
+                else getattr(mod, name))
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

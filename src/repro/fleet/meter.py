@@ -153,6 +153,9 @@ class EnergyMeter:
         self.finalized_tokens = 0
         self.finalized_co2e_g = 0.0
         self.finalized_energy_j = 0.0
+        self.abandoned_requests = 0
+        self.abandoned_co2e_g = 0.0
+        self.abandoned_energy_j = 0.0
 
     @property
     def clock_s(self) -> float:
@@ -210,6 +213,23 @@ class EnergyMeter:
                              tokens=tokens, region=self.region,
                              grid_g_per_kwh_mean=mean_ci)
 
+    def abandon(self, request_id: str) -> None:
+        """Close a request's account WITHOUT a completion — the failover
+        path for work drained off a dead replica (the energy was really
+        spent; it moves to the abandoned counters so conservation still
+        holds: finalized + abandoned + open == total).  No-op for ids
+        with no open account (queued-but-never-admitted requests)."""
+        acct = self._accounts.pop(request_id, None)
+        if acct is None:
+            return
+        self.abandoned_requests += 1
+        self.abandoned_co2e_g += acct.co2e_g
+        self.abandoned_energy_j += acct.energy_j
+
+    def open_energy_j(self) -> float:
+        """Energy charged to still-open accounts (in-flight requests)."""
+        return sum(a.energy_j for a in self._accounts.values())
+
     def summary(self) -> dict:
         toks = max(self.finalized_tokens, 1)
         return {
@@ -225,6 +245,12 @@ class EnergyMeter:
             "finalized_tokens": self.finalized_tokens,
             "energy_j_per_token": self.finalized_energy_j / toks,
             "co2e_g_per_token": self.finalized_co2e_g / toks,
+            "abandoned_requests": self.abandoned_requests,
+            "abandoned_energy_j": self.abandoned_energy_j,
+            "abandoned_co2e_g": self.abandoned_co2e_g,
+            "finalized_energy_j": self.finalized_energy_j,
+            "finalized_co2e_g": self.finalized_co2e_g,
+            "open_energy_j": self.open_energy_j(),
             "power": {"tdp_w": self.power.tdp_w,
                       "idle_frac": self.power.idle_frac,
                       "prefill_util": self.power.prefill_util,

@@ -40,13 +40,18 @@ def build_fleet(cfg, *, regions: tuple[str, ...] = DEFAULT_REGIONS,
                 max_len: int = 64, seed: int = 0,
                 ttft_slo_ticks: float = 32.0,
                 seconds_per_tick: float = 1800.0,
-                params=None, mesh=None, targets=None) -> Fleet:
+                params=None, mesh=None, targets=None,
+                tiers: tuple[str, ...] | None = None,
+                fleet_cfg: FleetConfig | None = None) -> Fleet:
     """One replica per region.  `trace="diurnal"` gives each region a
     phase-shifted sinusoidal day curve (half a period apart for two
     replicas), so the lowest-carbon region changes over the run;
     `"static"` pins each to its annual-average intensity.  `targets`
     (optional, one per region) lets replicas run different accelerator
-    designs."""
+    designs.  `tiers` gives every engine a multiplier-tier degradation
+    ladder; `fleet_cfg` overrides the whole router config (retry
+    budget, probation, `DegradationConfig`, ...) — `ttft_slo_ticks` is
+    ignored when it is passed."""
     replicas = []
     for i, region in enumerate(regions):
         if trace == "diurnal":
@@ -59,8 +64,9 @@ def build_fleet(cfg, *, regions: tuple[str, ...] = DEFAULT_REGIONS,
             f"{region}", cfg, grid=grid,
             target=targets[i] if targets else None,
             seconds_per_tick=seconds_per_tick, params=params, mesh=mesh,
-            capacity=capacity, max_len=max_len, seed=seed))
-    return Fleet(replicas, FleetConfig(ttft_slo_ticks=ttft_slo_ticks))
+            capacity=capacity, max_len=max_len, seed=seed, tiers=tiers))
+    return Fleet(replicas,
+                 fleet_cfg or FleetConfig(ttft_slo_ticks=ttft_slo_ticks))
 
 
 def poisson_requests(n: int, prompt_len: int, gen: int, vocab: int,

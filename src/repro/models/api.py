@@ -31,16 +31,22 @@ def family_module(cfg: ModelConfig):
     return _FAMILIES[cfg.family]
 
 
-def make_spec(cfg: ModelConfig) -> gemm_mod.MultSpec | None:
+def make_spec(cfg: ModelConfig,
+              mult: str | None = None) -> gemm_mod.MultSpec | None:
     """Resolve the config's multiplier AND its kernel-dispatch policy.
 
     The policy rides on the spec (static pytree field), so every model /
     train / serve path that threads a spec automatically dispatches GEMMs
     per `cfg.kernel_policy` — no separate plumbing.
+
+    `mult` overrides `cfg.mult` (same names, same policy resolution) —
+    this is how the serving engine materializes its degradation-tier
+    ladder from one config without forging config copies.
     """
-    if cfg.mult in ("exact", "", None):
+    name = cfg.mult if mult is None else mult
+    if name in ("exact", "", None):
         return None
-    spec = gemm_mod.spec_from_name(cfg.mult)
+    spec = gemm_mod.spec_from_name(name)
     return spec.with_policy(cfg.kernel_policy)
 
 

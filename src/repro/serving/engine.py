@@ -17,6 +17,24 @@ Under an approximate spec the engine serves from a persistent weight-plane
 cache (`api.prepare_params`): each GEMM weight is quantized — and, for the
 XLA path, table-mapped — once at engine construction instead of on every
 decode step.
+
+Graceful degradation rides on the same machinery: `tiers=` names an
+ordered ladder of multiplier tiers (index 0 = highest accuracy, the
+default; later entries trade accuracy for energy/delay, the paper's
+knob applied at serve time).  Each tier gets its own resolved spec,
+prepared weight planes, and jitted prefill/decode pair at construction;
+`set_tier` flips which one serves — an O(1) host-side pointer swap, no
+re-quantization, no cache invalidation (the KV/state arena is
+tier-independent).  Every emitted token is attributed to the tier that
+produced it (`Completion.tier_tokens`), so accuracy exposure under
+brownout is auditable.
+
+Request-lifecycle robustness: per-request TTFT/total deadlines (in
+ticks) with load-shedding (`finish_reason="shed"`) and mid-decode
+deadline eviction (`"deadline"`), and exception-safe admission — a crash
+inside prefill re-queues the victim request before propagating, so a
+fleet supervisor draining `pending_requests()` off the dead engine never
+loses it.
 """
 
 from __future__ import annotations
@@ -43,13 +61,15 @@ class _Slot:
     """Host-side record of one occupied arena slot."""
 
     def __init__(self, request: Request, prompt_len: int, admitted_tick: int,
-                 ready_wall: float):
+                 ready_wall: float, admit_seq: int):
         self.request = request
         self.prompt_len = prompt_len
         self.tokens: list[int] = []
         self.admitted_tick = admitted_tick
         self.ready_wall = ready_wall
         self.first_wall = 0.0
+        self.admit_seq = admit_seq            # FIFO drain order
+        self.tier_tokens: dict[str, int] = {}
 
 
 class Engine:
@@ -78,6 +98,10 @@ class Engine:
         CO2eq (`Completion.carbon`, cumulative counters in `stats()`).
         None (default) serves unmetered at zero added work beyond an
         `is None` check per phase.
+      tiers: ordered multiplier-tier ladder for graceful degradation
+        (names resolvable by `api.make_spec`, e.g. ("exact", "trunc2x2",
+        "trunc4x4")); index 0 serves by default.  None (default) keeps
+        the single-tier behavior: one tier named by `cfg.mult`.
     """
 
     def __init__(self, cfg: ModelConfig, params: Any | None = None, *,
@@ -85,7 +109,7 @@ class Engine:
                  prefill_buckets: tuple[int, ...] | None = None,
                  mesh=None, target=None, seed: int = 0,
                  on_token: Callable[[str, int], None] | None = None,
-                 meter=None):
+                 meter=None, tiers: tuple[str, ...] | None = None):
         if mesh is None:
             if target is not None:
                 mesh = target.make_mesh()
@@ -98,19 +122,11 @@ class Engine:
         self.buckets = tuple(sorted(prefill_buckets or (max_len,)))
         self.on_token = on_token
         self.meter = meter
-        self._spec = api.make_spec(cfg)
+        self.tiers = tuple(tiers) if tiers else (cfg.mult or "exact",)
+        if len(set(self.tiers)) != len(self.tiers):
+            raise ValueError(f"duplicate tier names in {self.tiers}")
         self.params = params if params is not None else api.init_params(
             cfg, jax.random.key(seed))
-        # Serving-time weight-plane cache: weights are static across the
-        # engine's life, so quantize (and pre-map, for the XLA path) each
-        # GEMM weight once per (weight, spec) instead of on every decode
-        # step.  `exec_params` feeds prefill AND decode; `self.params`
-        # stays raw (bit-identical outputs either way — the cache is a
-        # recomputation saving, not an approximation).  The mesh argument
-        # commits every (prepared) weight under the TP rules: per-shard
-        # int8 planes, not a device-0 copy.
-        self.exec_params = api.prepare_params(self.params, cfg, self._spec,
-                                              mesh=self.mesh)
 
         self._arena = SlotArena(cfg, capacity, max_len)
         self._state = {
@@ -134,11 +150,29 @@ class Engine:
         self._state_sh = self._state_shardings()
         self._state = jax.device_put(self._state, self._state_sh)
 
-        self._prefill = ts.make_prefill_step(cfg, mesh, max_len=max_len)
-        self._decode = jax.jit(
-            self._decode_impl, donate_argnums=(1,),
-            out_shardings=(self._state_sh, self._replicated()))
+        # Per-tier serving artifacts.  The weight-plane cache is built
+        # once per (weight, multiplier) — switching tiers later is a
+        # pointer swap, exactly the reuse `api.prepare_params` promises.
+        # `self.params` stays raw (bit-identical outputs either way —
+        # the cache is a recomputation saving, not an approximation).
+        self._tier_specs: dict[str, Any] = {}
+        self._tier_exec: dict[str, Any] = {}
+        self._tier_prefill_fns: dict[str, Any] = {}
+        self._tier_decode_fns: dict[str, Any] = {}
+        for name in self.tiers:
+            spec = api.make_spec(cfg, mult=name)
+            self._tier_specs[name] = spec
+            self._tier_exec[name] = api.prepare_params(
+                self.params, cfg, spec, mesh=self.mesh)
+            self._tier_prefill_fns[name] = ts.make_prefill_step(
+                cfg, mesh, max_len=max_len, spec=spec)
+            self._tier_decode_fns[name] = self._make_decode(spec)
         self._first = jax.jit(sampling.sample_tokens)
+
+        self._tier = self.tiers[0]
+        self._tier_tokens: dict[str, int] = {t: 0 for t in self.tiers}
+        self._tier_switches: list[dict] = []
+        self._activate(self._tier)
 
         self._sched = Scheduler()
         self._ids: set[str] = set()
@@ -173,17 +207,58 @@ class Engine:
 
     # --- jitted decode + sample ------------------------------------------
 
-    def _decode_impl(self, params, state):
-        extras = {"img_embeds": state["img"]} if "img" in state else {}
-        with ctx.use_rules(self.mesh, rules.logical_rules(self.mesh)):
-            logits, cache = api.decode_step(params, state["cache"],
-                                            state["tok"], self.cfg,
-                                            spec=self._spec, extras=extras)
-        keys = jax.vmap(lambda k: jax.random.split(k))(state["rng"])
-        tok = sampling.sample_tokens(logits[:, -1], state["temp"],
-                                     state["topk"], keys[:, 0])
-        new = dict(state, cache=cache, tok=tok[:, None], rng=keys[:, 1])
-        return new, tok
+    def _make_decode(self, spec):
+        """One jitted decode+sample per tier: the spec is baked into the
+        trace (it is a jit-cache-keying pytree), so each tier compiles
+        exactly once and tier switches never retrace another tier."""
+
+        def decode_impl(params, state):
+            extras = {"img_embeds": state["img"]} if "img" in state else {}
+            with ctx.use_rules(self.mesh, rules.logical_rules(self.mesh)):
+                logits, cache = api.decode_step(params, state["cache"],
+                                                state["tok"], self.cfg,
+                                                spec=spec, extras=extras)
+            keys = jax.vmap(lambda k: jax.random.split(k))(state["rng"])
+            tok = sampling.sample_tokens(logits[:, -1], state["temp"],
+                                         state["topk"], keys[:, 0])
+            new = dict(state, cache=cache, tok=tok[:, None], rng=keys[:, 1])
+            return new, tok
+
+        return jax.jit(decode_impl, donate_argnums=(1,),
+                       out_shardings=(self._state_sh, self._replicated()))
+
+    # --- degradation tiers ------------------------------------------------
+
+    @property
+    def tier(self) -> str:
+        """Name of the multiplier tier currently serving."""
+        return self._tier
+
+    @property
+    def tier_index(self) -> int:
+        return self.tiers.index(self._tier)
+
+    def _activate(self, name: str) -> None:
+        """Point the serving hot path at `name`'s artifacts (also used
+        by the retrace sanitizer to re-point after wrapping)."""
+        self._spec = self._tier_specs[name]
+        self.exec_params = self._tier_exec[name]
+        self._prefill = self._tier_prefill_fns[name]
+        self._decode = self._tier_decode_fns[name]
+
+    def set_tier(self, name: str) -> None:
+        """Switch the serving tier (prefill AND decode).  In-flight
+        requests keep their KV/state — tokens emitted after the switch
+        come from the new tier's multiplier and are attributed to it."""
+        if name not in self._tier_specs:
+            raise ValueError(
+                f"unknown tier {name!r}; engine tiers: {self.tiers}")
+        if name == self._tier:
+            return
+        self._tier_switches.append(
+            {"tick": self._tick, "from": self._tier, "to": name})
+        self._tier = name
+        self._activate(name)
 
     # --- submission -------------------------------------------------------
 
@@ -206,6 +281,11 @@ class Engine:
             raise ValueError(
                 f"{request.request_id}: prompt {n} + {sp.max_new_tokens} "
                 f"new tokens exceeds arena max_len {self.max_len}")
+        for field in ("ttft_deadline_ticks", "deadline_ticks"):
+            v = getattr(request, field)
+            if v is not None and v < 1:
+                raise ValueError(f"{request.request_id}: {field} must be "
+                                 f">= 1 tick (got {v})")
         self._ids.add(request.request_id)
         self._sched.submit(request)
 
@@ -237,8 +317,8 @@ class Engine:
                 1, cfg.n_img_tokens, cfg.d_model)
         return out
 
-    def _admit(self, request: Request, ready_wall: float) -> None:
-        slot_id = self._free.pop()
+    def _admit(self, request: Request, ready_wall: float,
+               slot_id: int) -> None:
         sp = request.sampling
         prompt = np.asarray(request.tokens, np.int32)
         n = prompt.shape[0]
@@ -281,7 +361,7 @@ class Engine:
         # always keys on one sharding layout
         self._state = jax.device_put(self._state, self._state_sh)
 
-        slot = _Slot(request, n, self._tick, ready_wall)
+        slot = _Slot(request, n, self._tick, ready_wall, self._admitted)
         slot.first_wall = time.perf_counter()
         self._slots[slot_id] = slot
         self._emit(slot_id, int(first[0]))
@@ -291,13 +371,22 @@ class Engine:
     def _emit(self, slot_id: int, token: int) -> None:
         slot = self._slots[slot_id]
         slot.tokens.append(token)
+        slot.tier_tokens[self._tier] = \
+            slot.tier_tokens.get(self._tier, 0) + 1
+        self._tier_tokens[self._tier] += 1
         if self.on_token is not None:
             self.on_token(slot.request.request_id, token)
         sp = slot.request.sampling
-        if (sp.eos_id >= 0 and token == sp.eos_id) or \
-                len(slot.tokens) >= sp.max_new_tokens:
-            self._evict(slot_id, "eos" if sp.eos_id >= 0 and
-                        token == sp.eos_id else "length")
+        req = slot.request
+        if sp.eos_id >= 0 and token == sp.eos_id:
+            self._evict(slot_id, "eos")
+        elif len(slot.tokens) >= sp.max_new_tokens:
+            self._evict(slot_id, "length")
+        elif req.deadline_ticks is not None and \
+                self._tick - req.arrival + 1 >= req.deadline_ticks:
+            # total budget exhausted: keep the partial generation, free
+            # the slot for work that can still finish in time
+            self._evict(slot_id, "deadline")
 
     def _evict(self, slot_id: int, reason: str) -> None:
         slot = self._slots[slot_id]
@@ -317,9 +406,31 @@ class Engine:
             latency_s=now - slot.ready_wall,
             carbon=(self.meter.finalize(slot.request.request_id,
                                         len(slot.tokens))
-                    if self.meter is not None else None)))
+                    if self.meter is not None else None),
+            attempt=slot.request.attempt,
+            tier_tokens=dict(slot.tier_tokens)))
         self._slots[slot_id] = None
         self._free.append(slot_id)
+
+    def _shed(self, request: Request) -> None:
+        """Complete a never-admitted request whose deadline is already
+        unmeetable (load shedding at admission)."""
+        self._evictions["shed"] = self._evictions.get("shed", 0) + 1
+        self._sched._ready_wall.pop(request.request_id, None)
+        self.completions.append(Completion(
+            request_id=request.request_id,
+            prompt_len=len(request.tokens),
+            tokens=[],
+            finish_reason="shed",
+            arrival=request.arrival,
+            admitted_tick=-1,
+            finished_tick=self._tick,
+            ttft_s=0.0,
+            latency_s=0.0,
+            carbon=(self.meter.finalize(request.request_id, 0)
+                    if self.meter is not None else None),
+            attempt=request.attempt,
+            tier_tokens={}))
 
     # --- the serving loop -------------------------------------------------
 
@@ -337,25 +448,50 @@ class Engine:
         return len(self._sched)
 
     def pending_requests(self) -> list[Request]:
-        """Every submitted-but-unfinished request: in-flight slot
-        occupants first (admission order is not preserved), then the
-        waiting queue.  This is the drain surface a fleet supervisor
-        uses to re-queue work off a dead replica — requests, not partial
-        generations, so a re-served request regenerates from scratch."""
-        out = [s.request for s in self._slots if s is not None]
+        """Every submitted-but-unfinished request in FIFO order:
+        in-flight slot occupants by admission order first, then the
+        waiting queue by (arrival, submission) order.  This is the drain
+        surface a fleet supervisor uses to re-queue work off a dead
+        replica — requests, not partial generations, so a re-served
+        request regenerates from scratch; the ordering guarantees a
+        failover preserves arrival FIFO on the surviving replicas."""
+        active = sorted((s for s in self._slots if s is not None),
+                        key=lambda s: s.admit_seq)
+        out = [s.request for s in active]
         out.extend(self._sched.pending())
         return out
 
+    def active_request_ids(self) -> set[str]:
+        """Ids currently holding arena slots (admitted, unfinished) —
+        the diff surface a supervisor uses to wall-clock-stamp
+        admissions without reaching into slot internals."""
+        return {s.request.request_id for s in self._slots if s is not None}
+
     def step(self) -> None:
-        """One engine tick: admit due requests into free slots, then run
-        one decode step across the whole arena."""
+        """One engine tick: shed dead-on-arrival requests, admit due
+        requests into free slots, then run one decode step across the
+        whole arena."""
         now = self._tick
         self._sched.note_ready(now, time.perf_counter())
+        for request in self._sched.pop_expired(now):
+            self._shed(request)
         while self._free:
             request = self._sched.pop_ready(now)
             if request is None:
                 break
-            self._admit(request, self._sched.ready_wall(request.request_id))
+            ready_wall = self._sched.ready_wall(request.request_id)
+            slot_id = self._free.pop()
+            try:
+                self._admit(request, ready_wall, slot_id)
+            except Exception:
+                # crash mid-prefill/insert: restore the host-side queue
+                # state so pending_requests() still drains the victim —
+                # the supervisor re-queues it elsewhere (device state
+                # dies with the engine)
+                if self._slots[slot_id] is None:
+                    self._free.append(slot_id)
+                    self._sched.restore(request, ready_wall)
+                raise
         if self.n_active:
             t0 = time.perf_counter()
             self._state, tok = self._decode(self.exec_params, self._state)
@@ -399,7 +535,13 @@ class Engine:
                "queue_wait_ticks_mean":
                    self._queue_wait_ticks / done if done else 0.0,
                "evictions": dict(self._evictions),
-               "mesh": {ax: int(sz) for ax, sz in self.mesh.shape.items()}}
+               "mesh": {ax: int(sz) for ax, sz in self.mesh.shape.items()},
+               # accuracy-exposure audit: tokens served per multiplier
+               # tier plus the switch log (empty while single-tier)
+               "tiers": {"active": self._tier,
+                         "ladder": list(self.tiers),
+                         "tokens": dict(self._tier_tokens),
+                         "switches": list(self._tier_switches)}}
         if self.meter is not None:
             out["carbon"] = self.meter.summary()
         for name, fn in (("prefill", self._prefill),

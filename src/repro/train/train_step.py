@@ -168,12 +168,18 @@ def make_train_step(cfg: ModelConfig, options: StepOptions, mesh: Mesh,
 
 # --- serving steps -----------------------------------------------------------
 
+_RESOLVE_SPEC = object()   # sentinel: None is a meaningful spec (exact)
+
+
 def make_prefill_step(cfg: ModelConfig, mesh: Mesh,
-                      max_len: int | None = None):
+                      max_len: int | None = None, spec=_RESOLVE_SPEC):
     """Jitted prefill, uniform for all four families (the serving engine's
     prefill phase).  `max_len` pads position-indexed caches (KV) up to the
-    decode arena size; `true_len` supports right-padded prompt buckets."""
-    spec = api.make_spec(cfg)
+    decode arena size; `true_len` supports right-padded prompt buckets.
+    `spec` overrides the config-resolved multiplier spec (explicit None =
+    exact) — the engine passes one per degradation tier."""
+    if spec is _RESOLVE_SPEC:
+        spec = api.make_spec(cfg)
 
     def wrapped(params, tokens, extras, true_len=None):
         with ctx.use_rules(mesh, rules.logical_rules(mesh)):

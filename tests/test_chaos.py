@@ -1,0 +1,181 @@
+"""Chaos-engineering tests for the fleet: seeded fault schedules,
+spiked grids, and full campaigns whose invariant checkers (zero lost,
+exactly-once, meter conservation, deadline accounting, monotone
+degrade/restore) must hold — deterministically, from the chaos seed."""
+
+import dataclasses
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.fleet import (ChaosCampaign, ChaosSchedule, DegradationConfig,
+                         Fleet, FleetConfig, Replica, StaticGrid)
+from repro.fleet.chaos import (CHECKERS, ChaosEvent, SpikedGrid,
+                               check_exactly_once, check_zero_lost)
+from repro.launch.fleet import poisson_requests
+from repro.models import api
+from repro.serving import Request, SamplingParams
+
+ARCH = "tinyllama-1.1b"
+
+
+def _cfg():
+    return configs.reduced(configs.get_config(ARCH))
+
+
+@functools.lru_cache(maxsize=1)
+def _params():
+    return api.init_params(_cfg(), jax.random.key(0))
+
+
+def _prompt(n, seed, vocab=512):
+    return np.random.default_rng(seed).integers(1, vocab, (n,)).tolist()
+
+
+def _tiered_fleet(slo=32.0):
+    cfg, params = _cfg(), _params()
+    reps = [Replica(name, cfg, grid=StaticGrid(name), params=params,
+                    capacity=2, max_len=48, seed=0,
+                    tiers=("exact", "trunc4x4"))
+            for name in ("us-west", "eu-west")]
+    return Fleet(reps, FleetConfig(
+        ttft_slo_ticks=slo, retry_budget=3, probation_steps=2,
+        degradation=DegradationConfig(patience=1, min_dwell_ticks=2)))
+
+
+def _trace(n=8, gen=4, slo=32.0):
+    cfg = _cfg()
+    return [dataclasses.replace(r, ttft_deadline_ticks=4.0 * slo,
+                                deadline_ticks=8.0 * slo)
+            for r in poisson_requests(n, 6, gen, cfg.vocab, seed=1)]
+
+
+# --- schedule / event plumbing ----------------------------------------------
+
+def test_chaos_event_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        ChaosEvent(1, "meteor", "a")
+    with pytest.raises(ValueError, match="needs a replica"):
+        ChaosEvent(1, "straggler")
+    ev = ChaosEvent(3, "transient", "a", recovery_ticks=2)
+    assert ev.to_dict() == {"tick": 3, "kind": "transient", "replica": "a",
+                            "recovery_ticks": 2}
+    burst = ChaosEvent(5, "burst", n_requests=4)
+    assert burst.to_dict() == {"tick": 5, "kind": "burst", "n_requests": 4}
+
+
+def test_chaos_schedule_replayable_from_seed():
+    names = ["a", "b", "c"]
+    s1 = ChaosSchedule.random(11, names, horizon_ticks=20, n_events=8)
+    s2 = ChaosSchedule.random(11, names, horizon_ticks=20, n_events=8)
+    assert s1.events == s2.events and s1.seed == 11
+    assert len(s1.events) == 8
+    assert all(e.kind != "kill" for e in s1.events)  # default pool is safe
+    assert [e.tick for e in s1.events] == sorted(e.tick
+                                                 for e in s1.events)
+    s3 = ChaosSchedule.random(12, names, horizon_ticks=20, n_events=8)
+    assert s3.events != s1.events
+
+
+def test_spiked_grid_windows_routing_view_only():
+    base = StaticGrid("us-west")
+    g0 = base.g_per_kwh(0.0)
+    spiked = SpikedGrid(base=base, t0_s=10.0, t1_s=20.0, factor=4.0)
+    assert spiked.region == "us-west"
+    assert spiked.g_per_kwh(5.0) == g0
+    assert spiked.g_per_kwh(10.0) == pytest.approx(4.0 * g0)
+    assert spiked.g_per_kwh(19.99) == pytest.approx(4.0 * g0)
+    assert spiked.g_per_kwh(20.0) == g0
+
+
+# --- campaigns ---------------------------------------------------------------
+
+def test_seeded_campaign_invariants_hold():
+    """The random seed-7 campaign (transient crashes w/ recovery,
+    submit-boundary deaths, stragglers, grid spikes, bursts) over a
+    Poisson trace: every invariant checker must come back clean."""
+    fleet = _tiered_fleet()
+    schedule = ChaosSchedule.random(7, [r.name for r in fleet.replicas])
+    report = ChaosCampaign(fleet, _trace(), schedule).run()
+    assert report.ok, report.violations
+    assert report.violations == []
+    assert report.lost == 0
+    assert report.completed == report.submitted
+    assert len(report.faults_by_kind) >= 3
+    # at least one replica actually died and came back
+    assert report.recoveries >= 1
+    assert sum(report.restarts.values()) >= 1
+    # ...and the retry discipline really re-attempted work
+    assert report.requeued >= 1 and report.max_attempt >= 1
+    # every replica ends the campaign back on its exact tier
+    assert all(t == "exact" for t in report.final_tiers.values())
+
+
+def test_campaign_is_deterministic():
+    """Same (trace, schedule seed) -> bit-identical campaign report,
+    including which faults fired, retries, and tier occupancy."""
+    def run():
+        fleet = _tiered_fleet()
+        schedule = ChaosSchedule.random(7, [r.name for r in fleet.replicas])
+        return ChaosCampaign(fleet, _trace(), schedule).run().to_dict()
+
+    assert run() == run()
+
+
+def test_campaign_hand_written_transient_crash():
+    """A hand-written schedule: kill the preferred replica mid-trace
+    with a 3-tick recovery; its work fails over, it restarts through
+    probation, and the meters conserve energy across the restart."""
+    fleet = _tiered_fleet()
+    trace = _trace(n=6, gen=4)
+    schedule = ChaosSchedule(events=(
+        ChaosEvent(2, "transient", "us-west", recovery_ticks=3),), seed=0)
+    report = ChaosCampaign(fleet, trace, schedule,
+                           cooldown_ticks=16).run()
+    assert report.ok, report.violations
+    assert report.faults_by_kind == {"transient": 1}
+    assert report.restarts == {"us-west": 1} and report.recoveries == 1
+    assert fleet.replicas[0].alive
+    # checkers are also callable standalone
+    assert check_zero_lost(fleet, {}) == []
+    assert check_exactly_once(
+        fleet, {r.request_id: r for r in trace}) == []
+    assert len(CHECKERS) == 5
+
+
+def test_campaign_burst_triggers_brownout():
+    """A burst flood on a tight SLO pushes the controller down the
+    ladder (approx tokens served, audited), and cooldown restores
+    exact — the monotone-tiers checker enforces both directions."""
+    fleet = _tiered_fleet(slo=16.0)
+    schedule = ChaosSchedule(events=(
+        ChaosEvent(1, "burst", n_requests=10),), seed=5)
+    report = ChaosCampaign(fleet, [], schedule, cooldown_ticks=24).run()
+    assert report.ok, report.violations
+    assert report.submitted == 10
+    assert report.degradation_events >= 2          # down AND back up
+    assert report.tier_occupancy.get("trunc4x4", 0) > 0
+    assert all(t == "exact" for t in report.final_tiers.values())
+    # wall-clock TTFT under brownout stayed within the (tight) SLO
+    assert report.ttft_p95_ticks <= report.ttft_slo_ticks
+
+
+def test_grid_spike_steers_routing():
+    """Spiking the clean region's intensity makes the router prefer the
+    other replica for traffic arriving inside the spike window."""
+    fleet = _tiered_fleet()
+    # without chaos, us-west (263 g/kWh) beats eu-west (346)
+    schedule = ChaosSchedule(events=(
+        ChaosEvent(0, "grid_spike", "us-west", factor=4.0,
+                   duration_ticks=64),), seed=3)
+    trace = [Request(f"g{i}", _prompt(5, i),
+                     SamplingParams(max_new_tokens=3), arrival=float(i))
+             for i in range(4)]
+    report = ChaosCampaign(fleet, trace, schedule,
+                           cooldown_ticks=4).run()
+    assert report.ok, report.violations
+    routed = {rec.request_id: rec.replica for rec in fleet.routes}
+    assert all(routed[f"g{i}"] == "eu-west" for i in range(4))

@@ -347,6 +347,179 @@ def test_fleet_stats_totals_aggregate_meters():
     assert ttft_ticks(fleet.completions()[0]) >= 1
 
 
+# --- robustness: submit races, retries, recovery, degradation ---------------
+
+def test_submit_fault_rerouted_transparently():
+    """A replica that died since the router's last health view raises
+    ReplicaDead at the submission boundary; route() must fail it over
+    and land the request on a survivor — never lose it (regression for
+    the raise escaping the routing path)."""
+    fleet = _two_replica_fleet()
+    fleet.replicas[0].inject_submit_fault()   # us-west: the preferred one
+    r = fleet.route(Request("x", _prompt(5, 0),
+                            SamplingParams(max_new_tokens=3), arrival=0.0))
+    assert r.name == "eu-west"
+    assert not fleet.replicas[0].alive
+    comps = fleet.run_until_complete()
+    assert [c.request_id for c in comps] == ["x"]
+    assert comps[0].finish_reason == "length"
+    assert not fleet.lost_requests()
+    assert len(fleet.routes) == 1 and fleet.routes[0].replica == "eu-west"
+
+
+def test_failover_during_prefill_restores_request():
+    """A crash inside the prefill step: the slot must not leak and the
+    request must complete on the survivor exactly once."""
+    fleet = _two_replica_fleet()
+    victim = fleet.replicas[0]                # us-west is preferred
+    real = victim.engine._prefill
+
+    def boom(*a, **kw):
+        raise RuntimeError("XlaRuntimeError: device lost")
+
+    victim.engine._prefill = boom
+    fleet.submit(Request("p", _prompt(8, 1),
+                         SamplingParams(max_new_tokens=4), arrival=0.0))
+    comps = fleet.run_until_complete()
+    victim.engine._prefill = real
+    assert not victim.alive                   # crash marked it dead
+    assert [c.request_id for c in comps] == ["p"]
+    assert comps[0].attempt == 1              # served by the retry
+    assert not fleet.lost_requests()
+    # the re-queued attempt backed off deterministically then landed on
+    # the survivor
+    assert fleet.requeued == 1
+    assert fleet.routes[-1].replica == "eu-west"
+
+
+def test_drain_fifo_ordering_preserved_across_failover():
+    """drain() yields in-flight (by admission) then queued (by arrival)
+    requests; the router re-queues them in that order, so the survivor
+    serves the dead replica's work in the original FIFO order."""
+    fleet = _two_replica_fleet(ttft_slo_ticks=1000.0, capacity=2)
+    victim = fleet.replicas[0]
+    # the generous SLO keeps every request carbon-routed to us-west
+    for i in range(5):
+        fleet.route(Request(f"r{i}", _prompt(5, i),
+                            SamplingParams(max_new_tokens=6), arrival=0.0))
+    assert victim.routed == 5
+    fleet.step()                              # r0, r1 admitted; r2+ queued
+    drained_preview = [r.request_id
+                       for r in victim.engine.pending_requests()]
+    assert drained_preview == [f"r{i}" for i in range(5)]
+    fleet.kill_replica("us-west")
+    assert fleet.requeue_events[-1]["requeued"] == drained_preview
+    fleet.run_until_complete()
+    assert not fleet.lost_requests()
+    # FIFO preserved end to end: the survivor admitted r0..r4 in order
+    requeues = [rec for rec in fleet.routes if rec.requeue]
+    assert [rec.request_id for rec in requeues] == drained_preview
+    done = {c.request_id: c for c in fleet.completions()}
+    admits = [done[f"r{i}"].admitted_tick for i in range(5)]
+    assert admits == sorted(admits)
+
+
+def test_retry_budget_exhaustion_sheds_not_loses():
+    fleet = _two_replica_fleet()
+    fleet.cfg = dataclasses.replace(fleet.cfg, retry_budget=0)
+    fleet.submit(Request("doomed", _prompt(5, 0),
+                         SamplingParams(max_new_tokens=4), arrival=0.0))
+    fleet.step()                              # routed + admitted
+    victim = next(r for r in fleet.replicas if r.routed)
+    fleet.kill_replica(victim.name)           # attempt 1 > budget 0
+    comps = fleet.run_until_complete()
+    assert not fleet.lost_requests()
+    (c,) = [c for c in comps if c.request_id == "doomed"]
+    assert c.finish_reason == "shed" and c.tokens == []
+    s = fleet.stats()["robustness"]
+    assert s["retry_exhausted"] == 1
+
+
+def test_retry_backoff_is_exponential_in_ticks():
+    fleet = _two_replica_fleet()
+    fleet.cfg = dataclasses.replace(fleet.cfg, retry_budget=3,
+                                    retry_backoff_ticks=2.0)
+    base = Request("b", _prompt(4, 0), SamplingParams(max_new_tokens=2))
+    for attempt, delay in [(0, 2.0), (1, 4.0), (2, 8.0)]:
+        fleet._requeue(dataclasses.replace(base, attempt=attempt))
+    arrivals = sorted(t for t, _, _ in fleet._pending)
+    assert arrivals == [2.0, 4.0, 8.0]
+    # attempts are restamped on the re-queued copies
+    attempts = sorted(req.attempt for _, _, req in fleet._pending)
+    assert attempts == [1, 2, 3]
+
+
+def test_transient_death_restarts_through_probation():
+    """kill_replica(recovery_ticks=K): the replica restarts K ticks
+    later with a fresh engine + re-prepared planes, serves no fresh
+    traffic during probation, and rejoins afterwards."""
+    cfg, params = _cfg(), _params()
+    fleet = _two_replica_fleet()
+    fleet.cfg = dataclasses.replace(fleet.cfg, probation_steps=2)
+    for r in poisson_requests(6, 5, 4, cfg.vocab, seed=2):
+        fleet.submit(r)
+    fleet.step()
+    fleet.kill_replica("us-west", recovery_ticks=3)
+    dead_tick = fleet.tick
+    assert not fleet.replicas[0].alive
+    fleet.run_until_complete()
+    s = fleet.stats()
+    assert s["lost"] == [] and s["completed"] == s["submitted"]
+    rec, = s["robustness"]["recoveries"]
+    assert rec["replica"] == "us-west" and rec["tick"] >= dead_tick + 3
+    assert s["robustness"]["restarts"] == {"us-west": 1}
+    rep = fleet.replicas[0]
+    assert rep.alive and rep.restarts == 1
+    # probation over (it was stepped while idle); fresh traffic OK again
+    assert "us-west" not in fleet._probation
+    fleet.submit(Request("after", _prompt(5, 8),
+                         SamplingParams(max_new_tokens=3),
+                         arrival=float(fleet.tick)))
+    fleet.run_until_complete()
+    assert not fleet.lost_requests()
+    # meter conservation across the restart: finalized + abandoned +
+    # open == metered total on every replica
+    for r in fleet.replicas:
+        cs = r.carbon_summary()
+        acc = (cs["finalized_energy_j"] + cs["abandoned_energy_j"]
+               + cs["open_energy_j"])
+        assert acc == pytest.approx(cs["energy_j"], rel=1e-9)
+
+
+def test_degradation_controller_brownout_and_restore():
+    """Burst overload on a tier-laddered replica: the controller steps
+    down the ladder under SLO pressure (tokens attributed to the approx
+    tier), then restores exact once the queue drains; wall-clock TTFT
+    stamps are recorded for every served request."""
+    from repro.fleet import DegradationConfig
+    cfg, params = _cfg(), _params()
+    rep = Replica("us-west", cfg, grid=StaticGrid("us-west"),
+                  params=params, capacity=1, max_len=48, seed=0,
+                  tiers=("exact", "trunc4x4"))
+    fleet = Fleet([rep], FleetConfig(
+        ttft_slo_ticks=6.0,
+        degradation=DegradationConfig(patience=1, min_dwell_ticks=2)))
+    for i in range(6):
+        fleet.submit(Request(f"b{i}", _prompt(5, i),
+                             SamplingParams(max_new_tokens=5), arrival=0.0))
+    fleet.run_until_complete()
+    for _ in range(10):                      # idle ticks: headroom back
+        fleet.step()
+    ev = fleet.controller.events
+    assert ev[0]["reason"] == "slo_headroom" and ev[0]["to"] == "trunc4x4"
+    assert any(e["reason"] == "headroom_restored" for e in ev)
+    assert rep.engine.tier == "exact"        # restored after the burst
+    occ = fleet.tier_occupancy()
+    assert occ.get("trunc4x4", 0) > 0        # brownout really served
+    assert sum(occ.values()) == 30
+    wall = fleet.wall_ttft_ticks()
+    assert set(wall) == {f"b{i}" for i in range(6)}
+    assert all(t >= 1 for t in wall.values())
+    # the degraded tier banked step credit: the flood drained in fewer
+    # fleet ticks than tokens served on a single exact slot would need
+    assert fleet.stats()["ticks"] < 30 + 10
+
+
 # --- total-carbon objective --------------------------------------------------
 
 def test_operational_model_validation():

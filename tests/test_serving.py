@@ -243,6 +243,93 @@ def test_families_serve_heterogeneous_trace(arch):
         assert stats["prefill_compiles"] == 1, stats
 
 
+# --- request lifecycle: deadlines, shedding, tiers --------------------------
+
+def test_ttft_deadline_sheds_instead_of_admitting_late():
+    """A queued request whose TTFT budget is already blown is shed —
+    tokens empty, never admitted — while the running request and an
+    in-budget waiter are unaffected."""
+    cfg, params = _cfg("tinyllama-1.1b"), _params("tinyllama-1.1b")
+    eng = Engine(cfg, params, capacity=1, max_len=64, seed=0)
+    eng.submit(Request("hog", _prompt(8, 0),
+                       SamplingParams(max_new_tokens=10)))
+    eng.submit(Request("tight", _prompt(8, 1),
+                       SamplingParams(max_new_tokens=4),
+                       ttft_deadline_ticks=2.0))
+    eng.submit(Request("patient", _prompt(8, 2),
+                       SamplingParams(max_new_tokens=4),
+                       ttft_deadline_ticks=64.0))
+    done = {c.request_id: c for c in eng.run_until_complete()}
+    assert done["hog"].finish_reason == "length"
+    shed = done["tight"]
+    assert shed.finish_reason == "shed"
+    assert shed.tokens == [] and shed.admitted_tick == -1
+    ok = done["patient"]
+    assert ok.finish_reason == "length" and len(ok.tokens) == 4
+    assert ok.admitted_tick - ok.arrival + 1 <= 64
+    assert eng.stats()["evictions"]["shed"] == 1
+
+
+def test_total_deadline_evicts_partial_generation():
+    cfg, params = _cfg("tinyllama-1.1b"), _params("tinyllama-1.1b")
+    eng = Engine(cfg, params, capacity=1, max_len=64, seed=0)
+    eng.submit(Request("d", _prompt(8, 3),
+                       SamplingParams(max_new_tokens=12),
+                       deadline_ticks=5.0))
+    (c,) = eng.run_until_complete()
+    assert c.finish_reason == "deadline"
+    assert 0 < len(c.tokens) < 12                 # partial kept
+    assert c.finished_tick - c.arrival + 1 <= 5
+    # the partial stream is a prefix of the undeadlined one
+    ref = _solo_greedy(cfg, params, _prompt(8, 3), 12, 64)
+    assert c.tokens == ref[:len(c.tokens)]
+
+
+def test_deadline_validation():
+    cfg, params = _cfg("tinyllama-1.1b"), _params("tinyllama-1.1b")
+    eng = Engine(cfg, params, capacity=1, max_len=32, seed=0)
+    with pytest.raises(ValueError, match="ttft_deadline_ticks"):
+        eng.submit(Request("a", [1, 2], ttft_deadline_ticks=0.0))
+    with pytest.raises(ValueError, match="deadline_ticks"):
+        eng.submit(Request("b", [1, 2], deadline_ticks=-3.0))
+
+
+def test_tier_ladder_switch_attributes_tokens():
+    """A mid-flight tier switch: generated tokens are attributed to the
+    tier that served them, the switch is audited, and restoring the
+    exact tier does not recompile (per-tier jits are built once)."""
+    cfg, params = _cfg("tinyllama-1.1b"), _params("tinyllama-1.1b")
+    eng = Engine(cfg, params, capacity=1, max_len=48, seed=0,
+                 tiers=("exact", "trunc4x4"))
+    assert eng.tiers == ("exact", "trunc4x4") and eng.tier == "exact"
+    eng.submit(Request("t", _prompt(8, 7), SamplingParams(max_new_tokens=8)))
+    for _ in range(4):
+        eng.step()
+    eng.set_tier("trunc4x4")
+    assert eng.tier_index == 1
+    (c,) = eng.run_until_complete()
+    assert c.finish_reason == "length"
+    assert set(c.tier_tokens) == {"exact", "trunc4x4"}
+    assert sum(c.tier_tokens.values()) == len(c.tokens) == 8
+    assert c.tier_tokens["exact"] > 0 and c.tier_tokens["trunc4x4"] > 0
+    st = eng.stats()["tiers"]
+    assert st["ladder"] == ["exact", "trunc4x4"]
+    assert len(st["switches"]) == 1
+    assert st["tokens"] == c.tier_tokens
+    with pytest.raises(ValueError, match="unknown tier"):
+        eng.set_tier("trunc9x9")
+
+
+def test_single_tier_engine_stats_unchanged():
+    cfg, params = _cfg("tinyllama-1.1b"), _params("tinyllama-1.1b")
+    eng = Engine(cfg, params, capacity=1, max_len=32, seed=0)
+    assert eng.tiers == ("exact",)
+    eng.submit(Request("s", _prompt(6, 1), SamplingParams(max_new_tokens=3)))
+    (c,) = eng.run_until_complete()
+    assert c.tier_tokens == {"exact": 3}
+    assert eng.stats()["tiers"]["switches"] == []
+
+
 # --- scheduler unit ---------------------------------------------------------
 
 def test_scheduler_fifo_and_arrival_gating():

@@ -147,6 +147,44 @@ def test_straggler_watchdog():
     assert not wd.observe(7, 0.12)
 
 
+def test_straggler_watchdog_injectable_clock():
+    """step_start/step_end on an injected clock: detection is a pure
+    function of the fed timestamps (the fleet's virtual-tick clock uses
+    exactly this hook), no wall time involved."""
+    t = {"now": 0.0}
+    wd = fault.StragglerWatchdog(factor=3.0, min_samples=3,
+                                 clock=lambda: t["now"])
+    for s in range(5):
+        wd.step_start()
+        t["now"] += 1.0
+        assert not wd.step_end(s)
+    wd.step_start()
+    t["now"] += 10.0                      # 10x median -> flagged
+    assert wd.step_end(5)
+    assert wd.flagged == [5]
+    # replay with the same fed durations is bit-identical
+    wd2 = fault.StragglerWatchdog(factor=3.0, min_samples=3,
+                                  clock=lambda: t["now"])
+    for s, d in enumerate([1.0] * 5 + [10.0]):
+        wd2.observe(s, d)
+    assert wd2.flagged == wd.flagged
+
+
+def test_run_with_restarts_injectable_sleep():
+    """The supervisor's backoff goes through the injected sleep (linear
+    in the attempt), so deterministic tests never wall-wait."""
+    slept = []
+
+    def main(attempt):
+        if attempt < 2:
+            raise RuntimeError("boom")
+        return attempt
+
+    assert fault.run_with_restarts(main, max_restarts=3,
+                                   sleep=slept.append) == 2
+    assert slept == pytest.approx([0.1, 0.2])
+
+
 def test_preemption_guard_flag():
     g = fault.PreemptionGuard()
     assert not g.preempted
