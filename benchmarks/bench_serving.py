@@ -52,6 +52,207 @@ def build_trace(cfg, n_requests: int, rate: float, prompt_lo: int,
     return reqs
 
 
+def build_named_trace(name: str, cfg, args) -> list[Request]:
+    """Deterministic request sets for the slot-vs-paged comparison."""
+    if name == "standard":
+        return build_trace(cfg, args.requests, args.rate, args.prompt_min,
+                           args.prompt_max, args.gen_min, args.gen_max,
+                           args.seed, not args.uniform_sampling)
+    rng = np.random.default_rng(args.seed + {"long-prompt": 101,
+                                             "shared-prefix": 202,
+                                             "burst": 303}[name])
+    n = args.requests
+    reqs: list[Request] = []
+
+    def sp(i, gen):
+        if not args.uniform_sampling and i % 3 == 1:
+            return SamplingParams(temperature=0.8, top_k=16,
+                                  max_new_tokens=gen, seed=1000 + i)
+        return SamplingParams(max_new_tokens=gen)      # greedy
+
+    def prompt(k):
+        return rng.integers(0, cfg.vocab, (k,)).tolist()
+
+    def gen():
+        return int(rng.integers(args.gen_min, args.gen_max + 1))
+
+    if name == "long-prompt":
+        # a few near-max prompts with LONG generations hog slots while a
+        # stream of short requests arrives behind them: the whole-slot
+        # engine reserves a full max_len row per request, the paged
+        # engine admits by actual page need, so shorts queue far less
+        long_gen = min(2 * args.gen_max, args.max_len // 4)
+        long_lens = [args.max_len - long_gen - 2,
+                     args.max_len // 2 - 2]
+        t = 0.0
+        for i in range(n):
+            if i < max(2, n // 4):
+                k, g = long_lens[i % len(long_lens)], long_gen
+            else:
+                k = int(rng.integers(args.prompt_min, args.prompt_min + 3))
+                g = gen()
+            reqs.append(Request(f"lp{i:03d}", prompt(k), sp(i, g),
+                                arrival=t))
+            t += float(rng.exponential(1.0 / max(args.rate, 1e-9)))
+    elif name == "shared-prefix":
+        # request groups share a long system prefix: the paged engine
+        # serves the shared pages from the prefix cache (tail-only
+        # prefill); the whole-slot engine re-prefills every time
+        shared = prompt(args.max_len // 2)
+        for i in range(n):
+            tail = prompt(int(rng.integers(2, 6)))
+            reqs.append(Request(f"sp{i:03d}", shared + tail, sp(i, gen()),
+                                arrival=float(i) * 0.5))
+    elif name == "burst":
+        # everything lands at tick 0: pure admission-queue pressure
+        # (mid-length prompts, so the paged pool fits its extra lanes),
+        # drained faster by speculation
+        for i in range(n):
+            k = int(rng.integers(args.prompt_min,
+                                 args.max_len // 2 - 2))
+            reqs.append(Request(f"bu{i:03d}", prompt(k), sp(i, gen()),
+                                arrival=0.0))
+    else:
+        raise ValueError(f"unknown trace {name!r}")
+    return reqs
+
+
+def run_comparison(cfg, args, trace_names, mesh):
+    """Slot engine vs paged+chunked+speculative engine on shared params
+    and identical traces, at EQUAL KV MEMORY: the slot engine reserves
+    `capacity` full max_len rows; the paged engine gets the same pool of
+    KV tokens as pages and twice the decode lanes, admitting by actual
+    page need.  Per-trace latency metrics (wall + deterministic
+    tick-space TTFT), token identity (asserted — the differential
+    invariant rides in the bench), and aggregate speculation counters."""
+    import jax
+
+    from repro.models import api
+    from repro.serving import PagedEngine
+
+    params = api.init_params(cfg, jax.random.key(0))
+    kv_pool_tokens = args.capacity * args.max_len
+    paged_capacity = 2 * args.capacity
+    paged_kw = dict(page_size=args.page_size,
+                    n_pages=kv_pool_tokens // args.page_size + 1,
+                    prefill_chunk=args.prefill_chunk,
+                    chunk_budget=(args.chunk_budget
+                                  or max(1, args.max_len
+                                         // args.prefill_chunk)),
+                    spec_k=args.spec_k,
+                    draft_tier=args.draft_tier or None)
+    out = {"page_size": args.page_size,
+           "prefill_chunk": args.prefill_chunk,
+           "spec_k": args.spec_k,
+           "draft_tier": args.draft_tier or None,
+           "slot_capacity": args.capacity,
+           "paged_capacity": paged_capacity,
+           "kv_pool_tokens": kv_pool_tokens,
+           "traces": {}}
+    spec_tot = {"proposed": 0, "accepted": 0, "corrections": 0}
+    spec_steps = 0
+    retrace_ok = True
+    for name in trace_names:
+        reqs = build_named_trace(name, cfg, args)
+        rows, toks = {}, {}
+        entry: dict = {"requests": len(reqs)}
+        for kind in ("slot", "paged"):
+            if kind == "slot":
+                eng = Engine(cfg, params, capacity=args.capacity,
+                             max_len=args.max_len, seed=args.seed,
+                             mesh=mesh)
+            else:
+                eng = PagedEngine(cfg, params, capacity=paged_capacity,
+                                  max_len=args.max_len, seed=args.seed,
+                                  mesh=mesh, **paged_kw)
+            sanitizer = None
+            if args.sanitize_retrace:
+                from repro.analysis.retrace import instrument_engine
+                sanitizer = instrument_engine(eng)
+            # identical warmup protocol for both engines: one multi-chunk
+            # greedy request (warms prefill/chunk/draft/verify) plus one
+            # sampled request (warms the non-speculative decode path)
+            wl = max(args.prompt_min, args.prefill_chunk + 2)
+            eng.submit(Request("_warm_g", [1] * wl,
+                               SamplingParams(max_new_tokens=2)))
+            eng.submit(Request("_warm_s", [1] * args.prompt_min,
+                               SamplingParams(temperature=0.8, top_k=8,
+                                              max_new_tokens=2, seed=7)))
+            eng.run_until_complete()
+            base_decode_s = eng.stats()["decode_s"]
+            t0 = time.perf_counter()
+            start = eng.tick
+            for r in reqs:
+                eng.submit(dataclasses.replace(
+                    r, arrival=r.arrival + start))
+            done = [c for c in eng.run_until_complete()
+                    if not c.request_id.startswith("_warm")]
+            wall = time.perf_counter() - t0
+            toks[kind] = {c.request_id: c.tokens for c in done}
+            ttft = np.asarray([c.ttft_s for c in done])
+            ticks = np.asarray([c.ttft_ticks for c in done])
+            lat = np.asarray([c.latency_s for c in done])
+            st = eng.stats()
+            decode_toks = sum(len(c.tokens) - 1 for c in done)
+            rows[kind] = {
+                "wall_s": wall,
+                "ttft_p50_s": float(np.percentile(ttft, 50)),
+                "ttft_p95_s": float(np.percentile(ttft, 95)),
+                "ttft_p50_ticks": float(np.percentile(ticks, 50)),
+                "ttft_p95_ticks": float(np.percentile(ticks, 95)),
+                "latency_p95_s": float(np.percentile(lat, 95)),
+                "decode_tokens_per_s": decode_toks / max(
+                    st["decode_s"] - base_decode_s, 1e-9),
+            }
+            if sanitizer is not None:
+                finds = sanitizer.findings()
+                entry[f"{kind}_retrace_ok"] = not finds
+                retrace_ok &= not finds
+                for f_ in finds:
+                    print(f"[bench_serving]   {name}/{kind}: "
+                          f"{f_.render()}")
+            if kind == "paged":
+                pst = st["paged"]
+                entry["alloc"] = {k: pst[k] for k in
+                                  ("n_pages", "pages_live", "prefix_hits",
+                                   "prefix_hit_tokens", "cow_copies",
+                                   "alloc_failures")}
+                entry["chunks"] = pst["chunked"]["chunks"]
+                if "spec" in st:
+                    entry["spec"] = st["spec"]
+                    for k in spec_tot:
+                        spec_tot[k] += st["spec"][k]
+                    spec_steps += st["spec"]["steps"]
+        entry["tokens_match"] = toks["slot"] == toks["paged"]
+        assert entry["tokens_match"], (
+            name, {r: (toks["slot"][r], toks["paged"].get(r))
+                   for r in toks["slot"]
+                   if toks["slot"][r] != toks["paged"].get(r)})
+        entry["slot"], entry["paged"] = rows["slot"], rows["paged"]
+        entry["ttft_p95_improvement"] = (
+            rows["slot"]["ttft_p95_s"]
+            / max(rows["paged"]["ttft_p95_s"], 1e-9))
+        entry["ttft_p95_ticks_improvement"] = (
+            rows["slot"]["ttft_p95_ticks"]
+            / max(rows["paged"]["ttft_p95_ticks"], 1e-9))
+        out["traces"][name] = entry
+        print(f"[bench_serving] trace {name}: tokens MATCH, ttft p95 "
+              f"slot {rows['slot']['ttft_p95_ticks']:.1f} vs paged "
+              f"{rows['paged']['ttft_p95_ticks']:.1f} ticks "
+              f"({entry['ttft_p95_ticks_improvement']:.1f}x; wall "
+              f"{entry['ttft_p95_improvement']:.1f}x), decode "
+              f"{rows['slot']['decode_tokens_per_s']:.0f} vs "
+              f"{rows['paged']['decode_tokens_per_s']:.0f} tok/s")
+    spec = None
+    if args.draft_tier:
+        spec = {"draft_tier": args.draft_tier, "k": args.spec_k,
+                "steps": spec_steps, **spec_tot,
+                "acceptance_rate": (spec_tot["accepted"]
+                                    / spec_tot["proposed"]
+                                    if spec_tot["proposed"] else 0.0)}
+    return out, spec, retrace_ok
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b")
@@ -80,6 +281,29 @@ def main(argv=None) -> int:
                          "co2e_g_per_token and per-request carbon")
     ap.add_argument("--region", default="us-east",
                     help="grid region for --meter intensity")
+    ap.add_argument("--trace", action="append", default=None,
+                    choices=["standard", "long-prompt", "shared-prefix",
+                             "burst"],
+                    help="run a slot-vs-paged differential comparison on "
+                         "this named trace (repeatable); populates "
+                         "report['paged'] / report['spec']")
+    ap.add_argument("--paged", action="store_true",
+                    help="shorthand for --trace standard")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV page size (tokens) for the paged engine")
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="chunked-prefill chunk length for the paged "
+                         "engine")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft length for speculative decoding")
+    ap.add_argument("--chunk-budget", type=int, default=0,
+                    help="prefill chunks per engine tick (0 = enough "
+                         "for one full max_len prompt per tick)")
+    ap.add_argument("--draft-tier", default="exact",
+                    help="draft tier for speculative decoding in the "
+                         "paged comparison ('' disables; a mult name "
+                         "like trunc4x4 drafts approximately and "
+                         "verifies exactly)")
     ap.add_argument("--out", default="BENCH_serving.json")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny trace on the reduced config (CI)")
@@ -97,6 +321,7 @@ def main(argv=None) -> int:
         args.max_len = 64
         args.prompt_min, args.prompt_max = 6, 24
         args.gen_min, args.gen_max = 3, 6
+        args.page_size, args.prefill_chunk, args.spec_k = 8, 8, 3
 
     cfg = configs.apply_overrides(configs.get_config(args.arch),
                                   reduced=args.reduced, mult=args.mult,
@@ -111,9 +336,9 @@ def main(argv=None) -> int:
         from repro.fleet import DevicePowerModel, EnergyMeter, StaticGrid
         meter = EnergyMeter(power=DevicePowerModel(),
                             grid=StaticGrid(args.region))
+    mesh = make_mesh_from_spec(args.mesh)
     eng = Engine(cfg, capacity=args.capacity, max_len=args.max_len,
-                 seed=args.seed, mesh=make_mesh_from_spec(args.mesh),
-                 meter=meter)
+                 seed=args.seed, mesh=mesh, meter=meter)
     sanitizer = None
     if args.sanitize_retrace:
         # budgets count from here, so the warmup compiles are the ONLY
@@ -194,6 +419,15 @@ def main(argv=None) -> int:
         report["carbon"] = {"region": meter.region,
                             "g_per_kwh": meter.g_per_kwh_now(),
                             "power": stats["carbon"]["power"]}
+    trace_names = list(dict.fromkeys(
+        (["standard"] if args.paged else []) + (args.trace or [])))
+    cmp_retrace_ok = True
+    if trace_names:
+        paged_rep, spec_rep, cmp_retrace_ok = run_comparison(
+            cfg, args, trace_names, mesh)
+        report["paged"] = paged_rep
+        if spec_rep is not None:
+            report["spec"] = spec_rep
     retrace_findings = []
     if sanitizer is not None:
         retrace_findings = sanitizer.findings()
@@ -227,6 +461,15 @@ def main(argv=None) -> int:
             print(f"[bench_serving]   {f_.render()}")
         if retrace_findings:
             return 1
+    if "spec" in report:
+        s = report["spec"]
+        print(f"[bench_serving] spec (draft {s['draft_tier']}, "
+              f"k={s['k']}): {s['proposed']} proposed, "
+              f"{s['accepted']} accepted "
+              f"({s['acceptance_rate']:.2f}), "
+              f"{s['corrections']} corrections")
+    if not cmp_retrace_ok:
+        return 1
     return 0
 
 

@@ -22,7 +22,8 @@ import sys
 
 
 def check_serving(r: dict, expect_mesh: dict | None = None,
-                  expect_carbon: bool = False) -> None:
+                  expect_carbon: bool = False,
+                  expect_paged: bool = False) -> None:
     assert r["bench"] == "serving", r.get("bench")
     assert r["engine"]["completed"] == r["trace"]["requests"], r
     # per-request TTFT percentiles + queue-wait/eviction accounting
@@ -40,7 +41,12 @@ def check_serving(r: dict, expect_mesh: dict | None = None,
     if "retrace" in r:  # bench ran with --sanitize-retrace
         assert r["retrace"]["ok"] is True, r["retrace"]["findings"]
         w = r["retrace"]["watches"]
-        assert w["serving/engine:decode"]["compiles"] == 1, w
+        # a tier-ladder engine suffixes the decode watch per tier
+        # (serving/engine:decode[exact], ...): each compiles exactly once
+        dec = [k for k in w if k.startswith("serving/engine:decode")]
+        assert dec, w
+        for k in dec:
+            assert w[k]["compiles"] == 1, (k, w[k])
     if expect_carbon or "carbon" in r:  # bench ran with --meter
         assert {"energy_j", "co2e_g", "co2e_g_per_token",
                 "energy_j_per_token"} <= set(m), m
@@ -52,6 +58,43 @@ def check_serving(r: dict, expect_mesh: dict | None = None,
         tol = 1e-9 + 1e-6 * m["co2e_g"]
         assert abs(m["co2e_g_per_token"] * m["total_tokens"]
                    - m["co2e_g"]) <= tol, m
+    if expect_paged or "paged" in r:  # bench ran the paged comparison
+        assert "paged" in r, "serving report has no 'paged' section"
+        p = r["paged"]
+        assert p["page_size"] > 0 and p["traces"], p
+        assert p["paged_capacity"] > p["slot_capacity"], p
+        assert p["kv_pool_tokens"] == (p["slot_capacity"]
+                                       * r["trace"]["max_len"]), p
+        for name, t in p["traces"].items():
+            # the differential invariant rides in the bench: paged +
+            # chunked + speculative emits EXACTLY the slot engine's
+            # token streams on every trace
+            assert t["tokens_match"] is True, (name, t)
+            for kind in ("slot", "paged"):
+                row = t[kind]
+                assert {"wall_s", "ttft_p50_s", "ttft_p95_s",
+                        "ttft_p50_ticks", "ttft_p95_ticks",
+                        "latency_p95_s",
+                        "decode_tokens_per_s"} <= set(row), t
+                assert row["ttft_p95_ticks"] >= 1, t
+            a = t["alloc"]
+            assert a["alloc_failures"] == 0, (name, a)
+            if name == "shared-prefix":
+                assert a["prefix_hit_tokens"] > 0, (name, a)
+            if name in ("long-prompt", "burst"):
+                # equal-KV-memory page admission + speculation: p95
+                # ticks-to-first-token at least halves vs whole-slot
+                assert t["ttft_p95_ticks_improvement"] >= 2.0, (name, t)
+            for k in ("slot_retrace_ok", "paged_retrace_ok"):
+                if k in t:
+                    assert t[k] is True, (name, t)
+        if p.get("draft_tier"):
+            s = r["spec"]
+            assert s["proposed"] > 0, s
+            assert 0 <= s["accepted"] <= s["proposed"], s
+            assert 0.0 < s["acceptance_rate"] <= 1.0, s
+            if p["draft_tier"] == "exact":
+                assert s["acceptance_rate"] == 1.0, s
 
 
 def check_gemm(r: dict) -> None:
@@ -222,14 +265,15 @@ CHECKS = {"serving": check_serving, "gemm": check_gemm,
 
 def check_report(r: dict, expect_mesh: dict | None = None,
                  expect_carbon: bool = False,
-                 expect_chaos: bool = False) -> str:
+                 expect_chaos: bool = False,
+                 expect_paged: bool = False) -> str:
     """Dispatch on the report's "bench" field; returns the kind."""
     kind = r.get("bench")
     if kind not in CHECKS:
         raise AssertionError(
             f"unknown bench report kind {kind!r}; known: {list(CHECKS)}")
     if kind == "serving":
-        check_serving(r, expect_mesh, expect_carbon)
+        check_serving(r, expect_mesh, expect_carbon, expect_paged)
     elif kind == "fleet":
         check_fleet(r, expect_chaos)
     else:
@@ -257,6 +301,11 @@ def main(argv=None) -> int:
     ap.add_argument("--expect-chaos", action="store_true",
                     help="require fleet reports to carry the --chaos "
                          "campaign + brownout section")
+    ap.add_argument("--expect-paged", action="store_true",
+                    help="require serving reports to carry the --trace "
+                         "slot-vs-paged comparison (token identity, "
+                         "allocator health, tick-TTFT gates) and the "
+                         "speculative-decoding counters")
     args = ap.parse_args(argv)
     mesh = _parse_mesh(args.expect_mesh) if args.expect_mesh else None
     for path in args.reports:
@@ -264,7 +313,7 @@ def main(argv=None) -> int:
             r = json.load(f)
         try:
             kind = check_report(r, mesh, args.expect_carbon,
-                                args.expect_chaos)
+                                args.expect_chaos, args.expect_paged)
         except AssertionError as e:
             print(f"[check_schema] {path}: FAIL\n{e}", file=sys.stderr)
             return 1

@@ -208,12 +208,24 @@ def engine_budgets(engine) -> dict[str, int]:
     """Declared compile budgets for one Engine's jitted phases: decode
     compiles once (per tier), prefill once per prompt bucket (per
     tier), the first-token sampler and the arena slot-insert once
-    each."""
+    each.  The paged engine widens the contract, not the budgets: one
+    extra prefill shape when chunking uses a non-bucket chunk length
+    (`_prefill_shapes`), chunk/verify once per tier, draft once —
+    paged + chunked + speculative serving must not retrace per step
+    either."""
     b = {"serving/engine:first_token": 1,
          "serving/arena:insert": 1}
-    for dec_name, pre_name in _tier_watch_names(engine).values():
+    prefill_shapes = getattr(engine, "_prefill_shapes", len(engine.buckets))
+    for tier, (dec_name, pre_name) in _tier_watch_names(engine).items():
         b[dec_name] = 1
-        b[pre_name] = len(engine.buckets)
+        b[pre_name] = prefill_shapes
+        suffix = dec_name[len("serving/engine:decode"):]
+        if getattr(engine, "_tier_chunk_fns", None):
+            b[f"serving/paged:chunk{suffix}"] = 1
+        if tier in getattr(engine, "_tier_verify_fns", {}):
+            b[f"serving/paged:verify{suffix}"] = 1
+    if getattr(engine, "_draft", None) is not None:
+        b["serving/paged:draft"] = 1
     return b
 
 
@@ -230,7 +242,21 @@ def instrument_engine(engine, sanitizer: RetraceSanitizer | None = None
             dec_name, engine._tier_decode_fns[tier], b[dec_name])
         engine._tier_prefill_fns[tier] = s.watch(
             pre_name, engine._tier_prefill_fns[tier], b[pre_name])
+        suffix = dec_name[len("serving/engine:decode"):]
+        chunk_fns = getattr(engine, "_tier_chunk_fns", None)
+        if chunk_fns:
+            chunk_fns[tier] = s.watch(f"serving/paged:chunk{suffix}",
+                                      chunk_fns[tier],
+                                      b[f"serving/paged:chunk{suffix}"])
+        verify_fns = getattr(engine, "_tier_verify_fns", {})
+        if tier in verify_fns:
+            verify_fns[tier] = s.watch(f"serving/paged:verify{suffix}",
+                                       verify_fns[tier],
+                                       b[f"serving/paged:verify{suffix}"])
     engine._activate(engine._tier)
+    if getattr(engine, "_draft", None) is not None:
+        engine._draft = s.watch("serving/paged:draft", engine._draft,
+                                b["serving/paged:draft"])
     engine._first = s.watch("serving/engine:first_token", engine._first,
                             b["serving/engine:first_token"])
     engine._arena._insert = s.watch("serving/arena:insert",

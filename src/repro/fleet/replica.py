@@ -77,8 +77,13 @@ class Replica:
       seconds_per_tick: virtual-clock scale — grid lookups AND the
         straggler watchdog run on this clock (the meter uses measured
         seconds independently).
-      engine_kwargs: forwarded to `Engine(...)` (capacity, max_len,
-        seed, prefill_buckets, mesh, tiers, ...).
+      engine_cls: engine class to build (default `Engine`; pass
+        `serving.PagedEngine` for paged-KV / chunked-prefill /
+        speculative replicas — `restart()` rebuilds the same class, so
+        failover keeps the replica's serving mode).
+      engine_kwargs: forwarded to `engine_cls(...)` (capacity, max_len,
+        seed, prefill_buckets, mesh, tiers, and for the paged engine
+        page_size, prefill_chunk, draft_tier, ...).
     """
 
     def __init__(self, name: str, cfg, *, grid: GridProvider | None = None,
@@ -87,8 +92,10 @@ class Replica:
                  straggler_factor: float = 3.0,
                  on_straggler: Callable[[int, float, float], None] | None
                  = None,
+                 engine_cls: type[Engine] = Engine,
                  **engine_kwargs):
         self.name = name
+        self._engine_cls = engine_cls
         self.grid = grid or StaticGrid("us-east")
         if power is None:
             power = (DevicePowerModel.for_target(target)
@@ -132,8 +139,9 @@ class Replica:
         re-preparation inside the Engine."""
         self.meter = EnergyMeter(power=self._power, grid=self.grid,
                                  clock0_s=clock0_s)
-        self.engine = Engine(self._cfg, target=self._target,
-                             meter=self.meter, **self._engine_kwargs)
+        self.engine = self._engine_cls(self._cfg, target=self._target,
+                                       meter=self.meter,
+                                       **self._engine_kwargs)
         self.watchdog = fault.StragglerWatchdog(
             factor=self._straggler_factor, on_straggler=self._on_straggler,
             clock=lambda: self._vtime)
@@ -338,7 +346,7 @@ class Replica:
 
     def stats(self) -> dict:
         eng = self.engine.stats()
-        return {
+        out = {
             "name": self.name,
             "region": self.region,
             "alive": self.alive,
@@ -354,4 +362,10 @@ class Replica:
             "speedup_now": self.speedup_now(),
             "carbon": self.carbon_summary(),
         }
+        # paged/speculative serving sections surface verbatim so the
+        # router's fleet view can audit page pressure and acceptance
+        for key in ("paged", "spec"):
+            if key in eng:
+                out[key] = eng[key]
+        return out
 

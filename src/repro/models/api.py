@@ -149,6 +149,44 @@ def decode_step(params: Params, cache: dict, tokens: jax.Array,
     return mod.decode_step(params, cache, tokens, cfg, spec, **kwargs)
 
 
+def chunk_step(params: Params, cache: dict, tokens: jax.Array,
+               cfg: ModelConfig, spec=None, extras: dict | None = None,
+               n_valid: jax.Array | None = None
+               ) -> tuple[jax.Array, dict]:
+    """Advance a single-request decode cache by up to `tokens.shape[1]`
+    tokens — the chunked-prefill primitive.
+
+    Scans `decode_step` over the chunk so every family works unchanged
+    (ring buffers, SSM states, cross-attention all see exactly the ops a
+    token-by-token decode would run).  `n_valid` (b,) masks the tail of a
+    right-padded final chunk: steps at index >= n_valid leave the cache
+    untouched, so per-row lengths stay exact.  Returns
+    (logits (b, c, vocab) — position i holds the logits AFTER consuming
+    tokens[:, i] — and the advanced cache).
+
+    Restricted to b == 1: the partial-prefill workspace is per-request
+    (batched chunking would need per-leaf batch-axis masking; the engine
+    interleaves requests across ticks instead).
+    """
+    b, c = tokens.shape
+    if b != 1:
+        raise ValueError(f"chunk_step is single-request (got batch {b})")
+    if n_valid is None:
+        n_valid = jnp.full((b,), c, jnp.int32)
+
+    def step(carry, i):
+        logits, new = decode_step(
+            params, carry, jax.lax.dynamic_slice_in_dim(tokens, i, 1, 1),
+            cfg, spec=spec, extras=extras)
+        valid = i < n_valid[0]
+        out = jax.tree_util.tree_map(
+            lambda n, o: jnp.where(valid, n, o), new, carry)
+        return out, logits[:, -1]
+
+    cache, logits = jax.lax.scan(step, cache, jnp.arange(c))
+    return jnp.moveaxis(logits, 0, 1), cache
+
+
 def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig, spec=None,
             max_len: int | None = None, extras: dict | None = None,
             true_len: jax.Array | None = None) -> tuple:

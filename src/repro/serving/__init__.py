@@ -25,6 +25,10 @@ approximate serving composes with it.
 """
 
 from repro.serving.engine import Engine  # noqa: F401
+from repro.serving.paged import PagedEngine  # noqa: F401
+from repro.serving.paging import (  # noqa: F401
+    PageAllocator, PageLease, PagingError,
+)
 from repro.serving.types import (  # noqa: F401
-    Completion, Request, SamplingParams,
+    Completion, Request, SamplingParams, SpecStats,
 )

@@ -66,3 +66,151 @@ class SlotArena:
         a true_len vector) into `slot`."""
         self.cache = self._insert(self.cache, req_cache,
                                   jnp.asarray(slot, jnp.int32))
+
+
+class PagedArena:
+    """Paged decode state: cache leaves that scale with `max_len` (the
+    KV-style buffers) become page POOLS — one global rows axis of
+    `n_pages * page_size` positions — addressed through per-request
+    block tables; every other leaf (SSM states, conv tails, ring
+    buffers, per-slot lengths) stays a dense per-slot arena leaf exactly
+    like `SlotArena`.
+
+    Which leaves page is discovered structurally, never by name: a leaf
+    pages iff probing `api.init_cache` at `max_len` and `2 * max_len`
+    moves exactly one axis from `max_len` to `2 * max_len` and that axis
+    sits immediately after the slot axis (the layout every family's KV
+    buffers use; anything else — rglru's window-clamped rings, encdec's
+    fixed `enc_seq` cross buffers, mamba2's O(1) states — falls back to
+    the always-correct dense path).
+
+    The jitted hot paths consume pools through `view()` — a pure gather
+    that reconstructs EXACTLY the dense `(capacity, max_len)` cache the
+    baseline decode consumes, so paged serving runs the same model math
+    on the same values.  Stale garbage past each row's length is masked
+    to -1e30 inside attention (exp underflows to exact 0), so page reuse
+    cannot perturb outputs.  `scatter_rows()` commits one written view
+    row per slot back to the pools; anything that must be dropped
+    (inactive lanes, rejected speculative positions) is redirected to
+    the reserved trash page 0, keeping every scatter's shape static.
+    """
+
+    TRASH_FLAT = 0   # flat row 0 == page 0: the write sink
+
+    def __init__(self, cfg: ModelConfig, capacity: int, max_len: int,
+                 page_size: int, n_pages: int):
+        self.cfg, self.capacity, self.max_len = cfg, capacity, max_len
+        self.page_size, self.n_pages = page_size, n_pages
+        self.max_pages = -(-max_len // page_size)  # table width
+        dense = api.init_cache(cfg, capacity, max_len)
+        dense["length"] = jnp.zeros((capacity,), jnp.int32)
+        ref = jax.eval_shape(lambda: api.init_cache(cfg, 1, max_len))
+        ref["length"] = jax.ShapeDtypeStruct((1,), jnp.int32)
+        big = jax.eval_shape(
+            lambda: api.init_cache(cfg, capacity, 2 * max_len))
+        big["length"] = jax.ShapeDtypeStruct((capacity,), jnp.int32)
+        if set(dense) != set(ref) or set(dense) != set(big):
+            raise ValueError("cache keys depend on batch/max_len")
+        self.slot_axes: dict[str, int] = {}
+        self.paged: dict[str, int] = {}   # key -> pool rows axis
+        cache = {}
+        for key in sorted(dense):
+            a, g = dense[key], big[key]
+            sax = _slot_axis(ref[key].shape, a.shape)
+            self.slot_axes[key] = sax
+            grew = [i for i, (x, y) in enumerate(zip(a.shape, g.shape))
+                    if x != y]
+            if (key != "length" and len(grew) == 1
+                    and a.shape[grew[0]] == max_len
+                    and g.shape[grew[0]] == 2 * max_len
+                    and grew[0] == sax + 1):
+                pool_shape = (a.shape[:sax] + (n_pages * page_size,)
+                              + a.shape[sax + 2:])
+                cache[key] = jnp.zeros(pool_shape, a.dtype)
+                self.paged[key] = sax   # batch axis removed: rows at sax
+            else:
+                cache[key] = a
+        self.cache = cache
+        self._insert = jax.jit(self._insert_impl)
+        self._copy = jax.jit(self._copy_impl)
+
+    # --- pure helpers (used INSIDE the engine's jitted steps) -------------
+
+    def view(self, cache: dict, table: jax.Array) -> dict:
+        """Gather the dense (capacity, max_len) per-slot cache the
+        baseline decode consumes.  Rows of unreserved table entries
+        alias the trash page — harmless, they sit past `length`."""
+        ps = self.page_size
+        j = jnp.arange(self.max_len)
+        idx = jnp.take(table, j // ps, axis=1) * ps + (j % ps)[None, :]
+        out = dict(cache)
+        for key, axis in self.paged.items():
+            out[key] = jnp.take(cache[key], idx, axis=axis)
+        return out
+
+    def scatter_rows(self, cache: dict, view: dict, table: jax.Array,
+                     pos: jax.Array, valid: jax.Array) -> dict:
+        """Commit, per slot, the single view row at `pos` (capacity,)
+        back into the pools; slots with `valid` False write the trash
+        page instead.  Only paged leaves change — the caller carries
+        slot leaves and lengths forward itself."""
+        ps = self.page_size
+        cap = pos.shape[0]
+        page = jnp.take_along_axis(table, (pos // ps)[:, None], axis=1)[:, 0]
+        flat = jnp.where(valid, page * ps + pos % ps, self.TRASH_FLAT)
+        out = dict(cache)
+        for key, axis in self.paged.items():
+            v = jnp.moveaxis(view[key], (axis, axis + 1), (0, 1))
+            rows = v[jnp.arange(cap), pos]          # (capacity, rest...)
+            pool = jnp.moveaxis(cache[key], axis, 0)
+            pool = pool.at[flat].set(rows.astype(pool.dtype))
+            out[key] = jnp.moveaxis(pool, 0, axis)
+        return out
+
+    # --- jitted state mutations ------------------------------------------
+
+    def _insert_impl(self, cache: dict, req_cache: dict, slot: jax.Array,
+                     flat_idx: jax.Array) -> dict:
+        """Admit a 1-row prefill/workspace cache: paged leaves scatter
+        their `max_len` rows to `flat_idx` (host-built: prefix-shared
+        and unwritten positions point at the trash page, so read-only
+        pages are never touched and fresh pages stay zero past the
+        prompt); slot leaves copy into `slot` like `SlotArena`."""
+        out = {}
+        for key in sorted(cache):
+            c, r = cache[key], req_cache[key]
+            if key in self.paged:
+                axis = self.paged[key]
+                rows = jnp.moveaxis(jnp.squeeze(r, axis=axis), axis, 0)
+                pool = jnp.moveaxis(c, axis, 0)
+                pool = pool.at[flat_idx].set(rows.astype(c.dtype))
+                out[key] = jnp.moveaxis(pool, 0, axis)
+            else:
+                out[key] = jax.lax.dynamic_update_slice_in_dim(
+                    c, r.astype(c.dtype), slot, axis=self.slot_axes[key])
+        return out
+
+    def _copy_impl(self, cache: dict, src: jax.Array, dst: jax.Array
+                   ) -> dict:
+        """Page-granular pool copy (copy-on-write / fork divergence).
+        `src`/`dst` are page-id vectors; pad unused lanes with the trash
+        page (0 -> 0 is a no-op)."""
+        out = dict(cache)
+        for key, axis in self.paged.items():
+            pool = jnp.moveaxis(cache[key], axis, 0)
+            pages = pool.reshape(self.n_pages, self.page_size,
+                                 *pool.shape[1:])
+            pages = pages.at[dst].set(pages[src])
+            out[key] = jnp.moveaxis(
+                pages.reshape(pool.shape), 0, axis)
+        return out
+
+    def insert(self, req_cache: dict, slot: int,
+               flat_idx) -> None:
+        self.cache = self._insert(self.cache, req_cache,
+                                  jnp.asarray(slot, jnp.int32),
+                                  jnp.asarray(flat_idx, jnp.int32))
+
+    def copy_pages(self, src, dst) -> None:
+        self.cache = self._copy(self.cache, jnp.asarray(src, jnp.int32),
+                                jnp.asarray(dst, jnp.int32))

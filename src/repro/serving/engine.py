@@ -52,7 +52,8 @@ from repro.models import api
 from repro.serving import sampling
 from repro.serving.arena import SlotArena
 from repro.serving.scheduler import Scheduler
-from repro.serving.types import Completion, Request, SamplingParams
+from repro.serving.types import (Completion, Request, SamplingParams,
+                                 SpecStats)
 from repro.sharding import ctx, rules
 from repro.train import train_step as ts
 
@@ -68,8 +69,18 @@ class _Slot:
         self.admitted_tick = admitted_tick
         self.ready_wall = ready_wall
         self.first_wall = 0.0
+        #: engine tick at which the first token was emitted (chunked
+        #: prefill emits it later than admitted_tick)
+        self.first_tick = admitted_tick
         self.admit_seq = admit_seq            # FIFO drain order
         self.tier_tokens: dict[str, int] = {}
+        #: speculative-decode counters ({"proposed", "accepted",
+        #: "corrections"}) filled in by the paged engine; None means the
+        #: slot was served without speculation (Completion.spec = None)
+        self.spec_counts: dict[str, int] | None = None
+        #: True while a paged-engine slot is still prefilling in chunks
+        #: (occupies a slot + pages, but does not decode or emit yet)
+        self.prefilling = False
 
 
 class Engine:
@@ -128,27 +139,7 @@ class Engine:
         self.params = params if params is not None else api.init_params(
             cfg, jax.random.key(seed))
 
-        self._arena = SlotArena(cfg, capacity, max_len)
-        self._state = {
-            "cache": self._arena.cache,
-            "tok": jnp.zeros((capacity, 1), jnp.int32),
-            "temp": jnp.zeros((capacity,), jnp.float32),
-            "topk": jnp.zeros((capacity,), jnp.int32),
-            "rng": jax.random.split(jax.random.key(seed), capacity),
-        }
-        if cfg.cross_every:
-            self._state["img"] = jnp.zeros(
-                (capacity, cfg.n_img_tokens, cfg.d_model),
-                jnp.dtype(cfg.dtype))
-        # commit the state once under the SAME rules the decode step's
-        # sharding hints request — caches shard their batch dim on "data"
-        # and their kv-head dim on "model" (rules.cache_shardings), the
-        # per-slot sampler state shards on "data" where it divides — and
-        # pin the decode step's output to that commitment, so every step
-        # sees identical shardings (a single compilation, and no
-        # replicated-KV fallback on a multi-device mesh).
-        self._state_sh = self._state_shardings()
-        self._state = jax.device_put(self._state, self._state_sh)
+        self._build_state()
 
         # Per-tier serving artifacts.  The weight-plane cache is built
         # once per (weight, multiplier) — switching tiers later is a
@@ -167,6 +158,7 @@ class Engine:
             self._tier_prefill_fns[name] = ts.make_prefill_step(
                 cfg, mesh, max_len=max_len, spec=spec)
             self._tier_decode_fns[name] = self._make_decode(spec)
+            self._extra_tier_fns(name, spec)
         self._first = jax.jit(sampling.sample_tokens)
 
         self._tier = self.tiers[0]
@@ -186,6 +178,38 @@ class Engine:
         self._queue_wait_ticks = 0.0
         self._evictions = {"eos": 0, "length": 0}
         self.completions: list[Completion] = []
+
+    def _build_state(self) -> None:
+        """Construct the device arena + sampler state and commit it onto
+        the mesh.  Overridable: the paged engine replaces the whole-slot
+        arena with page pools + block tables while reusing everything
+        else (tier artifacts, admission, accounting)."""
+        cfg, capacity = self.cfg, self.capacity
+        self._arena = SlotArena(cfg, capacity, self.max_len)
+        self._state = {
+            "cache": self._arena.cache,
+            "tok": jnp.zeros((capacity, 1), jnp.int32),
+            "temp": jnp.zeros((capacity,), jnp.float32),
+            "topk": jnp.zeros((capacity,), jnp.int32),
+            "rng": jax.random.split(jax.random.key(self.seed), capacity),
+        }
+        if cfg.cross_every:
+            self._state["img"] = jnp.zeros(
+                (capacity, cfg.n_img_tokens, cfg.d_model),
+                jnp.dtype(cfg.dtype))
+        # commit the state once under the SAME rules the decode step's
+        # sharding hints request — caches shard their batch dim on "data"
+        # and their kv-head dim on "model" (rules.cache_shardings), the
+        # per-slot sampler state shards on "data" where it divides — and
+        # pin the decode step's output to that commitment, so every step
+        # sees identical shardings (a single compilation, and no
+        # replicated-KV fallback on a multi-device mesh).
+        self._state_sh = self._state_shardings()
+        self._state = jax.device_put(self._state, self._state_sh)
+
+    def _extra_tier_fns(self, name: str, spec) -> None:
+        """Hook: build additional per-tier jitted functions (the paged
+        engine adds chunked-prefill and speculative-verify steps)."""
 
     def _replicated(self):
         from jax.sharding import NamedSharding, PartitionSpec
@@ -403,12 +427,15 @@ class Engine:
             admitted_tick=slot.admitted_tick,
             finished_tick=self._tick,
             ttft_s=slot.first_wall - slot.ready_wall,
+            ttft_ticks=slot.first_tick - slot.request.arrival + 1.0,
             latency_s=now - slot.ready_wall,
             carbon=(self.meter.finalize(slot.request.request_id,
                                         len(slot.tokens))
                     if self.meter is not None else None),
             attempt=slot.request.attempt,
-            tier_tokens=dict(slot.tier_tokens)))
+            tier_tokens=dict(slot.tier_tokens),
+            spec=(SpecStats(**slot.spec_counts)
+                  if slot.spec_counts is not None else None)))
         self._slots[slot_id] = None
         self._free.append(slot_id)
 

@@ -196,6 +196,43 @@ def cache_pspec(key: str, shape: tuple[int, ...], mesh: Mesh) -> P:
     return P(*spec)
 
 
+def paged_pool_pspec(key: str, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """PartitionSpec for a paged-KV POOL leaf (serving/arena.PagedArena).
+
+    Pools drop the per-slot batch axis — requests address pages through
+    block tables, so there is no batch dim to put on "data"; the global
+    page-rows axis stays replicated (gathers/scatters index it with
+    traffic-dependent tables).  The kv-head/model dim keeps the exact
+    rule of the dense cache leaf it replaces, so a TP mesh shards paged
+    KV identically to slot KV."""
+    if key == "length" or not shape:
+        return P()
+    spec: list = [None] * len(shape)
+    mpos = _CACHE_MODEL_DIM.get(key)
+    if mpos is not None:
+        mpos = mpos % len(shape)
+        if _fits(shape[mpos], mesh, "model"):
+            spec[mpos] = "model"
+    return P(*spec)
+
+
+def paged_cache_shardings(cache_tree: Any, mesh: Mesh,
+                          paged_keys: frozenset[str] | set[str]) -> Any:
+    """Like `cache_shardings` but routes pool leaves (keys in
+    `paged_keys`) through the pool rule and everything else (slot-dense
+    leaves, lengths) through the dense cache rule."""
+    def mk(path, leaf):
+        key = ""
+        for part in reversed(path):
+            k = getattr(part, "key", None)
+            if k is not None:
+                key = str(k)
+                break
+        fn = paged_pool_pspec if key in paged_keys else cache_pspec
+        return NamedSharding(mesh, fn(key, leaf.shape, mesh))
+    return jax.tree_util.tree_map_with_path(mk, cache_tree)
+
+
 def cache_shardings(cache_tree: Any, mesh: Mesh) -> Any:
     def mk(path, leaf):
         key = None

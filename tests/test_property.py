@@ -7,6 +7,9 @@ import pytest
 pytest.importorskip(
     "hypothesis", reason="optional dev dep (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st  # noqa: E402
+from hypothesis.stateful import (  # noqa: E402
+    RuleBasedStateMachine, invariant, precondition, rule,
+)
 
 from repro.approx import quant
 from repro.core import carbon as cb
@@ -129,3 +132,101 @@ def test_hlo_type_bytes(seed, n):
     dims = rng.integers(1, 64, size=rng.integers(1, 4))
     s = f"bf16[{','.join(map(str, dims))}]"
     assert hp._type_bytes(s) == int(np.prod(dims)) * 2
+
+
+# --- paged-KV allocator state machine --------------------------------------
+
+class PageAllocatorMachine(RuleBasedStateMachine):
+    """Random alloc/free/fork/COW sequences against `PageAllocator`.
+
+    `audit()` runs after every step and re-derives the full invariant
+    set from scratch: no double-free survives, writable pages are never
+    aliased across requests, refcounts always sum to exactly the
+    allocated pages, free/live partition the pool."""
+
+    def __init__(self):
+        super().__init__()
+        from repro.serving import PageAllocator
+        self.alloc = PageAllocator(n_pages=9, page_size=4)
+        self.live: set[str] = set()
+        self.counter = 0
+
+    @rule(n=st.integers(1, 30), share=st.booleans(),
+          prefix_word=st.integers(1, 3))
+    def allocate(self, n, share, prefix_word):
+        rid = f"r{self.counter}"
+        self.counter += 1
+        # a tiny prompt alphabet makes prefix collisions (hits) likely
+        prompt = tuple([prefix_word] * n) if share else None
+        lease = self.alloc.alloc(rid, n, prompt=prompt, digest="d")
+        if lease is None:
+            return  # pool exhausted: a counted failure, not an error
+        assert len(lease.pages) == self.alloc.pages_needed(n)
+        assert len(set(lease.pages)) == len(lease.pages)
+        self.live.add(rid)
+        if prompt is not None:
+            self.alloc.register_prefix(rid, prompt, "d")
+
+    @precondition(lambda self: self.live)
+    @rule(data=st.data())
+    def free(self, data):
+        rid = data.draw(st.sampled_from(sorted(self.live)))
+        self.alloc.free(rid)
+        self.live.discard(rid)
+
+    @precondition(lambda self: self.live)
+    @rule(data=st.data())
+    def double_free_raises(self, data):
+        from repro.serving import PagingError
+        rid = data.draw(st.sampled_from(sorted(self.live)))
+        self.alloc.free(rid)
+        self.live.discard(rid)
+        with pytest.raises(PagingError):
+            self.alloc.free(rid)
+
+    @precondition(lambda self: self.live)
+    @rule(data=st.data())
+    def fork(self, data):
+        src = data.draw(st.sampled_from(sorted(self.live)))
+        dst = f"f{self.counter}"
+        self.counter += 1
+        table = self.alloc.fork(src, dst)
+        assert table == self.alloc.table(src)
+        self.live.add(dst)
+        # every shared entry is now read-only for BOTH holders
+        for i in range(len(table)):
+            assert not self.alloc.writable(src, i)
+            assert not self.alloc.writable(dst, i)
+
+    @precondition(lambda self: self.live)
+    @rule(data=st.data(), idx=st.integers(0, 29))
+    def cow(self, data, idx):
+        from repro.serving import PagingError
+        rid = data.draw(st.sampled_from(sorted(self.live)))
+        table = self.alloc.table(rid)
+        i = idx % len(table)
+        try:
+            op = self.alloc.cow(rid, i)
+        except PagingError:
+            return  # pool exhausted mid-COW: allowed, state unchanged
+        if op is None:
+            # was already exclusively owned — and stays that way
+            assert self.alloc.writable(rid, i)
+        else:
+            src, dst = op
+            assert dst != src and dst == self.alloc.table(rid)[i]
+            assert self.alloc.writable(rid, i)
+
+    @invariant()
+    def audit(self):
+        self.alloc.audit()
+
+    @invariant()
+    def trash_page_never_leased(self):
+        for rid in self.live:
+            assert 0 not in self.alloc.table(rid)
+
+
+TestPageAllocator = PageAllocatorMachine.TestCase
+TestPageAllocator.settings = settings(
+    max_examples=25, stateful_step_count=30, deadline=None)

@@ -1,0 +1,451 @@
+"""Differential harness for the paged serving stack.
+
+The contract under test: `PagedEngine` (paged KV + chunked prefill +
+approx-draft speculative decoding, in any combination) is
+**token-identical** to the whole-slot `Engine` on the 4-family
+mixed-arrival trace — greedy and seeded sampling, single die and TP
+mesh.  Plus the speculative-decode invariants: an exact draft is
+accepted 100%, rejected draft prefixes never leak into KV pages, and
+`Completion.spec` conserves (`accepted + corrections == len(tokens)`),
+including under a chaos-seeded burst schedule.
+"""
+
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import api
+from repro.serving import Engine, PagedEngine, Request, SamplingParams
+from test_distributed import run_devices  # same-dir test module (pytest path)
+
+FAMILY_ARCHS = ["tinyllama-1.1b", "mamba2-370m", "recurrentgemma-9b",
+                "whisper-medium"]
+
+
+def _cfg(arch):
+    return configs.reduced(configs.get_config(arch))
+
+
+@functools.lru_cache(maxsize=None)
+def _params(arch):
+    return api.init_params(_cfg(arch), jax.random.key(0))
+
+
+def _prompt(n, seed, vocab=256):
+    return np.random.default_rng(seed).integers(1, vocab, (n,)).tolist()
+
+
+def _mixed_trace(cfg, n_requests=8, seed=1):
+    """The 4-family mixed-arrival trace: heterogeneous prompt lengths,
+    staggered arrivals, alternating greedy / seeded-sampling rows."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n_requests):
+        n = int(rng.integers(4, 24))
+        gen = int(rng.integers(2, 6))
+        sp = SamplingParams(max_new_tokens=gen) if i % 2 == 0 else \
+            SamplingParams(temperature=0.9, top_k=8, max_new_tokens=gen,
+                           seed=100 + i)
+        extras = None
+        if cfg.family == "encdec":
+            extras = {"frames": rng.standard_normal(
+                (cfg.enc_seq, cfg.d_model)).astype(np.float32)}
+        out.append(Request(
+            f"t{i}", rng.integers(1, cfg.vocab, (n,)).tolist(), sp,
+            arrival=float(i) * 0.7, extras=extras))
+    return out
+
+
+def _serve(engine, trace):
+    for req in trace:
+        engine.submit(req)
+    return {c.request_id: (c.tokens, c.finish_reason)
+            for c in engine.run_until_complete()}
+
+
+def _differential(arch, **paged_kw):
+    cfg, params = _cfg(arch), _params(arch)
+    trace = _mixed_trace(cfg)
+    base = _serve(Engine(cfg, params, capacity=3, max_len=64, seed=0),
+                  trace)
+    eng = PagedEngine(cfg, params, capacity=3, max_len=64, seed=0,
+                      **paged_kw)
+    paged = _serve(eng, trace)
+    assert base == paged, (arch, paged_kw, base, paged)
+    return eng
+
+
+# --- token identity: paged / chunked / speculative vs the slot engine ------
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_paged_differential_all_families(arch):
+    """Paged KV alone: token-identical on the mixed-arrival trace."""
+    eng = _differential(arch, page_size=8)
+    st = eng.stats()["paged"]
+    assert st["alloc_failures"] == 0
+    # mamba2 / rglru reduced configs have no max_len-scaling leaves:
+    # paging must degenerate gracefully, not misclassify a state buffer
+    if _cfg(arch).family in ("ssm", "hybrid"):
+        assert st["paged_leaves"] == []
+    else:
+        assert st["paged_leaves"], st
+
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_paged_chunked_spec_stacked_all_families(arch):
+    """All three features at once, still token-identical everywhere."""
+    eng = _differential(arch, page_size=8, prefill_chunk=8,
+                        draft_tier="exact", spec_k=3)
+    st = eng.stats()
+    assert st["paged"]["chunked"]["chunks"] > 0
+    assert st["spec"]["steps"] > 0
+
+
+def test_chunked_prefill_interleaves_with_decode():
+    """A long prompt prefills in chunks while a short request decodes:
+    the short request's first token must land BEFORE the long prompt
+    finishes prefilling (the TTFT win), with streams unchanged."""
+    cfg, params = _cfg("tinyllama-1.1b"), _params("tinyllama-1.1b")
+    trace = [
+        Request("long", _prompt(40, 0), SamplingParams(max_new_tokens=4)),
+        Request("short", _prompt(4, 1), SamplingParams(max_new_tokens=4),
+                arrival=0.0),
+    ]
+    base = _serve(Engine(cfg, params, capacity=2, max_len=64, seed=0),
+                  list(trace))
+    eng = PagedEngine(cfg, params, capacity=2, max_len=64, seed=0,
+                      page_size=8, prefill_chunk=8, chunk_budget=1)
+    for req in trace:
+        eng.submit(req)
+    short_first_tick = None
+    while eng.n_queued or eng.n_active:
+        eng.step()
+        done = {c.request_id for c in eng.completions}
+        slot_tokens = {s.request.request_id: len(s.tokens)
+                       for s in eng._slots if s is not None}
+        if short_first_tick is None and (
+                slot_tokens.get("short", 0) > 0 or "short" in done):
+            short_first_tick = eng.tick
+            # the long prompt is still mid-prefill at this point
+            assert eng.stats()["paged"]["chunked"]["inflight"] == 1
+    paged = {c.request_id: (c.tokens, c.finish_reason)
+             for c in eng.completions}
+    assert base == paged
+    assert short_first_tick is not None
+    assert eng.stats()["paged"]["chunked"]["chunks"] >= 5  # 40/8 chunks
+
+
+def test_approx_draft_differential():
+    """Speculation with a genuinely approximate draft tier: acceptance
+    may be partial, but emitted tokens are STILL exactly the serving
+    tier's own stream (verify re-runs everything)."""
+    eng = _differential("tinyllama-1.1b", page_size=8,
+                        draft_tier="trunc4x4", spec_k=4)
+    spec = eng.stats()["spec"]
+    assert spec["proposed"] > 0
+    assert 0.0 <= spec["acceptance_rate"] <= 1.0
+
+
+def test_prefix_sharing_differential_and_hits():
+    """Requests with a common system prompt share read-only pages —
+    and still emit exactly the baseline streams."""
+    cfg, params = _cfg("tinyllama-1.1b"), _params("tinyllama-1.1b")
+    system = _prompt(24, 9)
+    trace = []
+    for i in range(4):
+        trace.append(Request(
+            f"s{i}", system + _prompt(4, 50 + i),
+            SamplingParams(max_new_tokens=4), arrival=float(i)))
+    base = _serve(Engine(cfg, params, capacity=2, max_len=64, seed=0),
+                  list(trace))
+    eng = PagedEngine(cfg, params, capacity=2, max_len=64, seed=0,
+                      page_size=8)
+    paged = _serve(eng, list(trace))
+    assert base == paged
+    st = eng.stats()["paged"]
+    assert st["prefix_hits"] >= 1
+    assert st["prefix_hit_tokens"] >= 16  # >= 2 shared pages per hit
+
+
+def test_page_pressure_stalls_preserve_fifo():
+    """A pool too small for full concurrency stalls admission at the
+    queue head (no overtaking) and every request still completes with
+    baseline-identical tokens."""
+    cfg, params = _cfg("tinyllama-1.1b"), _params("tinyllama-1.1b")
+    trace = [Request(f"p{i}", _prompt(20, 60 + i),
+                     SamplingParams(max_new_tokens=4))
+             for i in range(4)]
+    base = _serve(Engine(cfg, params, capacity=3, max_len=32, seed=0),
+                  list(trace))
+    # 5 usable pages of 8 = 40 positions: ~1.4 requests' worth at a time
+    eng = PagedEngine(cfg, params, capacity=3, max_len=32, seed=0,
+                      page_size=8, n_pages=6, prefix_cache=False)
+    paged = _serve(eng, list(trace))
+    assert base == paged
+    st = eng.stats()["paged"]
+    assert st["admission_stalls"] > 0
+    done = {c.request_id: c for c in eng.completions}
+    order = sorted(done, key=lambda r: done[r].admitted_tick)
+    assert order == [f"p{i}" for i in range(4)]   # FIFO held under stalls
+    eng._alloc.audit()                            # pool fully reconciled
+
+
+def test_pool_fit_validation():
+    cfg, params = _cfg("tinyllama-1.1b"), _params("tinyllama-1.1b")
+    eng = PagedEngine(cfg, params, capacity=1, max_len=32, seed=0,
+                      page_size=8, n_pages=3)
+    with pytest.raises(ValueError, match="pages"):
+        eng.submit(Request("big", _prompt(20, 0),
+                           SamplingParams(max_new_tokens=8)))
+
+
+def test_cow_resolves_shared_page():
+    """resolve_cow on a prefix-shared page: the request gets a private
+    copy with identical content, and the allocator invariants hold."""
+    cfg, params = _cfg("tinyllama-1.1b"), _params("tinyllama-1.1b")
+    eng = PagedEngine(cfg, params, capacity=2, max_len=64, seed=0,
+                      page_size=8)
+    system = _prompt(16, 3)
+    eng.submit(Request("a", system + [5], SamplingParams(max_new_tokens=12)))
+    eng.submit(Request("b", system + [9], SamplingParams(max_new_tokens=12)))
+    for _ in range(3):
+        eng.step()
+    assert eng._leases["b"].shared_pages == 2
+    before = eng.debug_kv_rows("b")
+    assert not eng._alloc.writable("b", 0)
+    op = eng.resolve_cow("b", 0)
+    assert op is not None and op[1] != op[0]
+    assert eng._alloc.writable("b", 0)
+    after = eng.debug_kv_rows("b")
+    for key in before["rows"]:
+        np.testing.assert_array_equal(before["rows"][key][:8],
+                                      after["rows"][key][:8])
+    eng._alloc.audit()
+    # already-private page: no copy needed
+    assert eng.resolve_cow("b", 0) is None
+
+
+# --- speculative-decode invariants -----------------------------------------
+
+def test_exact_draft_accepts_everything():
+    """Drafting with the serving tier itself must accept every proposed
+    token (the speculation machinery's identity check)."""
+    cfg, params = _cfg("tinyllama-1.1b"), _params("tinyllama-1.1b")
+    eng = PagedEngine(cfg, params, capacity=2, max_len=64, seed=0,
+                      page_size=8, draft_tier="exact", spec_k=4)
+    for i in range(3):
+        eng.submit(Request(f"g{i}", _prompt(6 + 4 * i, i),
+                           SamplingParams(max_new_tokens=9)))
+    done = eng.run_until_complete()
+    spec = eng.stats()["spec"]
+    assert spec["proposed"] > 0
+    assert spec["accepted"] == spec["proposed"]
+    assert spec["acceptance_rate"] == 1.0
+    for c in done:
+        # full acceptance: the only corrections are first tokens and
+        # the k_row clamp at the max_new_tokens boundary
+        assert c.spec.accepted + c.spec.corrections == len(c.tokens)
+        assert c.spec.proposed == c.spec.accepted
+
+
+def test_sampled_rows_bypass_speculation():
+    cfg, params = _cfg("tinyllama-1.1b"), _params("tinyllama-1.1b")
+    eng = PagedEngine(cfg, params, capacity=1, max_len=48, seed=0,
+                      page_size=8, draft_tier="exact", spec_k=4)
+    eng.submit(Request("hot", _prompt(6, 2),
+                       SamplingParams(temperature=0.9, top_k=8,
+                                      max_new_tokens=6, seed=5)))
+    (c,) = eng.run_until_complete()
+    assert c.spec.proposed == 0 and c.spec.accepted == 0
+    assert c.spec.corrections == len(c.tokens) == 6
+    assert c.spec.acceptance_rate == 0.0
+
+
+def test_rejected_drafts_never_leak_into_kv_pages():
+    """Mid-flight, every reserved-but-unwritten KV position of every
+    active request must still be zero: rejected speculative positions
+    were scattered to the trash page, never into the request's pages."""
+    cfg, params = _cfg("tinyllama-1.1b"), _params("tinyllama-1.1b")
+    eng = PagedEngine(cfg, params, capacity=2, max_len=64, seed=0,
+                      page_size=8, draft_tier="trunc4x4", spec_k=4,
+                      prefix_cache=False)
+    for i in range(2):
+        eng.submit(Request(f"r{i}", _prompt(10 + 5 * i, 30 + i),
+                           SamplingParams(max_new_tokens=12)))
+    rejections = 0
+    while eng.n_queued or eng.n_active:
+        eng.step()
+        spec = eng.stats()["spec"]
+        rejections = spec["proposed"] - spec["accepted"]
+        for slot in eng._slots:
+            if slot is None or slot.prefilling:
+                continue
+            d = eng.debug_kv_rows(slot.request.request_id)
+            assert d["length"] <= d["reserved"]
+            for key, rows in d["rows"].items():
+                tail = rows[d["length"]:d["reserved"]]
+                assert not np.any(tail), \
+                    f"{key}: rejected draft leaked into KV pages"
+    assert rejections > 0, "trace produced no rejections; weaken draft"
+
+
+def test_spec_stats_conserve_under_chaos_burst_schedule():
+    """`accepted + corrections == len(tokens)` for every completion of
+    a chaos-seeded burst trace (fleet/chaos.py schedule), greedy and
+    sampled rows mixed, with zero lost and zero duplicated requests."""
+    from repro.fleet.chaos import ChaosSchedule
+    cfg, params = _cfg("tinyllama-1.1b"), _params("tinyllama-1.1b")
+    sched = ChaosSchedule.random(17, ["e0"], kinds=("burst",),
+                                 n_events=3, horizon_ticks=10)
+    eng = PagedEngine(cfg, params, capacity=3, max_len=48, seed=0,
+                      page_size=8, prefill_chunk=8,
+                      draft_tier="trunc4x4", spec_k=3)
+    submitted = []
+    rid = 0
+    for ev in sched.events:
+        assert ev.kind == "burst"
+        for j in range(ev.n_requests):
+            sp = SamplingParams(max_new_tokens=2 + rid % 4) \
+                if rid % 3 else SamplingParams(
+                    temperature=0.8, top_k=8, max_new_tokens=3,
+                    seed=rid)
+            eng.submit(Request(f"b{rid}", _prompt(4 + rid % 14, rid), sp,
+                               arrival=float(ev.tick)))
+            submitted.append(f"b{rid}")
+            rid += 1
+    done = eng.run_until_complete()
+    ids = [c.request_id for c in done]
+    assert sorted(ids) == sorted(submitted)       # zero lost
+    assert len(set(ids)) == len(ids)              # exactly once
+    for c in done:
+        assert c.spec is not None
+        assert c.spec.accepted + c.spec.corrections == len(c.tokens), c
+    tot = eng.stats()["spec"]
+    assert tot["accepted"] + tot["corrections"] == \
+        sum(len(c.tokens) for c in done)
+    eng._alloc.audit()
+
+
+def test_allocator_random_walk_audit():
+    """Seeded random alloc/free/fork/COW walk with `audit()` after every
+    step — the hypothesis state machine's deterministic twin, so the
+    allocator invariants run even where hypothesis is not installed
+    (tests/test_property.py carries the full stateful version)."""
+    import random
+    from repro.serving import PageAllocator, PagingError
+    rng = random.Random(23)
+    alloc = PageAllocator(n_pages=9, page_size=4)
+    live: list[str] = []
+    for step in range(400):
+        op = rng.randrange(5)
+        if op in (0, 1):                                        # alloc
+            rid = f"r{step}"
+            n = rng.randrange(1, 30)
+            prompt = tuple([rng.randrange(1, 3)] * n) \
+                if rng.random() < 0.5 else None
+            lease = alloc.alloc(rid, n, prompt=prompt, digest="d")
+            if lease is not None:
+                live.append(rid)
+                if prompt is not None:
+                    alloc.register_prefix(rid, prompt, "d")
+        elif op == 2 and live:                                  # free
+            alloc.free(live.pop(rng.randrange(len(live))))
+        elif op == 3 and live:                                  # fork
+            dst = f"f{step}"
+            alloc.fork(rng.choice(live), dst)
+            live.append(dst)
+        elif op == 4 and live:                                  # cow
+            rid = rng.choice(live)
+            table = alloc.table(rid)
+            i = rng.randrange(len(table))
+            try:
+                alloc.cow(rid, i)
+            except PagingError:
+                pass                    # pool exhausted: allowed
+            else:
+                assert alloc.writable(rid, i)
+        alloc.audit()
+    with pytest.raises(PagingError):
+        alloc.free("never-allocated")
+    for rid in live:
+        alloc.free(rid)
+    alloc.audit()
+    assert alloc.pages_live == 0
+
+
+# --- compile budgets --------------------------------------------------------
+
+def test_paged_engine_compile_budgets(retrace_sanitizer):
+    """Paged + chunked + speculative serving keeps the one-compile-per-
+    phase contract: chunk/draft/verify each compile exactly once and
+    never retrace across a trace (fixture asserts at teardown)."""
+    from repro.analysis.retrace import instrument_engine
+    cfg, params = _cfg("tinyllama-1.1b"), _params("tinyllama-1.1b")
+    eng = PagedEngine(cfg, params, capacity=2, max_len=48, seed=0,
+                      page_size=8, prefill_chunk=8, draft_tier="exact",
+                      spec_k=3)
+    instrument_engine(eng, retrace_sanitizer)
+    for i, (n, temp) in enumerate([(4, 0.0), (21, 0.0), (6, 0.8)]):
+        eng.submit(Request(f"c{i}", _prompt(n, i),
+                           SamplingParams(max_new_tokens=4,
+                                          temperature=temp,
+                                          top_k=8 if temp else 0, seed=i),
+                           arrival=float(i)))
+    eng.run_until_complete()
+    rep = retrace_sanitizer.report()
+    assert rep["serving/paged:chunk"]["compiles"] <= 1
+    assert rep["serving/paged:draft"]["calls"] > 0
+
+
+# --- TP mesh ---------------------------------------------------------------
+
+def test_paged_tp_token_parity():
+    """Differential under tensor parallelism: the paged + chunked +
+    speculative engine must be token-identical to the whole-slot engine
+    ON THE SAME MESH (same logit bits, so sampled lanes match too), and
+    greedy rows must additionally match the 1-die paged run (PR 5's
+    cross-mesh greedy identity; sampled draws may legitimately flip on
+    ULP-level logit differences between meshes)."""
+    run_devices("""
+        import jax, numpy as np
+        from repro import configs
+        from repro.models import api
+        from repro.serving import Engine, PagedEngine, Request, \\
+            SamplingParams
+        from repro.launch.mesh import make_mesh_from_spec
+
+        def serve(arch, mesh_spec, paged):
+            cfg = configs.reduced(configs.get_config(arch))
+            params = api.init_params(cfg, jax.random.key(0))
+            kw = dict(page_size=8, prefill_chunk=8,
+                      draft_tier="exact", spec_k=3) if paged else {}
+            cls = PagedEngine if paged else Engine
+            eng = cls(cfg, params, capacity=3, max_len=64, seed=0,
+                      mesh=make_mesh_from_spec(mesh_spec), **kw)
+            rng = np.random.default_rng(5)
+            for i, n in enumerate([5, 19, 33]):
+                sp = SamplingParams(max_new_tokens=6) if i % 2 == 0 else \\
+                    SamplingParams(temperature=0.9, top_k=8,
+                                   max_new_tokens=6, seed=40 + i)
+                eng.submit(Request(f"r{i}",
+                                   rng.integers(1, 256, (n,)).tolist(),
+                                   sp))
+            done = {c.request_id: c.tokens
+                    for c in eng.run_until_complete()}
+            return done, eng.stats()
+
+        TP = "model=4,data=2"
+        for arch in ("tinyllama-1.1b", "mamba2-370m"):
+            slot_tp, _ = serve(arch, TP, paged=False)
+            paged_tp, stats = serve(arch, TP, paged=True)
+            assert slot_tp == paged_tp, (arch, slot_tp, paged_tp)
+            assert stats["mesh"] == {"data": 2, "model": 4}, stats
+            assert stats["spec"]["acceptance_rate"] == 1.0, stats
+            one, _ = serve(arch, "data=1,model=1", paged=True)
+            for rid in ("r0", "r2"):   # the greedy rows
+                assert one[rid] == paged_tp[rid], (arch, rid, one, paged_tp)
+        print("OK")
+    """, timeout=1800)
