@@ -56,7 +56,8 @@ from repro.models import api
 from repro.serving import sampling
 from repro.serving.arena import PagedArena
 from repro.serving.engine import Engine, _Slot
-from repro.serving.paging import PageAllocator, PageLease, TRASH_PAGE
+from repro.serving.paging import (
+    PageAllocator, PageLease, PagingError, TRASH_PAGE)
 from repro.serving.types import Request
 from repro.sharding import ctx, rules
 
@@ -592,6 +593,16 @@ class PagedEngine(Engine):
                 jnp.zeros((self._arena.max_pages,), jnp.int32)))
         self._state = jax.device_put(self._state, self._state_sh)
 
+    def _slot_of(self, request_id: str) -> int:
+        slot_id = next((i for i, s in enumerate(self._slots)
+                        if s is not None
+                        and s.request.request_id == request_id), None)
+        if slot_id is None:
+            raise PagingError(
+                f"request {request_id!r} is not resident "
+                f"(never admitted, finished, or evicted)")
+        return slot_id
+
     # --- copy-on-write ----------------------------------------------------
 
     def resolve_cow(self, request_id: str, index: int
@@ -608,9 +619,7 @@ class PagedEngine(Engine):
         self._arena.cache = self._state["cache"]
         self._arena.copy_pages([src], [dst])
         self._state["cache"] = self._arena.cache
-        slot_id = next(i for i, s in enumerate(self._slots)
-                       if s is not None
-                       and s.request.request_id == request_id)
+        slot_id = self._slot_of(request_id)
         self._state = dict(
             self._state,
             table=self._state["table"].at[slot_id, index].set(dst))
@@ -706,9 +715,7 @@ class PagedEngine(Engine):
         paged leaf ((max_len, ...) each), its device length, and how
         many positions its lease actually reserves — everything the
         no-leak invariant check needs."""
-        slot_id = next(i for i, s in enumerate(self._slots)
-                       if s is not None
-                       and s.request.request_id == request_id)
+        slot_id = self._slot_of(request_id)
         view = self._arena.view(self._state["cache"],
                                 self._state["table"])
         out = {}

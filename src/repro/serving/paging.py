@@ -135,13 +135,19 @@ class PageAllocator:
                     break
                 shared.append(page)
         n_fresh = needed - len(shared)
-        while len(self._free) < n_fresh:
-            if not self._reclaim_one():
-                self.alloc_failures += 1
-                return None
+        # Pin the shared pages BEFORE reclaiming: a shared page with no
+        # table refs yet lives on the LRU, exactly where _reclaim_one
+        # evicts from — reclaiming first could free-list (and re-pop as
+        # "fresh") a page this very request is about to reference.
         for page in shared:
             self._table_refs[page] += 1
             self._lru.pop(page, None)
+        while len(self._free) < n_fresh:
+            if not self._reclaim_one():
+                for page in shared:  # roll back the pins
+                    self._drop_ref(page)
+                self.alloc_failures += 1
+                return None
         fresh = [self._free.pop() for _ in range(n_fresh)]
         for page in fresh:
             self._table_refs[page] = 1

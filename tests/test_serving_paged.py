@@ -376,6 +376,53 @@ def test_allocator_random_walk_audit():
     assert alloc.pages_live == 0
 
 
+def test_alloc_reclaim_never_evicts_pending_shared_pages():
+    """Regression: under pool pressure, `alloc` must pin its prefix-hit
+    pages BEFORE reclaiming.  Reclaiming first could evict a page from
+    the request's own shared list onto the free list and re-pop it as
+    "fresh" — a duplicate page in one block table (and a page both
+    free-listed and refcounted, i.e. cross-request KV corruption)."""
+    from repro.serving import PageAllocator
+    alloc = PageAllocator(n_pages=7, page_size=2)
+    pa, px = (1, 1, 1, 1), (9, 9)
+    assert alloc.alloc("A", 4, prompt=pa, digest="d") is not None
+    alloc.register_prefix("A", pa, "d")
+    alloc.free("A")                      # A's 2 pages: oldest on the LRU
+    assert alloc.alloc("X", 2, prompt=px, digest="d") is not None
+    alloc.register_prefix("X", px, "d")
+    alloc.free("X")                      # X's page: newest on the LRU
+    assert alloc.alloc("B", 6) is not None   # drain the free list
+    lease = alloc.alloc("C", 6, prompt=pa, digest="d")
+    assert lease is not None
+    assert lease.shared_pages == 2
+    assert len(set(lease.pages)) == len(lease.pages) == 3
+    # pressure evicted X's (unrelated) cache entry, not the shared pages
+    assert alloc.reclaimed_pages == 1
+    alloc.audit()
+
+
+def test_alloc_failure_with_shared_pages_rolls_back_pins():
+    """When reclaiming cannot cover the fresh remainder, a prefix-hit
+    alloc must fail cleanly: the pinned shared pages return to the
+    reclaimable cache, so a later same-prefix request still hits."""
+    from repro.serving import PageAllocator
+    alloc = PageAllocator(n_pages=5, page_size=2)
+    pa = (1, 1, 1, 1)
+    assert alloc.alloc("A", 4, prompt=pa, digest="d") is not None
+    alloc.register_prefix("A", pa, "d")
+    alloc.free("A")
+    assert alloc.alloc("B", 4) is not None   # drain the free list
+    # needs 2 shared + 2 fresh, but only the 2 shared pages are
+    # reclaimable — with them pinned nothing can be reclaimed
+    assert alloc.alloc("C", 8, prompt=pa, digest="d") is None
+    assert alloc.alloc_failures == 1
+    alloc.audit()
+    alloc.free("B")
+    lease = alloc.alloc("D", 4, prompt=pa, digest="d")
+    assert lease is not None and lease.shared_pages == 2
+    alloc.audit()
+
+
 # --- compile budgets --------------------------------------------------------
 
 def test_paged_engine_compile_budgets(retrace_sanitizer):
