@@ -97,13 +97,47 @@ def check_serving(r: dict, expect_mesh: dict | None = None,
                 assert s["acceptance_rate"] == 1.0, s
 
 
-def check_gemm(r: dict) -> None:
+def check_gemm(r: dict, expect_tuning: bool = False) -> None:
     assert r["bench"] == "gemm" and r["modes"], r
+    tuned_run = bool(r.get("tuning", {}).get("autotuned"))
+    if expect_tuning:
+        assert tuned_run, "gemm report was not produced with --autotune"
     for m in r["modes"]:
-        assert {"name", "mode", "rank", "planes", "us",
-                "est_hbm_bytes", "hbm_reduction",
+        assert {"name", "mode", "rank", "planes", "us", "dispatch",
+                "chosen_us", "est_hbm_bytes", "hbm_reduction",
                 "fused_vs_stacked_speedup"} <= set(m), m
         assert {"fused", "stacked", "xla"} <= set(m["us"]), m
+        d = m["dispatch"]
+        assert d["path"] in ("fused", "stacked", "xla"), m
+        assert d["source"] in ("policy", "tuned", "roofline", "default"), m
+        assert m["chosen_us"] == m["us"][d["path"]], m
+        if tuned_run:
+            # the auto-dispatch regression gate: the chosen path may never
+            # lose the three-way race by more than measurement slack.  The
+            # bench feeds its own medians into the tuning cache before
+            # asking dispatch, so this holds by construction when healthy
+            # and only fails on a real dispatch/cache bug.
+            assert d["source"] == "tuned", m
+            best = min(m["us"].values())
+            assert m["chosen_us"] <= 1.05 * best, (m["name"], m["us"], d)
+            assert m.get("tuned"), m
+            assert {"blocks", "default_blocks",
+                    "us_tuned"} <= set(m["tuned"]), m
+    # decode-shaped sweep: the skinny-M kernel must beat the prefill-
+    # shaped (m-padded) fused tile at small decode batches
+    ds = r["decode_sweep"]
+    assert ds["points"], ds
+    ms = [p["m"] for p in ds["points"]]
+    assert ms == sorted(ms) and ms[0] <= 8, ms
+    for p in ds["points"]:
+        assert {"skinny", "fused_padded", "xla"} <= set(p["us"]), p
+        if p["m"] <= 8:
+            assert p["us"]["skinny"] < p["us"]["fused_padded"], p
+    t = r["tuning"]
+    assert {"autotuned", "cache_path", "kernel_version",
+            "entries"} <= set(t), t
+    if tuned_run:
+        assert t["entries"] >= len(r["modes"]), t
     # the load-bearing fused-beats-stacked check is structural:
     # the fused jaxpr must not materialize operand stacks at all
     s = r["structural"]
@@ -266,7 +300,8 @@ CHECKS = {"serving": check_serving, "gemm": check_gemm,
 def check_report(r: dict, expect_mesh: dict | None = None,
                  expect_carbon: bool = False,
                  expect_chaos: bool = False,
-                 expect_paged: bool = False) -> str:
+                 expect_paged: bool = False,
+                 expect_tuning: bool = False) -> str:
     """Dispatch on the report's "bench" field; returns the kind."""
     kind = r.get("bench")
     if kind not in CHECKS:
@@ -276,6 +311,8 @@ def check_report(r: dict, expect_mesh: dict | None = None,
         check_serving(r, expect_mesh, expect_carbon, expect_paged)
     elif kind == "fleet":
         check_fleet(r, expect_chaos)
+    elif kind == "gemm":
+        check_gemm(r, expect_tuning)
     else:
         CHECKS[kind](r)
     return kind
@@ -306,6 +343,11 @@ def main(argv=None) -> int:
                          "slot-vs-paged comparison (token identity, "
                          "allocator health, tick-TTFT gates) and the "
                          "speculative-decoding counters")
+    ap.add_argument("--expect-tuning", action="store_true",
+                    help="require gemm reports to be --autotune runs: "
+                         "tuned tile blocks recorded per mode and the "
+                         "chosen dispatch path within 1.05x of the "
+                         "best-of-three measurement")
     args = ap.parse_args(argv)
     mesh = _parse_mesh(args.expect_mesh) if args.expect_mesh else None
     for path in args.reports:
@@ -313,7 +355,8 @@ def main(argv=None) -> int:
             r = json.load(f)
         try:
             kind = check_report(r, mesh, args.expect_carbon,
-                                args.expect_chaos, args.expect_paged)
+                                args.expect_chaos, args.expect_paged,
+                                args.expect_tuning)
         except AssertionError as e:
             print(f"[check_schema] {path}: FAIL\n{e}", file=sys.stderr)
             return 1

@@ -16,7 +16,15 @@ cross-checks the declared model, plus the grid and K-tail contracts:
   PC403  a shape dispatch admits under the budget whose recomputed
          working set busts it;
   PC404  the fused kernel with K padding is not bit-identical to the
-         unpadded XLA reference (the k_valid tail mask regressed).
+         unpadded XLA reference (the k_valid tail mask regressed);
+  PC405  a fused entry in the kernel-tuning cache (kernels/autotune.py)
+         carries a working set that busts the VMEM budget it was keyed
+         under — the cache is poisoned (dispatch re-validates at lookup,
+         so this flags the producer, not a live scheduling hazard).
+
+PC401/PC402 also sweep the decode-specialized skinny-M kernel
+(`skinny_vmem_bytes` vs its captured BlockSpecs: the A tile and the
+accumulator scale with the TRUE row count, never a 128-padded bm).
 
 VMEM accounting model (matches `fused_vmem_bytes`'s conventions):
 pipelined inputs/outputs are double-buffered (x2), scratch is
@@ -44,6 +52,14 @@ PROBE_SHAPES = (
     (512, 2048, 512, 4),
     (128, 128, 128, 1),
     (1024, 4096, 1024, 8),
+)
+
+#: (m, k, n, rank) decode-shaped probes for the skinny-M kernel (m is the
+#: true row count; K/N must be multiples of the default skinny blocks).
+SKINNY_PROBE_SHAPES = (
+    (1, 512, 256, 2),
+    (8, 512, 256, 0),
+    (32, 2048, 512, 8),
 )
 
 
@@ -210,6 +226,19 @@ def _check_vmem_models() -> list[Finding]:
                 f"{declared} but BlockSpecs give {actual} "
                 f"(drift {declared - actual:+d}B > {TOLERANCE_BYTES}B "
                 f"tolerance) for gemm {(m, k, n)}"))
+    # skinny-M decode kernel
+    for m, k, n, rank in SKINNY_PROBE_SHAPES:
+        cap, (bk, bn) = _capture_skinny(m, k, n, rank)
+        out.extend(_check_grid(cap))
+        actual = cap.vmem_bytes()
+        declared = qk.skinny_vmem_bytes(m, bk, bn, rank + 1)
+        if abs(declared - actual) > TOLERANCE_BYTES:
+            out.append(Finding(
+                "PC401", _loc(cap.kernel_name),
+                f"skinny_vmem_bytes(m={m},{bk},{bn},planes={rank + 1}) = "
+                f"{declared} but BlockSpecs give {actual} "
+                f"(drift {declared - actual:+d}B > {TOLERANCE_BYTES}B "
+                f"tolerance) for decode gemm {(m, k, n)}"))
     # stacked twin
     cap = _capture_stacked(256, 512, 256, rank=2)
     out.extend(_check_grid(cap))
@@ -221,6 +250,25 @@ def _check_vmem_models() -> list[Finding]:
             f"stacked_vmem_bytes(256,512,256,planes=3) = {declared} but "
             f"BlockSpecs give {actual}"))
     return out
+
+
+def _capture_skinny(m: int, k: int, n: int, rank: int
+                    ) -> tuple[PallasCapture, tuple[int, int]]:
+    """Trace the skinny-M decode wrapper under the interceptor."""
+    import jax.numpy as jnp
+    from repro.kernels import approx_qgemm as qk
+
+    bk, bn = qk.choose_skinny_blocks(k, n)
+    a = jnp.zeros((m, k), jnp.int8)
+    b = jnp.zeros((k, n), jnp.int8)
+    fu = jnp.zeros((rank, 256), jnp.int8)
+    scales = jnp.zeros((rank + 1, 1), jnp.float32)
+    with _Interceptor() as icept:
+        _unjitted(qk.approx_qgemm_skinny)(
+            a, b, fu, fu, scales, trunc_a=0, trunc_b=0, k_valid=k,
+            bk=bk, bn=bn, interpret=True)
+    assert len(icept.captures) == 1, [c.kernel_name for c in icept.captures]
+    return icept.captures[0], (bk, bn)
 
 
 def _capture_stacked(m: int, k: int, n: int, rank: int) -> PallasCapture:
@@ -267,6 +315,60 @@ def _check_dispatch_consistency() -> list[Finding]:
                 f"dispatch admits gemm {(m, k, n)} rank {rank} "
                 f"(declared {declared}B <= budget {budget}B) but the "
                 f"BlockSpec working set is {cap.vmem_bytes()}B"))
+    for m, k, n, rank in SKINNY_PROBE_SHAPES:
+        bk, bn = qk.choose_skinny_blocks(k, n)
+        declared = qk.skinny_vmem_bytes(m, bk, bn, rank + 1)
+        if declared > budget:
+            continue
+        cap, _ = _capture_skinny(m, k, n, rank)
+        if cap.vmem_bytes() > budget + TOLERANCE_BYTES:
+            out.append(Finding(
+                "PC403", "kernels/dispatch:choose_gemm_path",
+                f"dispatch admits decode gemm {(m, k, n)} rank {rank} to "
+                f"the skinny kernel (declared {declared}B <= budget "
+                f"{budget}B) but the BlockSpec working set is "
+                f"{cap.vmem_bytes()}B"))
+    return out
+
+
+def _check_tuning_cache() -> list[Finding]:
+    """PC405: fused entries in the active kernel-tuning cache must fit the
+    VMEM budget embedded in their own key.  `dispatch._tuned_plan`
+    re-validates admission at lookup (a poisoned entry is IGNORED, not
+    executed), so a finding here flags the cache producer — a bench or
+    tuner run that persisted a plan the admission model rejects."""
+    from repro.kernels import approx_qgemm as qk
+    from repro.kernels import autotune
+
+    out: list[Finding] = []
+    for key, d in autotune.load_cache().get("entries", {}).items():
+        if not isinstance(d, dict) or d.get("path") != "fused":
+            continue
+        try:
+            plan = autotune.TunedPlan.from_dict(d)
+        except TypeError:
+            continue
+        budget = None
+        rank = None
+        for part in key.split("|"):
+            if part.startswith("vmem"):
+                budget = int(part[4:])
+            elif part.startswith("r") and part[1:].isdigit():
+                rank = int(part[1:])
+        if budget is None or rank is None:
+            continue  # malformed key: lookup can never serve it
+        planes = rank + 1
+        if plan.skinny:
+            ws = qk.skinny_vmem_bytes(plan.bm, plan.bk, plan.bn, planes)
+        else:
+            ws = qk.fused_vmem_bytes(plan.bm, plan.bk, plan.bn, planes)
+        if ws > budget:
+            out.append(Finding(
+                "PC405", "kernels/autotune:put",
+                f"tuning-cache entry {key} records a fused plan "
+                f"(bm={plan.bm}, bk={plan.bk}, bn={plan.bn}, "
+                f"skinny={plan.skinny}) whose working set {ws}B busts "
+                f"the {budget}B budget it was tuned under"))
     return out
 
 
@@ -308,4 +410,5 @@ def check(root: str | None = None) -> list[Finding]:
     findings.extend(_check_quantize())
     findings.extend(_check_dispatch_consistency())
     findings.extend(_check_ktail())
+    findings.extend(_check_tuning_cache())
     return findings

@@ -51,6 +51,8 @@ CODES = {
              "the VMEM budget",
     "PC404": "K-tail masking contract violated (padded fused GEMM is not "
              "bit-exact)",
+    "PC405": "kernel-tuning cache entry busts the VMEM budget it was "
+             "tuned under",
 }
 
 _ALLOW_RE = re.compile(r"#\s*analysis:\s*allow\[([A-Z]{2}\d{3})\]")

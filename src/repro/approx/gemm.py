@@ -320,32 +320,40 @@ def _tp_mesh(n: int):
     return mesh, (tp if tp > 1 and n % tp == 0 else 1)
 
 
-def _dispatch_pallas_qgemm(xq, wq, spec: MultSpec, mesh, tp: int):
+def _dispatch_pallas_qgemm(xq, wq, spec: MultSpec, mesh, tp: int, plan):
     """Route a Pallas-bound GEMM by mesh context: shard_map column-
     parallel under TP, shard_map-replicated on any other multi-device
-    mesh (pallas_call is opaque to GSPMD), plain call otherwise."""
+    mesh (pallas_call is opaque to GSPMD; both run the regular fused
+    kernel), and per the dispatch plan (fused tiles / skinny / stacked)
+    on a single device."""
     from repro.kernels import ops as kops
     if tp > 1:
         return kops.approx_qgemm_tp(xq, wq, spec, mesh)
     if mesh is not None and mesh.size > 1:
         return kops.approx_qgemm_replicated(xq, wq, spec, mesh)
-    return kops.approx_qgemm(xq, wq, spec)
+    return kops.approx_qgemm_planned(xq, wq, spec, plan)
+
+
+def _gemm_plan(spec: MultSpec, m: int, k: int, n: int, mesh, tp: int):
+    from repro.kernels import dispatch
+    rank = spec.rank if spec.mode == "lowrank" else 0
+    return dispatch.choose_gemm_path(
+        spec.policy, m=m, k=k, n=n, mode=spec.mode, rank=rank,
+        n_planes=spec.n_planes, tp=tp,
+        multi_device=mesh is not None and mesh.size > 1)
 
 
 def _approx_matmul_fwd(x, w, spec: MultSpec):
-    from repro.kernels import dispatch
     lead = x.shape[:-1]
     k = x.shape[-1]
     n = w.shape[1]
     x2 = x.reshape(-1, k)
     mesh, tp = _tp_mesh(n)
-    use_pallas = dispatch.use_pallas_gemm(spec.policy, m=x2.shape[0], k=k,
-                                          n=n, n_planes=spec.n_planes,
-                                          tp=tp)
-    xq, sx = _quantize_activations(x2, spec, use_pallas, mesh)
+    plan = _gemm_plan(spec, x2.shape[0], k, n, mesh, tp)
+    xq, sx = _quantize_activations(x2, spec, plan.use_pallas, mesh)
     wq, sw = quant.quantize(w, axis=1)        # (k, n) -> per-n scales (1, n)
-    if use_pallas:
-        acc = _dispatch_pallas_qgemm(xq, wq, spec, mesh, tp)
+    if plan.use_pallas:
+        acc = _dispatch_pallas_qgemm(xq, wq, spec, mesh, tp, plan)
     else:
         acc = approx_qgemm(xq, wq, spec)
     out = acc * (sx * sw)                     # (m, n) * scalar * (1, n)
@@ -383,7 +391,6 @@ def approx_matmul_prepared(x: jax.Array, pw: PreparedWeight,
 
 
 def _approx_matmul_prepared_fwd(x, pw: PreparedWeight, spec: MultSpec):
-    from repro.kernels import dispatch
     if pw.mult != spec.name or pw.mode != spec.mode:
         raise ValueError(
             f"PreparedWeight was built for multiplier {pw.mult!r} "
@@ -397,12 +404,10 @@ def _approx_matmul_prepared_fwd(x, pw: PreparedWeight, spec: MultSpec):
     n = pw.wq.shape[-1]
     x2 = x.reshape(-1, k)
     mesh, tp = _tp_mesh(n)
-    use_pallas = dispatch.use_pallas_gemm(spec.policy, m=x2.shape[0], k=k,
-                                          n=n, n_planes=spec.n_planes,
-                                          tp=tp)
-    xq, sx = _quantize_activations(x2, spec, use_pallas, mesh)
-    if use_pallas:
-        acc = _dispatch_pallas_qgemm(xq, pw.wq, spec, mesh, tp)
+    plan = _gemm_plan(spec, x2.shape[0], k, n, mesh, tp)
+    xq, sx = _quantize_activations(x2, spec, plan.use_pallas, mesh)
+    if plan.use_pallas:
+        acc = _dispatch_pallas_qgemm(xq, pw.wq, spec, mesh, tp, plan)
     else:
         acc = approx_qgemm_prepared(xq, pw, spec)
     out = acc * (sx * pw.sw)

@@ -164,29 +164,48 @@ def calibrate_serving(arch: str = "tinyllama-1.1b", *, requests: int = 3,
 
 def calibrate_gemm(m: int = 128, k: int = 160, n: int = 128, *,
                    mult_name: str = "trunc2x2", reps: int = 3,
-                   node_nm: int = 7, seed: int = 0) -> DelayCalibration:
-    """Measure effective MAC/s of the fused approximate-GEMM data path
-    (the kernel `benchmarks/bench_gemm.py` times, same smoke shape) and
-    anchor it against the dataflow model's prediction for a single GEMM
-    layer of the same shape."""
+                   node_nm: int = 7, seed: int = 0,
+                   policy: str | None = None) -> DelayCalibration:
+    """Measure effective MAC/s of the approximate-GEMM data path (the
+    kernels `benchmarks/bench_gemm.py` times, same smoke shape) and anchor
+    it against the dataflow model's prediction for a single GEMM layer of
+    the same shape.
+
+    The measured side runs whatever `kernels/dispatch.choose_gemm_path`
+    would actually pick for this GEMM — tuned tiles from the autotune
+    cache when one exists, the roofline prediction otherwise — so the GA's
+    delay anchor reflects the dispatched reality, not one hard-coded
+    kernel.  The chosen plan is recorded in `meta["dispatch"]`."""
     import jax
     import jax.numpy as jnp
     import numpy as np
 
     from repro.approx import gemm as G
     from repro.core import multipliers as mm
-    from repro.kernels import ops
+    from repro.kernels import dispatch, ops
 
     rng = np.random.default_rng(seed)
     a = jnp.asarray(rng.integers(-128, 128, (m, k)), jnp.int8)
     b = jnp.asarray(rng.integers(-128, 128, (k, n)), jnp.int8)
     spec = G.from_multiplier(mm.get_multiplier(mult_name))
-    fn = jax.jit(lambda x, y: ops.approx_qgemm(x, y, spec))
+    rank = spec.rank if spec.mode == "lowrank" else 0
+    plan = dispatch.choose_gemm_path(policy or spec.policy, m=m, k=k, n=n,
+                                     mode=spec.mode, rank=rank,
+                                     n_planes=spec.n_planes)
+    if plan.use_pallas:
+        fn = jax.jit(lambda x, y: ops.approx_qgemm_planned(x, y, spec, plan))
+    else:
+        fn = jax.jit(lambda x, y: G.approx_qgemm(x, y, spec))
     jax.block_until_ready(fn(a, b))  # compile
-    t0 = time.perf_counter()
-    for _ in range(reps):
+    samples = []
+    for _ in range(max(reps, 1)):
+        t0 = time.perf_counter()
         jax.block_until_ready(fn(a, b))
-    sec = (time.perf_counter() - t0) / reps
+        samples.append(time.perf_counter() - t0)
+    samples.sort()
+    h = len(samples) // 2
+    sec = samples[h] if len(samples) % 2 else \
+        0.5 * (samples[h - 1] + samples[h])
     measured = m * k * n / max(sec, 1e-12)
 
     anchor = _anchor_config(node_nm)
@@ -198,6 +217,7 @@ def calibrate_gemm(m: int = 128, k: int = 160, n: int = 128, *,
         source="gemm", anchor=f"nvdla_default(2048, {node_nm}nm)",
         meta={"shape": {"m": m, "k": k, "n": n}, "mult": mult_name,
               "reps": reps, "us_per_call": sec * 1e6,
+              "dispatch": plan.as_dict(),
               "backend": jax.default_backend()})
 
 

@@ -48,6 +48,15 @@ DEFAULT_BM = 256
 DEFAULT_BK = 512
 DEFAULT_BN = 256
 
+#: Largest M the decode-specialized skinny kernel accepts: one decode step
+#: of a continuous-batching arena (m = batch).  Above this, padding to an
+#: MXU tile stops being the dominant cost and the regular fused kernel wins.
+SKINNY_MAX_M = 32
+
+#: Bump when a kernel's schedule/layout changes in a way that invalidates
+#: measured tile timings (kernels/autotune.py keys its cache on this).
+KERNEL_VERSION = 2
+
 
 def choose_blocks(m: int, k: int, n: int, bm: int | None = None,
                   bk: int | None = None, bn: int | None = None
@@ -59,6 +68,15 @@ def choose_blocks(m: int, k: int, n: int, bm: int | None = None,
     bk = bk or min(DEFAULT_BK, max(128, 1 << max(k - 1, 0).bit_length()))
     bn = bn or min(DEFAULT_BN, max(128, 1 << max(n - 1, 0).bit_length()))
     return bm, bk, bn
+
+
+def choose_skinny_blocks(k: int, n: int, bk: int | None = None,
+                         bn: int | None = None) -> tuple[int, int]:
+    """Default (bk, bn) for the skinny-M decode kernel (M is never
+    blocked — the whole row batch rides in every grid step)."""
+    bk = bk or min(DEFAULT_BK, max(128, 1 << max(k - 1, 0).bit_length()))
+    bn = bn or min(DEFAULT_BN, max(128, 1 << max(n - 1, 0).bit_length()))
+    return bk, bn
 
 
 def fused_vmem_bytes(bm: int, bk: int, bn: int, n_planes: int) -> int:
@@ -80,6 +98,19 @@ def stacked_vmem_bytes(bm: int, bk: int, bn: int, n_planes: int) -> int:
     acc = n_planes * bm * bn * 4
     out = 2 * bm * bn * 4
     return operands + acc + out
+
+
+def skinny_vmem_bytes(m: int, bk: int, bn: int, n_planes: int) -> int:
+    """VMEM working set of one skinny-kernel grid step: the whole (un-
+    padded) M dimension rides in every block, so the A tile and the
+    accumulator scale with the true row count, not a 128-padded bm.
+    Rank 0 still ships one dummy table row per side (a BlockSpec dim may
+    not be 0), so the table term floors at one row."""
+    operands = 2 * (m * bk + bk * bn)
+    tables = 2 * 2 * max(n_planes - 1, 1) * 256
+    acc = n_planes * m * bn * 4
+    out = 2 * m * bn * 4
+    return operands + tables + acc + out
 
 
 def signed_trunc_mask(t: int) -> int:
@@ -158,9 +189,41 @@ def approx_qgemm_stacked(a_stack: jax.Array, b_stack: jax.Array,
 # fused kernel: raw operands in, table map + trunc mask in-kernel
 # ---------------------------------------------------------------------------
 
+def _correction_dots(a, b, fu_ref, fv_ref, acc_ref, in_k, *, n_corr: int,
+                     unroll: int):
+    """Table-map + matmul the `n_corr` correction planes into acc_ref[1:].
+
+    `unroll` groups planes: each group's mapped tiles are stacked and run
+    as ONE batched int8 dot_general (a single MXU dispatch per group
+    instead of per plane).  Integer accumulation, so the result is
+    bit-identical at every unroll factor — it is purely a schedule knob,
+    which is what lets the autotuner search it.
+    """
+    idx_a = jnp.bitwise_and(a.astype(jnp.int32), 0xFF)
+    idx_b = jnp.bitwise_and(b.astype(jnp.int32), 0xFF)
+    for r0 in range(0, n_corr, unroll):
+        u = min(unroll, n_corr - r0)
+        uas, vbs = [], []
+        for r in range(r0, r0 + u):
+            ua = jnp.take(fu_ref[r], idx_a, axis=0)
+            if in_k is not None:
+                ua = jnp.where(in_k, ua, jnp.int8(0))
+            uas.append(ua)
+            vbs.append(jnp.take(fv_ref[r], idx_b, axis=0))
+        if u == 1:
+            acc_ref[r0 + 1] += jnp.dot(uas[0], vbs[0],
+                                       preferred_element_type=jnp.int32)
+        else:
+            batched = jax.lax.dot_general(
+                jnp.stack(uas), jnp.stack(vbs),
+                (((2,), (1,)), ((0,), (0,))),
+                preferred_element_type=jnp.int32)
+            acc_ref[r0 + 1:r0 + 1 + u] += batched
+
+
 def _fused_kernel(a_ref, b_ref, fu_ref, fv_ref, s_ref, out_ref, acc_ref, *,
                   n_planes: int, k_blocks: int, bk: int, k_valid: int,
-                  mask_a: int, mask_b: int):
+                  mask_a: int, mask_b: int, unroll: int):
     """One (i, j, k) grid step over RAW operand tiles.
 
     a_ref: (bm, bk) int8 VMEM      raw quantized activations
@@ -189,19 +252,12 @@ def _fused_kernel(a_ref, b_ref, fu_ref, fv_ref, s_ref, out_ref, acc_ref, *,
     acc_ref[0] += jnp.dot(a0, b0, preferred_element_type=jnp.int32)
 
     if n_planes > 1:
-        idx_a = jnp.bitwise_and(a.astype(jnp.int32), 0xFF)
-        idx_b = jnp.bitwise_and(b.astype(jnp.int32), 0xFF)
-        padded_k = k_valid < k_blocks * bk  # static: any K padding at all
-        if padded_k:
+        in_k = None
+        if k_valid < k_blocks * bk:  # static: any K padding at all
             kpos = k * bk + jax.lax.broadcasted_iota(jnp.int32, a.shape, 1)
             in_k = kpos < k_valid  # all-true except past the K tail
-        for r in range(n_planes - 1):  # static unroll over correction planes
-            ua = jnp.take(fu_ref[r], idx_a, axis=0)
-            vb = jnp.take(fv_ref[r], idx_b, axis=0)
-            if padded_k:
-                ua = jnp.where(in_k, ua, jnp.int8(0))
-            acc_ref[r + 1] += jnp.dot(ua, vb,
-                                      preferred_element_type=jnp.int32)
+        _correction_dots(a, b, fu_ref, fv_ref, acc_ref, in_k,
+                         n_corr=n_planes - 1, unroll=unroll)
 
     @pl.when(k == k_blocks - 1)
     def _flush():
@@ -212,12 +268,13 @@ def _fused_kernel(a_ref, b_ref, fu_ref, fv_ref, s_ref, out_ref, acc_ref, *,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "trunc_a", "trunc_b", "k_valid", "bm", "bk", "bn", "interpret"))
+    "trunc_a", "trunc_b", "k_valid", "bm", "bk", "bn", "unroll",
+    "interpret"))
 def approx_qgemm_fused(a_q: jax.Array, b_q: jax.Array, fu_q: jax.Array,
                        fv_q: jax.Array, scales: jax.Array, *,
                        trunc_a: int = 0, trunc_b: int = 0, k_valid: int,
                        bm: int = DEFAULT_BM, bk: int = DEFAULT_BK,
-                       bn: int = DEFAULT_BN,
+                       bn: int = DEFAULT_BN, unroll: int = 1,
                        interpret: bool = False) -> jax.Array:
     """Low-rank fused path: a_q (M, K) int8, b_q (K, N) int8, fu_q/fv_q
     (R, 256) int8 tables, scales (R+1, 1) f32 -> (M, N) f32.
@@ -238,7 +295,7 @@ def approx_qgemm_fused(a_q: jax.Array, b_q: jax.Array, fu_q: jax.Array,
         functools.partial(
             _fused_kernel, n_planes=p, k_blocks=grid[2], bk=bk,
             k_valid=k_valid, mask_a=signed_trunc_mask(trunc_a),
-            mask_b=signed_trunc_mask(trunc_b)),
+            mask_b=signed_trunc_mask(trunc_b), unroll=unroll),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
@@ -307,3 +364,105 @@ def approx_qgemm_plane0(a_q: jax.Array, b_q: jax.Array, *, trunc_a: int = 0,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a_q, b_q)
+
+
+# ---------------------------------------------------------------------------
+# skinny-M kernel: decode-shaped GEMMs (m = batch <= SKINNY_MAX_M)
+# ---------------------------------------------------------------------------
+
+def _skinny_kernel(a_ref, b_ref, fu_ref, fv_ref, s_ref, out_ref, acc_ref, *,
+                   n_planes: int, k_blocks: int, bk: int, k_valid: int,
+                   mask_a: int, mask_b: int, unroll: int):
+    """One (j, k) grid step of the decode-specialized GEMV-style kernel.
+
+    a_ref: (m, bk) int8 VMEM — the WHOLE row batch, broadcast to every
+        N-block (index map constant in j, so the tile re-fetches only
+        across K steps); m is the true batch, never padded to an MXU tile.
+    b_ref: (bk, bn) int8 VMEM — K-major streaming of the weight.
+    acc_ref: (n_planes, m, bn) int32 VMEM scratch.
+
+    Grid is (N-blocks, K-blocks) with K innermost ("arbitrary") so the
+    accumulator lives across the contraction, same discipline as the
+    prefill-shaped fused kernel; there is no M grid axis at all.
+    """
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    a0 = a if mask_a == -1 else jnp.bitwise_and(a, jnp.int8(mask_a))
+    b0 = b if mask_b == -1 else jnp.bitwise_and(b, jnp.int8(mask_b))
+    acc_ref[0] += jnp.dot(a0, b0, preferred_element_type=jnp.int32)
+
+    if n_planes > 1:
+        in_k = None
+        if k_valid < k_blocks * bk:
+            kpos = k * bk + jax.lax.broadcasted_iota(jnp.int32, a.shape, 1)
+            in_k = kpos < k_valid
+        _correction_dots(a, b, fu_ref, fv_ref, acc_ref, in_k,
+                         n_corr=n_planes - 1, unroll=unroll)
+
+    @pl.when(k == k_blocks - 1)
+    def _flush():
+        acc = jnp.zeros(out_ref.shape, jnp.float32)
+        for r in range(n_planes):
+            acc = acc + s_ref[r, 0] * acc_ref[r].astype(jnp.float32)
+        out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "trunc_a", "trunc_b", "k_valid", "bk", "bn", "unroll", "interpret"))
+def approx_qgemm_skinny(a_q: jax.Array, b_q: jax.Array, fu_q: jax.Array,
+                        fv_q: jax.Array, scales: jax.Array, *,
+                        trunc_a: int = 0, trunc_b: int = 0, k_valid: int,
+                        bk: int = DEFAULT_BK, bn: int = DEFAULT_BN,
+                        unroll: int = 1,
+                        interpret: bool = False) -> jax.Array:
+    """Decode path: a_q (m, K) int8 with m <= SKINNY_MAX_M, b_q (K, N)
+    int8, fu_q/fv_q (R, 256) tables (R may be 0 for exact/trunc), scales
+    (R+1, 1) f32 -> (m, N) f32.
+
+    K, N must be block multiples (ops.py pads); m is consumed AS IS — the
+    whole point is that a batch-8 decode GEMM does 8 rows of MXU work
+    instead of a 128-row padded tile.  Bit-identical to the fused/stacked
+    kernels and the XLA reference on every plane."""
+    m, k = a_q.shape
+    k2, n = b_q.shape
+    r = fu_q.shape[0]
+    assert k == k2 and fv_q.shape == fu_q.shape == (r, 256)
+    assert scales.shape == (r + 1, 1), scales.shape
+    assert 0 < m <= SKINNY_MAX_M, m
+    assert k % bk == 0 and n % bn == 0, (k, n, bk, bn)
+    assert 0 < k_valid <= k, (k_valid, k)
+    grid = (n // bn, k // bk)
+    p = r + 1
+    if r == 0:
+        # Exact/trunc: the kernel never touches the tables (n_planes == 1),
+        # but a BlockSpec dim of 0 is illegal — ship a 1-row dummy.
+        fu_q = jnp.zeros((1, 256), jnp.int8)
+        fv_q = jnp.zeros((1, 256), jnp.int8)
+    ru = max(r, 1)
+
+    return pl.pallas_call(
+        functools.partial(
+            _skinny_kernel, n_planes=p, k_blocks=grid[1], bk=bk,
+            k_valid=k_valid, mask_a=signed_trunc_mask(trunc_a),
+            mask_b=signed_trunc_mask(trunc_b), unroll=unroll),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, bk), lambda j, kk: (0, kk)),
+            pl.BlockSpec((bk, bn), lambda j, kk: (kk, j)),
+            pl.BlockSpec((ru, 256), lambda j, kk: (0, 0)),
+            pl.BlockSpec((ru, 256), lambda j, kk: (0, 0)),
+            pl.BlockSpec((p, 1), lambda j, kk: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, bn), lambda j, kk: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((p, m, bn), jnp.int32)],
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(a_q, b_q, fu_q, fv_q, scales)

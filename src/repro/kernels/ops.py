@@ -57,19 +57,45 @@ def build_stacks(a_q: jax.Array, b_q: jax.Array, spec: gemm_mod.MultSpec
             jnp.stack(scales)[:, None])
 
 
+def _spec_kernel_args(spec: gemm_mod.MultSpec):
+    """(trunc_a, trunc_b, rank) as the kernels consume them."""
+    trunc_a = spec.trunc_a if spec.mode == "trunc" else 0
+    trunc_b = spec.trunc_b if spec.mode == "trunc" else 0
+    rank = spec.rank if spec.mode == "lowrank" else 0
+    return trunc_a, trunc_b, rank
+
+
 def approx_qgemm(a_q: jax.Array, b_q: jax.Array, spec: gemm_mod.MultSpec,
                  *, bm: int | None = None, bk: int | None = None,
-                 bn: int | None = None, fused: bool = True) -> jax.Array:
+                 bn: int | None = None, fused: bool = True,
+                 skinny: bool = False, unroll: int = 1) -> jax.Array:
     """int8 (m, k) x int8 (k, n) -> f32 (m, n) via the Pallas kernels.
 
     `fused=True` (default) streams the raw operands once and maps/masks
     them in-kernel; `fused=False` runs the stacked reference twin (XLA
-    pre-maps `(R+1)x` operand copies through HBM)."""
+    pre-maps `(R+1)x` operand copies through HBM).  `skinny=True` routes
+    a decode-shaped GEMM (m <= SKINNY_MAX_M) to the skinny-M kernel: the
+    row batch is consumed unpadded, so `bm` is ignored.  `unroll` is the
+    plane-unroll schedule knob (bit-identical at every value)."""
     m, k = a_q.shape
     k2, n = b_q.shape
     assert k == k2
-    bm, bk, bn = qk.choose_blocks(m, k, n, bm, bk, bn)
     interpret = dispatch.interpret_mode()
+    trunc_a, trunc_b, rank = _spec_kernel_args(spec)
+    if fused and skinny:
+        assert m <= qk.SKINNY_MAX_M, (m, qk.SKINNY_MAX_M)
+        bk, bn = qk.choose_skinny_blocks(k, n, bk, bn)
+        ap = _pad_to(a_q, 1, bk)
+        bp = _pad_to(_pad_to(b_q, 0, bk), 1, bn)
+        scales = jnp.concatenate(
+            [jnp.ones((1,), jnp.float32), -spec.s_r])[:, None] if rank \
+            else jnp.ones((1, 1), jnp.float32)
+        out = qk.approx_qgemm_skinny(
+            ap, bp, spec.fu_q[:rank], spec.fv_q[:rank], scales,
+            trunc_a=trunc_a, trunc_b=trunc_b, k_valid=k, bk=bk, bn=bn,
+            unroll=unroll, interpret=interpret)
+        return out[:, :n]
+    bm, bk, bn = qk.choose_blocks(m, k, n, bm, bk, bn)
     if not fused:
         a_s, b_s, s = build_stacks(a_q, b_q, spec)
         a_s = _pad_to(_pad_to(a_s, 1, bm), 2, bk)
@@ -79,21 +105,34 @@ def approx_qgemm(a_q: jax.Array, b_q: jax.Array, spec: gemm_mod.MultSpec,
         return out[:m, :n]
     ap = _pad_to(_pad_to(a_q, 0, bm), 1, bk)
     bp = _pad_to(_pad_to(b_q, 0, bk), 1, bn)
-    trunc_a = spec.trunc_a if spec.mode == "trunc" else 0
-    trunc_b = spec.trunc_b if spec.mode == "trunc" else 0
-    rank = spec.rank if spec.mode == "lowrank" else 0
     if rank:
         scales = jnp.concatenate(
             [jnp.ones((1,), jnp.float32), -spec.s_r])[:, None]
         out = qk.approx_qgemm_fused(
             ap, bp, spec.fu_q, spec.fv_q, scales, trunc_a=trunc_a,
-            trunc_b=trunc_b, k_valid=k, bm=bm, bk=bk, bn=bn,
+            trunc_b=trunc_b, k_valid=k, bm=bm, bk=bk, bn=bn, unroll=unroll,
             interpret=interpret)
     else:
         out = qk.approx_qgemm_plane0(ap, bp, trunc_a=trunc_a,
                                      trunc_b=trunc_b, bm=bm, bk=bk, bn=bn,
                                      interpret=interpret)
     return out[:m, :n]
+
+
+def approx_qgemm_planned(a_q: jax.Array, b_q: jax.Array,
+                         spec: gemm_mod.MultSpec,
+                         plan: dispatch.GemmPlan) -> jax.Array:
+    """Execute a GEMM per a `dispatch.choose_gemm_path` plan (Pallas
+    paths; the XLA path belongs to approx/gemm.py, which knows about
+    prepared weights)."""
+    assert plan.path in ("fused", "stacked"), plan
+    if plan.path == "stacked":
+        return approx_qgemm(a_q, b_q, spec, fused=False)
+    if plan.skinny:
+        return approx_qgemm(a_q, b_q, spec, bk=plan.bk, bn=plan.bn,
+                            skinny=True, unroll=plan.unroll)
+    return approx_qgemm(a_q, b_q, spec, bm=plan.bm, bk=plan.bk, bn=plan.bn,
+                        unroll=plan.unroll)
 
 
 def approx_qgemm_tp(a_q: jax.Array, b_q: jax.Array,

@@ -30,6 +30,125 @@ _DTYPE_BYTES = {
 COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
                     "all-to-all", "collective-permute")
 
+# --- approximate-GEMM kernel-path model (consumed by kernels/autotune) -------
+#: int8 MXU peak: 2x the bf16 rate on v5e-class parts.
+PEAK_OPS_INT8 = 2 * PEAK_FLOPS_BF16
+#: VPU table-gather throughput (elements/s): the fused kernel's per-plane
+#: (256,)-table maps run on the VPU, 8x128 lanes at ~940 MHz.
+GATHER_ELEMS_PER_S = 0.9e12
+#: Fixed cost per grid step (pipeline bubble + index bookkeeping).
+GRID_STEP_OVERHEAD_S = 1.5e-6
+#: Fixed per-call launch overhead (dispatch + output touch).
+LAUNCH_OVERHEAD_S = {"fused": 5e-6, "stacked": 5e-6, "xla": 2e-6}
+
+GEMM_PATHS = ("fused", "stacked", "xla")
+
+
+def _ceil_to(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmPathCost:
+    """Roofline terms for one execution path of one approximate GEMM.
+
+    All byte/flop counts follow the tiled-GEMM re-read model: with output
+    tiling (bm, bn), the A operand streams from HBM once per N-block column
+    and B once per M-block row — the quantity the tile autotuner actually
+    trades against VMEM footprint.
+    """
+    path: str                 # "fused" | "stacked" | "xla"
+    mac_ops: float            # int8 MACs across all planes (padded shape)
+    hbm_bytes: float          # operand + intermediate + output traffic
+    gather_elems: float       # in-kernel VPU table-map element count
+    grid_steps: int           # pallas grid size (0 for the XLA path)
+
+    @property
+    def compute_s(self) -> float:
+        mxu = 2.0 * self.mac_ops / PEAK_OPS_INT8
+        vpu = self.gather_elems / GATHER_ELEMS_PER_S
+        return mxu + vpu
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def time_s(self) -> float:
+        """Roofline time: overlapped compute/memory + fixed overheads."""
+        return (max(self.compute_s, self.memory_s)
+                + self.grid_steps * GRID_STEP_OVERHEAD_S
+                + LAUNCH_OVERHEAD_S[self.path])
+
+    def as_dict(self) -> dict:
+        return {"path": self.path, "mac_ops": self.mac_ops,
+                "hbm_bytes": self.hbm_bytes,
+                "gather_elems": self.gather_elems,
+                "grid_steps": self.grid_steps, "compute_s": self.compute_s,
+                "memory_s": self.memory_s, "time_s": self.time_s}
+
+
+def gemm_path_cost(path: str, m: int, k: int, n: int, n_planes: int, *,
+                   bm: int = 256, bk: int = 512, bn: int = 256,
+                   skinny: bool = False) -> GemmPathCost:
+    """Roofline terms for an (m, k, n) approximate GEMM with `n_planes`
+    operand planes on `path` at tile (bm, bk, bn).
+
+    `skinny=True` models the decode-specialized kernel: the whole (un-
+    padded) M rides in every grid step, so a batch-of-8 decode GEMM does
+    8 rows of MXU work instead of a 128-row padded tile."""
+    assert path in GEMM_PATHS, path
+    r = max(n_planes - 1, 0)
+    if path == "xla":
+        # XLA runs the plane matmuls from HBM-resident mapped operands:
+        # the table-map pass reads the raw operands and writes R mapped
+        # copies, each plane matmul re-reads its operands, and the f32
+        # accumulator is updated per correction plane.
+        mapped = r * (m * k + k * n)
+        traffic = (m * k + k * n) + 2 * mapped + n_planes * (m * k + k * n) \
+            + (1 + 2 * r) * 4 * m * n
+        return GemmPathCost(path, m * k * n * n_planes, traffic, 0.0, 0)
+    kp, np_ = _ceil_to(k, bk), _ceil_to(n, bn)
+    if skinny:
+        mp, grid_m = m, 1
+    else:
+        mp = _ceil_to(m, bm)
+        grid_m = mp // bm
+    grid = grid_m * (np_ // bn) * (kp // bk)
+    mac = float(mp) * kp * np_ * n_planes
+    # tiled re-reads: A once per N-block column, B once per M-block row
+    a_reads = mp * kp * (np_ // bn)
+    b_reads = kp * np_ * grid_m
+    out = 4 * mp * np_
+    if path == "fused":
+        tables = 2 * 256 * r
+        gathers = float(r) * grid * (mp // grid_m * bk + bk * bn)
+        return GemmPathCost(path, mac, a_reads + b_reads + tables + out,
+                            gathers, grid)
+    # stacked: ops.build_stacks writes (and the kernel re-reads) per-plane
+    # operand copies through HBM
+    stack_build = n_planes * (m * k + k * n) + (m * k + k * n)
+    return GemmPathCost(path, mac,
+                        stack_build + n_planes * (a_reads + b_reads) + out,
+                        0.0, grid)
+
+
+def predicted_gemm_winner(m: int, k: int, n: int, n_planes: int, *,
+                          bm: int = 256, bk: int = 512, bn: int = 256,
+                          skinny: bool = False,
+                          on_tpu: bool = True) -> tuple[str, dict]:
+    """(winner path, per-path predicted seconds) for an approximate GEMM.
+
+    Off-TPU the Pallas kernels run interpret mode — a correctness
+    vehicle, orders of magnitude off — so the prediction pins XLA unless
+    a measurement (tuning cache) says otherwise."""
+    costs = {p: gemm_path_cost(p, m, k, n, n_planes, bm=bm, bk=bk, bn=bn,
+                               skinny=skinny and p == "fused").time_s
+             for p in GEMM_PATHS}
+    if not on_tpu:
+        return "xla", costs
+    return min(costs, key=costs.get), costs
+
 # matches e.g.  f32[16,4096,128]{2,1,0}  or  bf16[]  (scalars)
 _TYPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
 # an HLO instruction line:  %name = TYPE kind(args...)

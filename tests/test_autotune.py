@@ -1,0 +1,204 @@
+"""kernels/autotune.py: tuning cache + roofline-pruned tile search, and
+its integration with kernels/dispatch.choose_gemm_path.
+
+Measurement is injected as a seeded deterministic stub everywhere — these
+tests must never depend on wall-clock timer noise.
+"""
+
+import json
+import os
+
+import pytest
+
+from repro.kernels import approx_qgemm as qk
+from repro.kernels import autotune, dispatch
+
+
+@pytest.fixture
+def cache_path(tmp_path, monkeypatch):
+    p = str(tmp_path / "TUNING_gemm.json")
+    monkeypatch.setenv("REPRO_TUNING_CACHE", p)
+    autotune._MEMO.clear()
+    yield p
+    autotune._MEMO.clear()
+
+
+def _stub(winner="fused", best_bk=256):
+    """measure(path, m, k, n, bm, bk, bn, unroll, skinny) -> seconds."""
+    def measure(path, m, k, n, bm, bk, bn, unroll, skinny):
+        base = {"fused": 10.0, "stacked": 20.0, "xla": 30.0}
+        t = base[path]
+        if path == winner:
+            t = 1.0
+        if path == "fused":
+            t += 0.0 if bk == best_bk else 0.5
+            t += 0.01 * unroll
+        return t
+    return measure
+
+
+BUDGET = dispatch.VMEM_BUDGET_BYTES
+
+
+def test_cache_round_trip(cache_path):
+    plan = autotune.tune_gemm(256, 512, 256, mode="lowrank", rank=2,
+                              measure=_stub("fused"), backend="cpu",
+                              vmem_budget=BUDGET)
+    assert plan.path == "fused"
+    assert os.path.exists(cache_path)
+    hit = autotune.lookup(256, 512, 256, "lowrank", 2, backend="cpu",
+                          vmem_budget=BUDGET)
+    assert hit is not None
+    assert (hit.path, hit.bm, hit.bk, hit.bn, hit.unroll, hit.skinny) == \
+        (plan.path, plan.bm, plan.bk, plan.bn, plan.unroll, plan.skinny)
+    # same shape bucket: a nearby shape hits the same entry
+    assert autotune.lookup(250, 500, 250, "lowrank", 2, backend="cpu",
+                           vmem_budget=BUDGET) is not None
+    # different mode/rank/backend/budget cells all miss
+    assert autotune.lookup(256, 512, 256, "exact", 0, backend="cpu",
+                           vmem_budget=BUDGET) is None
+    assert autotune.lookup(256, 512, 256, "lowrank", 4, backend="cpu",
+                           vmem_budget=BUDGET) is None
+    assert autotune.lookup(256, 512, 256, "lowrank", 2, backend="tpu",
+                           vmem_budget=BUDGET) is None
+    assert autotune.lookup(256, 512, 256, "lowrank", 2, backend="cpu",
+                           vmem_budget=BUDGET + 1) is None
+
+
+def test_deterministic_winner(cache_path):
+    plans = [autotune.tune_gemm(256, 512, 256, mode="lowrank", rank=2,
+                                measure=_stub("fused", best_bk=256),
+                                backend="cpu", vmem_budget=BUDGET)
+             for _ in range(3)]
+    assert len({(p.path, p.bm, p.bk, p.bn, p.unroll) for p in plans}) == 1
+    assert plans[0].bk == 256
+    assert plans[0].unroll == 1  # 0.01/plane penalty: unroll=1 wins the tie
+    # a stub that makes xla the winner elects xla
+    p2 = autotune.tune_gemm(256, 512, 256, mode="exact", rank=0,
+                            measure=_stub("xla"), backend="cpu",
+                            vmem_budget=BUDGET)
+    assert p2.path == "xla"
+
+
+def test_stale_entry_invalidation(cache_path):
+    autotune.tune_gemm(256, 512, 256, mode="exact", rank=0,
+                       measure=_stub("fused"), backend="cpu",
+                       vmem_budget=BUDGET)
+
+    def reload():
+        autotune._MEMO.clear()
+        return autotune.lookup(256, 512, 256, "exact", 0, backend="cpu",
+                               vmem_budget=BUDGET)
+
+    assert reload() is not None
+    # kernel schedule changed -> every measured entry is stale
+    with open(cache_path) as f:
+        raw = json.load(f)
+    raw["kernel_version"] = qk.KERNEL_VERSION - 1
+    with open(cache_path, "w") as f:
+        json.dump(raw, f)
+    assert reload() is None
+    # cache schema changed -> same
+    raw["kernel_version"] = qk.KERNEL_VERSION
+    raw["schema"] = autotune.CACHE_SCHEMA + 1
+    with open(cache_path, "w") as f:
+        json.dump(raw, f)
+    assert reload() is None
+
+
+def test_corrupt_cache_falls_back(cache_path):
+    with open(cache_path, "w") as f:
+        f.write("{ this is not json")
+    assert autotune.load_cache(cache_path)["entries"] == {}
+    assert autotune.lookup(256, 512, 256, "exact", 0, backend="cpu",
+                           vmem_budget=BUDGET) is None
+    # and a tuner run REPLACES the corrupt file with a valid one
+    autotune.tune_gemm(256, 512, 256, mode="exact", rank=0,
+                       measure=_stub("fused"), backend="cpu",
+                       vmem_budget=BUDGET)
+    cache = autotune.load_cache(cache_path)
+    assert cache["schema"] == autotune.CACHE_SCHEMA
+    assert len(cache["entries"]) == 1
+
+
+def test_candidate_plans_admission_and_pruning():
+    cands = autotune.candidate_plans(256, 512, 256, 3, vmem_budget=BUDGET)
+    assert 0 < len(cands) <= autotune.MAX_MEASURED_CANDIDATES
+    for c in cands:
+        assert not c.skinny  # m=256 is not decode-shaped
+        assert qk.fused_vmem_bytes(c.bm, c.bk, c.bn, 3) <= BUDGET
+    # decode-shaped m: skinny candidates appear and respect their model
+    dec = autotune.candidate_plans(4, 512, 256, 3, vmem_budget=BUDGET)
+    assert any(c.skinny for c in dec)
+    for c in dec:
+        if c.skinny:
+            assert c.bm == 4
+            assert qk.skinny_vmem_bytes(4, c.bk, c.bn, 3) <= BUDGET
+    # a tiny budget prunes everything except nothing at all
+    assert autotune.candidate_plans(256, 512, 256, 3, vmem_budget=1) == []
+
+
+def test_dispatch_consults_cache(cache_path):
+    # no cache -> off-TPU auto pins xla
+    plan = dispatch.choose_gemm_path("auto", m=256, k=512, n=256,
+                                     mode="lowrank", rank=2, n_planes=3)
+    assert plan.path == "xla" and plan.source == "default"
+    # measured fused winner in the cache -> auto now returns it, tiles
+    # included (backend must match the live jax backend for the hit)
+    import jax
+    autotune.tune_gemm(256, 512, 256, mode="lowrank", rank=2,
+                       measure=_stub("fused", best_bk=256),
+                       backend=jax.default_backend(),
+                       vmem_budget=dispatch.vmem_budget_bytes())
+    plan = dispatch.choose_gemm_path("auto", m=256, k=512, n=256,
+                                     mode="lowrank", rank=2, n_planes=3)
+    assert plan.path == "fused" and plan.source == "tuned"
+    assert plan.bk == 256
+    # a measured xla winner must veto fused even under policy "auto"
+    autotune.record_winner(512, 512, 512, "exact", 0,
+                           {"fused": 10.0, "stacked": 9.0, "xla": 1.0},
+                           backend=jax.default_backend(),
+                           vmem_budget=dispatch.vmem_budget_bytes(),
+                           path=cache_path)
+    plan = dispatch.choose_gemm_path("auto", m=512, k=512, n=512,
+                                     mode="exact", rank=0, n_planes=1)
+    assert plan.path == "xla" and plan.source == "tuned"
+
+
+def test_tuned_entry_revalidated_against_admission(cache_path, monkeypatch):
+    """A fused cache entry that no longer fits the CURRENT budget is
+    ignored (PC405 flags the producer; dispatch just won't schedule it)."""
+    import jax
+    budget = dispatch.vmem_budget_bytes()
+    autotune.put(autotune.TunedPlan("fused", 256, 512, 256), 256, 512, 256,
+                 "exact", 0, backend=jax.default_backend(),
+                 vmem_budget=budget, path=cache_path)
+    assert dispatch.choose_gemm_path(
+        "auto", m=256, k=512, n=256, mode="exact", rank=0,
+        n_planes=1).source == "tuned"
+    # shrink the live budget below the entry's working set: the entry's
+    # KEY no longer matches either, and even a key-matching entry would
+    # fail _fused_admissible — dispatch falls back
+    monkeypatch.setenv("REPRO_VMEM_BUDGET", "4096")
+    plan = dispatch.choose_gemm_path("auto", m=256, k=512, n=256,
+                                     mode="exact", rank=0, n_planes=1)
+    assert plan.source != "tuned"
+
+
+def test_record_winner_prefers_measured_min(cache_path):
+    us = {"fused": 5.0, "stacked": 4.0, "xla": 6.0}
+    plan = autotune.record_winner(256, 512, 256, "exact", 0, us,
+                                  backend="cpu", vmem_budget=BUDGET,
+                                  path=cache_path)
+    assert plan.path == "stacked"
+    hit = autotune.lookup(256, 512, 256, "exact", 0, backend="cpu",
+                          vmem_budget=BUDGET)
+    assert hit.path == "stacked"
+    assert hit.us == us
+
+
+def test_shape_bucket_separates_decode_sizes():
+    assert autotune.shape_bucket(1, 512, 256) != \
+        autotune.shape_bucket(32, 512, 256)
+    assert autotune.shape_bucket(250, 512, 256) == \
+        autotune.shape_bucket(256, 512, 256)

@@ -211,3 +211,74 @@ def test_padding_is_inert():
                                            spec))
     got = np.asarray(ops.approx_qgemm(jnp.asarray(a), jnp.asarray(b), spec))
     np.testing.assert_allclose(got, want, rtol=1e-6, atol=1.0)
+
+
+# ---------------------------------------------------------------------------
+# skinny-M decode kernel + plane-unroll schedule knob
+# ---------------------------------------------------------------------------
+
+SKINNY_SHAPES = [(1, 256, 256), (4, 200, 256), (8, 384, 130), (32, 512, 256)]
+
+
+@pytest.mark.parametrize("shape", SKINNY_SHAPES)
+@pytest.mark.parametrize("mult", ["exact", "trunc2x2"])
+def test_skinny_kernel_bitexact_int_paths(shape, mult):
+    """Decode-shaped GEMMs through the skinny-M kernel are bit-identical
+    to the LUT oracle on the pure-int paths (incl. odd-K tails)."""
+    m, k, n = shape
+    a, b = _rand_q((m, k)), _rand_q((k, n))
+    mobj = mm.get_multiplier(mult)
+    spec = G.from_multiplier(mobj)
+    oracle = np.asarray(ref.lut_matmul(jnp.asarray(a), jnp.asarray(b),
+                                       jnp.asarray(mobj.lut)))
+    got = np.asarray(ops.approx_qgemm(jnp.asarray(a), jnp.asarray(b), spec,
+                                      skinny=True))
+    np.testing.assert_array_equal(got, oracle.astype(np.float32))
+
+
+@pytest.mark.parametrize("shape", SKINNY_SHAPES)
+@pytest.mark.parametrize("rank", [1, 2, 8])
+def test_skinny_matches_fused_bitexact_lowrank(shape, rank):
+    """skinny == fused == stacked bit-for-bit at every rank: the same
+    integer planes and the same f32 flush combination, so the decode
+    layout is purely a schedule change."""
+    m, k, n = shape
+    a, b = _rand_q((m, k)), _rand_q((k, n))
+    _, spec = _lowrank_spec(rank=rank, seed=rank)
+    fused = np.asarray(ops.approx_qgemm(jnp.asarray(a), jnp.asarray(b),
+                                        spec))
+    skinny = np.asarray(ops.approx_qgemm(jnp.asarray(a), jnp.asarray(b),
+                                         spec, skinny=True))
+    stacked = np.asarray(ops.approx_qgemm(jnp.asarray(a), jnp.asarray(b),
+                                          spec, fused=False))
+    np.testing.assert_array_equal(skinny, fused)
+    np.testing.assert_array_equal(skinny, stacked)
+
+
+@pytest.mark.parametrize("unroll", [2, 3, 8])
+def test_plane_unroll_is_bit_identical(unroll):
+    """Plane-unroll groups correction planes into one batched int8 dot —
+    integer accumulation, so every unroll factor gives the same bits on
+    both the regular fused and the skinny kernels."""
+    m, k, n = 16, 200, 128  # odd K: the grouped path must keep the tail mask
+    a, b = _rand_q((m, k)), _rand_q((k, n))
+    _, spec = _lowrank_spec(rank=8, seed=9)
+    base = np.asarray(ops.approx_qgemm(jnp.asarray(a), jnp.asarray(b), spec))
+    got = np.asarray(ops.approx_qgemm(jnp.asarray(a), jnp.asarray(b), spec,
+                                      unroll=unroll))
+    np.testing.assert_array_equal(got, base)
+    sk_base = np.asarray(ops.approx_qgemm(jnp.asarray(a), jnp.asarray(b),
+                                          spec, skinny=True))
+    sk = np.asarray(ops.approx_qgemm(jnp.asarray(a), jnp.asarray(b), spec,
+                                     skinny=True, unroll=unroll))
+    np.testing.assert_array_equal(sk, sk_base)
+    np.testing.assert_array_equal(sk_base, base)
+
+
+def test_skinny_vmem_scales_with_true_m():
+    """The skinny working set must scale with the true row count — the
+    whole point of the decode kernel is never paying the 128-row pad."""
+    small = qk.skinny_vmem_bytes(1, 512, 256, 3)
+    big = qk.fused_vmem_bytes(128, 512, 256, 3)
+    assert small < big
+    assert qk.skinny_vmem_bytes(32, 512, 256, 3) > small
